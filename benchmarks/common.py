@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+@contextmanager
+def timed(name: str):
+    t0 = time.time()
+    box = {}
+    yield box
+    us = (time.time() - t0) * 1e6
+    emit(name, us, box.get("derived", ""))
+
+
+def header():
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,63 @@
+"""Fig. 10/11: online serving under Poisson arrivals — TTFT/TTST/TPOT vs
+agent arrival rate (APS); SLO: TTFT ≤ 4 s, TPOT ≤ 50 ms.
+
+Paper: DualPath sustains ~1.96× higher APS on average within SLO
+(1.67× DS 27B, 2.25× DS 660B)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
+from repro.sim.spec import ModelSimSpec
+from repro.sim.traces import generate_dataset
+
+from benchmarks.common import emit, timed
+
+SLO_TTFT = 4.0
+SLO_TPOT = 0.050
+
+
+def capacity(model, P, D, label, aps_grid, n_agents):
+    """Largest APS meeting the SLO, per mode."""
+    caps = {}
+    for mode in ("basic", "dualpath"):
+        best = 0.0
+        for aps in aps_grid:
+            trajs = generate_dataset(n_agents, 32768, seed=1)
+            rng = np.random.default_rng(0)
+            arr = list(np.cumsum(rng.exponential(1 / aps, size=len(trajs))))
+            cfg = SimConfig(node=HOPPER_NODE, model=model, P=P, D=D,
+                            mode=mode, online=True)
+            with timed(f"fig10/{label}/{mode}/aps{aps}") as box:
+                r = Sim(cfg, trajs).run(arrivals=arr).results()
+                ok = (r["ttft_p99"] <= SLO_TTFT and
+                      r["tpot_mean"] <= SLO_TPOT and
+                      r["finished_agents"] == len(trajs))
+                box["derived"] = (f"ttft_p99={r['ttft_p99']:.2f}s "
+                                  f"ttst={r['ttst_mean']:.2f}s "
+                                  f"tpot={r['tpot_mean'] * 1e3:.1f}ms "
+                                  f"{'OK' if ok else 'SLO-VIOLATION'}")
+            if ok:
+                best = aps
+            else:
+                break
+        caps[mode] = best
+    gain = caps["dualpath"] / max(caps["basic"], 1e-9)
+    emit(f"fig10/{label}/capacity", 0.0,
+         f"basic={caps['basic']}aps dualpath={caps['dualpath']}aps "
+         f"gain={gain:.2f}x (paper avg 1.96x)")
+
+
+def run(quick: bool = False):
+    n = 96 if quick else 256
+    capacity(DS_660B, 2, 4, "ds660b-2p4d",
+             (0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0), n)
+    ds27 = ModelSimSpec.from_config(get_config("ds27b"), kv_dtype_bytes=1,
+                                    param_dtype_bytes=1)
+    capacity(ds27, 1, 1, "ds27b-1p1d",
+             (0.25, 0.5, 1.0, 1.5, 2.0, 3.0), n)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Fig. 7: offline (RL-rollout) JCT vs #agents × max agent length,
+Basic / DualPath / Oracle.  Paper headline: DualPath up to 1.87× over
+Basic on DS 660B; DualPath ≈ Oracle at 2P4D."""
+from __future__ import annotations
+
+from repro.sim import DS_660B, HOPPER_NODE, QWEN25_32B, Sim, SimConfig
+from repro.sim.traces import generate_dataset
+
+from benchmarks.common import emit, timed
+
+MODES = ("basic", "dualpath", "oracle")
+
+
+def run_point(model, P, D, n_agents, max_len, label):
+    trajs = generate_dataset(n_agents, max_len, seed=0)
+    jct = {}
+    for mode in MODES:
+        cfg = SimConfig(node=HOPPER_NODE, model=model, P=P, D=D, mode=mode)
+        with timed(f"fig7/{label}/agents{n_agents}/mal{max_len//1024}k/"
+                   f"{mode}") as box:
+            r = Sim(cfg, trajs).run().results()
+            jct[mode] = r["jct_max"]
+            box["derived"] = (f"jct={r['jct_max']:.0f}s "
+                              f"ttft={r['ttft_mean']:.2f}s "
+                              f"tpot={r['tpot_mean'] * 1e3:.1f}ms")
+    emit(f"fig7/{label}/agents{n_agents}/mal{max_len//1024}k/speedup", 0.0,
+         f"dualpath_vs_basic={jct['basic'] / jct['dualpath']:.2f}x "
+         f"oracle_gap={jct['dualpath'] / jct['oracle']:.2f}x")
+    return jct
+
+
+def run(quick: bool = False):
+    agent_counts = (256,) if quick else (256, 1024)
+    for n in agent_counts:
+        for mal in (32768, 65536):
+            run_point(DS_660B, 2, 4, n, mal, "ds660b-2p4d")
+    # Qwen 32B 1P2D (dense GQA — bigger KV per token)
+    run_point(QWEN25_32B, 1, 2, 128 if quick else 256, 32768, "qwen32b-1p2d")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig. 8: impact of the prefill-decode ratio (DS 27B: 1P1D, 2P1D, 1P2D).
+
+Paper observations to reproduce:
+  * DualPath wins at every ratio (avg 1.64×, up to 2.46×),
+  * Basic 1P1D ≈ Basic 1P2D (same PE-side storage bandwidth),
+  * DualPath 1P1D ≈ Basic 2P1D (2 SNICs each),
+  * DualPath 2P1D ≈ DualPath 1P2D (3 SNICs each).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.sim import HOPPER_NODE, Sim, SimConfig
+from repro.sim.spec import ModelSimSpec
+from repro.sim.traces import generate_dataset
+
+from benchmarks.common import emit, timed
+
+DS27B = ModelSimSpec.from_config(get_config("ds27b"), kv_dtype_bytes=1,
+                                 param_dtype_bytes=1)
+
+
+def run(quick: bool = False):
+    n_agents = 128 if quick else 384
+    trajs = generate_dataset(n_agents, 32768, seed=0)
+    jct = {}
+    for P, D in ((1, 1), (2, 1), (1, 2)):
+        for mode in ("basic", "dualpath"):
+            cfg = SimConfig(node=HOPPER_NODE, model=DS27B, P=P, D=D,
+                            mode=mode)
+            with timed(f"fig8/ds27b/{P}P{D}D/{mode}") as box:
+                r = Sim(cfg, trajs).run().results()
+                jct[(P, D, mode)] = r["jct_max"]
+                box["derived"] = f"jct={r['jct_max']:.0f}s"
+    sp = [jct[(p, d, 'basic')] / jct[(p, d, 'dualpath')]
+          for p, d in ((1, 1), (2, 1), (1, 2))]
+    emit("fig8/summary", 0.0,
+         f"speedups={['%.2f' % s for s in sp]} avg={sum(sp)/3:.2f} "
+         f"(paper avg 1.64 up to 2.46); "
+         f"basic1P1D/basic1P2D={jct[(1,1,'basic')]/jct[(1,2,'basic')]:.2f} "
+         f"dp1P1D/basic2P1D={jct[(1,1,'dualpath')]/jct[(2,1,'basic')]:.2f} "
+         f"dp2P1D/dp1P2D={jct[(2,1,'dualpath')]/jct[(1,2,'dualpath')]:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Fig. 9: varying append / generation length scale (DS 660B, 64K).
+
+Paper: with longer appends, Basic approaches DualPath/Oracle (compute
+pressure dominates); DualPath keeps 1.82–1.99× at the paper's append
+scales; the same holds for generation-length scaling."""
+from __future__ import annotations
+
+from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
+from repro.sim.traces import generate_dataset
+
+from benchmarks.common import emit, timed
+
+
+def run(quick: bool = False):
+    n_agents = 128 if quick else 512
+    base = generate_dataset(n_agents, 65536, seed=0)
+    for kind in ("append", "gen"):
+        sp = []
+        for scale in (0.5, 1.0, 2.0, 4.0):
+            trajs = [t.scaled(append_scale=scale if kind == "append" else 1.0,
+                              gen_scale=scale if kind == "gen" else 1.0,
+                              max_len=65536) for t in base]
+            jct = {}
+            for mode in ("basic", "dualpath"):
+                cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=2, D=4,
+                                mode=mode)
+                with timed(f"fig9/{kind}x{scale}/{mode}") as box:
+                    jct[mode] = Sim(cfg, trajs).run().results()["jct_max"]
+                    box["derived"] = f"jct={jct[mode]:.0f}s"
+            sp.append(jct["basic"] / jct["dualpath"])
+        emit(f"fig9/{kind}/summary", 0.0,
+             f"speedup_by_scale={['%.2f' % s for s in sp]} "
+             f"(paper: 1.82-1.99 shrinking with {kind} scale)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""§Roofline: three-term roofline per (arch × shape) from the dry-run.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+HLO metrics are per-device (GSPMD-partitioned module, loop-aware — see
+repro.roofline.hlo), so chips=1 in the denominators here; hardware:
+TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Reads results/dryrun_all.json (produced by repro.launch.dryrun); emits
+the full baseline table plus dominant-term identification and the
+MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_all.json")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (dense) / 6·N_active·D (MoE) for
+    training; 2·N_active·D for prefill; 2·N_active·B for decode."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_act = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch          # decode: one token/seq
+
+
+def terms(rec: dict) -> dict:
+    n_dev = rec.get("n_devices", 256)
+    t_c = rec["flops"] / PEAK_FLOPS          # per-device already
+    t_m = rec["bytes_accessed"] / HBM_BW
+    t_x = rec["collective_bytes"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(rec["flops"] * n_dev, 1.0)
+    return dict(t_compute=t_c, t_memory=t_m, t_collective=t_x,
+                dominant=dom, model_flops=mf, useful_ratio=useful)
+
+
+def load(path=RESULTS):
+    with open(path) as f:
+        return json.load(f)
+
+
+def run(quick: bool = False, path=RESULTS):
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0,
+             f"run `python -m repro.launch.dryrun --all --mesh both --out "
+             f"{path}` first")
+        return
+    for rec in load(path):
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skipped":
+            emit(name, 0.0, f"SKIP: {rec['reason']}")
+            continue
+        if rec["status"] != "ok":
+            emit(name, 0.0, f"ERROR: {rec.get('error', '?')[:120]}")
+            continue
+        if rec["mesh"] != "single":
+            continue        # roofline table is single-pod (spec)
+        t = terms(rec)
+        emit(name, 0.0,
+             f"compute={t['t_compute'] * 1e3:.2f}ms "
+             f"memory={t['t_memory'] * 1e3:.2f}ms "
+             f"collective={t['t_collective'] * 1e3:.2f}ms "
+             f"dominant={t['dominant']} "
+             f"useful={t['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

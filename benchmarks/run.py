@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks agent
+counts (CI-sized); default sizes reproduce the paper's operating points
+(fig7 at 1024 agents reaches the ~1.87x headline).
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig7_offline, fig8_pd_ratio, fig9_append_gen,
+                            fig10_online, fig12_ablation, fig13_balance,
+                            kernel_bench, micro_submit, roofline,
+                            table1_cache_compute, table3_scale)
+    from benchmarks.common import header
+
+    suite = {
+        "table1": table1_cache_compute.run,
+        "micro_submit": micro_submit.run,
+        "kernels": kernel_bench.run,
+        "fig7": fig7_offline.run,
+        "fig8": fig8_pd_ratio.run,
+        "fig9": fig9_append_gen.run,
+        "fig10": fig10_online.run,
+        "fig12": fig12_ablation.run,
+        "fig13": fig13_balance.run,
+        "table3": table3_scale.run,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    header()
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        try:
+            try:
+                fn(quick=args.quick)
+            except TypeError:
+                fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0.0,ERROR:{e!r}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

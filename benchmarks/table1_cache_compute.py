@@ -1,0 +1,85 @@
+"""Table 1: cache-compute ratio (GB of KV to load per PFLOP of compute),
+append length 429, across context lengths 16k–64k.
+
+Paper targets:
+    Qwen2.5-32B (FP16)   117–267
+    GPT-OSS-120B          47–95
+    Qwen3-235B-A22B       39–60
+    DeepSeek-V3.2 660B    13–36
+    DeepSeek-V3 660B     4.8–5.8
+plus the ten assigned architectures (bf16 KV, TPU target) for context.
+"""
+from __future__ import annotations
+
+from repro.configs import ARCH_IDS, get_config
+from repro.sim.spec import ModelSimSpec
+
+from benchmarks.common import emit, timed
+
+# analytic descriptors of the paper's Table 1 models -----------------------
+TABLE1_MODELS = {
+    # Qwen2.5-32B, GQA kv=8 hd=128, 64L, FP16 KV
+    "qwen2.5-32b-fp16": ModelSimSpec(
+        name="qwen2.5-32b", n_layers=64,
+        kv_bytes_per_token=64 * 2 * 8 * 128 * 2,
+        active_param_bytes=65.6e9, active_params=32.8e9,
+        n_heads=40, qk_head_dim=128),
+    # GPT-OSS-120B: 36L, GQA kv=8 hd=64, a5.1b, fp8 KV, sliding-window half
+    "gpt-oss-120b": ModelSimSpec(
+        name="gpt-oss-120b", n_layers=36,
+        kv_bytes_per_token=36 * 2 * 8 * 64 * 1,
+        active_param_bytes=5.1e9, active_params=5.1e9,
+        n_heads=64, qk_head_dim=64),
+    # Qwen3-235B-A22B: 94L, GQA kv=4 hd=128, fp8 KV
+    "qwen3-235b-a22b": ModelSimSpec(
+        name="qwen3-235b", n_layers=94,
+        kv_bytes_per_token=94 * 2 * 4 * 128 * 1,
+        active_param_bytes=22e9, active_params=22e9,
+        n_heads=64, qk_head_dim=128),
+    # DeepSeek-V3.2 (DSA topk 2048 + lightning indexer ~0.6 MFLOP/ctx
+    # token), MLA absorbed scores (rank 512 + rope 64 = 576 dims), fp8 KV
+    "ds-v3.2-660b": ModelSimSpec(
+        name="ds-v3.2", n_layers=61,
+        kv_bytes_per_token=61 * (512 + 64) * 1,
+        active_param_bytes=37e9, active_params=37e9,
+        n_heads=128, qk_head_dim=576, sparse_topk=2048,
+        linear_ctx_flops=0.6e6),
+    # DeepSeek-V3 (dense MLA attention, absorbed scores)
+    "ds-v3-660b": ModelSimSpec(
+        name="ds-v3", n_layers=61,
+        kv_bytes_per_token=61 * (512 + 64) * 1,
+        active_param_bytes=37e9, active_params=37e9,
+        n_heads=128, qk_head_dim=576),
+}
+
+PAPER_RANGES = {
+    "qwen2.5-32b-fp16": (117, 267),
+    "gpt-oss-120b": (47, 95),
+    "qwen3-235b-a22b": (39, 60),
+    "ds-v3.2-660b": (13, 36),
+    "ds-v3-660b": (4.8, 5.8),
+}
+
+APPEND = 429
+
+
+def run():
+    for name, spec in TABLE1_MODELS.items():
+        with timed(f"table1/{name}") as box:
+            r16 = spec.cache_compute_ratio(16 * 1024, APPEND)
+            r64 = spec.cache_compute_ratio(64 * 1024, APPEND)
+            lo, hi = PAPER_RANGES[name]
+            box["derived"] = (f"GB/PFLOP[16k-64k]={r16:.1f}-{r64:.1f} "
+                              f"(paper {lo}-{hi})")
+    # assigned archs (bf16 KV on TPU target)
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        spec = ModelSimSpec.from_config(cfg)
+        with timed(f"table1/assigned/{arch}") as box:
+            r16 = spec.cache_compute_ratio(16 * 1024, APPEND)
+            r64 = spec.cache_compute_ratio(64 * 1024, APPEND)
+            box["derived"] = f"GB/PFLOP[16k-64k]={r16:.1f}-{r64:.1f}"
+
+
+if __name__ == "__main__":
+    run()

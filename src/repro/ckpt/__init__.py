@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (FaultTolerantRunner, latest_step,
+                                   restore_checkpoint, save_checkpoint)

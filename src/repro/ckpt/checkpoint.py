@@ -1,0 +1,157 @@
+"""Checkpoint save/restore + fault-tolerant training runner.
+
+Layout: one .npz per checkpoint holding every leaf (tree paths as keys)
++ a meta dict (step, config name, data-pipeline state).  Restore can
+re-shard onto a different mesh (elastic restart: pods are DP replicas,
+so losing a pod means restoring the same params with batch re-split —
+the dry-run proves both meshes compile; see DESIGN.md §4).
+
+``FaultTolerantRunner`` wraps a train loop with periodic checkpointing
+and crash/resume semantics, property-tested to be bitwise resumable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import re
+import tempfile
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "//"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    """npz cannot store ml_dtypes (bfloat16 etc.): store a same-width
+    integer view and record the true dtype alongside."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        try:
+            np.dtype(arr.dtype.name)
+            native = arr.dtype.kind in "biufc"
+        except TypeError:
+            native = False
+        if not native:
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(path: str, step: int, params, opt_state,
+                    extra: Optional[dict] = None):
+    """Atomic save (write temp + rename) — a crash mid-save never
+    corrupts the latest checkpoint."""
+    os.makedirs(path, exist_ok=True)
+    flat = {"params" + SEP + k: v for k, v in _flatten(params).items()}
+    flat.update({"opt" + SEP + k: v for k, v in _flatten(opt_state).items()})
+    meta = dict(step=step, extra=extra or {})
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(
+            pickle.dumps(meta), dtype=np.uint8), **flat)
+    os.replace(tmp, fname)
+    return fname
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, params_like, opt_like,
+                       step: Optional[int] = None,
+                       shardings: Optional[Tuple] = None):
+    """Restore into the structure of (params_like, opt_like); optionally
+    re-shard with (param_shardings, opt_shardings) — elastic restart."""
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        return None
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    meta = pickle.loads(data["__meta__"].tobytes())
+
+    def rebuild(tree_like, prefix, shard_tree=None):
+        leaves_p, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+        shards = (jax.tree_util.tree_leaves(shard_tree)
+                  if shard_tree is not None else [None] * len(leaves_p))
+        out = []
+        for (path_, leaf), sh in zip(leaves_p, shards):
+            key = prefix + SEP + SEP.join(_path_str(p) for p in path_)
+            raw = data[key]
+            dt = np.dtype(leaf.dtype)
+            if raw.dtype.kind == "u" and dt.kind not in "biu":
+                raw = raw.view(dt)          # integer view of an ml_dtype
+            arr = jnp.asarray(raw, dtype=leaf.dtype)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef.treedef if hasattr(
+            treedef, "treedef") else treedef, out)
+
+    p_sh, o_sh = shardings if shardings else (None, None)
+    params = rebuild(params_like, "params", p_sh)
+    opt = rebuild(opt_like, "opt", o_sh)
+    return dict(step=meta["step"], params=params, opt_state=opt,
+                extra=meta["extra"])
+
+
+class FaultTolerantRunner:
+    """Train loop with periodic checkpointing and resume.
+
+    ``run(n_steps)`` executes from wherever the latest checkpoint left
+    off; crash injection (``crash_at``) raises after that step to let
+    tests verify recovery reproduces the uninterrupted run bitwise.
+    """
+
+    def __init__(self, ckpt_dir: str, train_step: Callable, params,
+                 opt_state, pipeline, ckpt_every: int = 10):
+        self.ckpt_dir = ckpt_dir
+        self.train_step = train_step
+        self.params = params
+        self.opt_state = opt_state
+        self.pipeline = pipeline
+        self.ckpt_every = ckpt_every
+        self.step = 0
+        self.losses = []
+
+    def try_resume(self) -> bool:
+        r = restore_checkpoint(self.ckpt_dir, self.params, self.opt_state)
+        if r is None:
+            return False
+        self.params, self.opt_state = r["params"], r["opt_state"]
+        self.step = r["step"]
+        if "pipeline" in r["extra"]:
+            self.pipeline.load_state_dict(r["extra"]["pipeline"])
+        return True
+
+    def run(self, n_steps: int, crash_at: Optional[int] = None):
+        while self.step < n_steps:
+            batch = jnp.asarray(self.pipeline.next_batch())
+            self.params, self.opt_state, loss = self.train_step(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            self.losses.append(float(loss))
+            if self.step % self.ckpt_every == 0 or self.step == n_steps:
+                save_checkpoint(self.ckpt_dir, self.step, self.params,
+                                self.opt_state,
+                                extra=dict(pipeline=self.pipeline.state_dict()))
+            if crash_at is not None and self.step == crash_at:
+                raise RuntimeError(f"injected crash at step {self.step}")
+        return self.losses

@@ -1,0 +1,22 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    EXTRA_ARCH_IDS,
+    SHAPES,
+    SHAPE_ORDER,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeSpec,
+    all_configs,
+    cells_for,
+    get_config,
+    register,
+    shape_supported,
+)
+
+__all__ = [
+    "ARCH_IDS", "EXTRA_ARCH_IDS", "SHAPES", "SHAPE_ORDER",
+    "MLAConfig", "ModelConfig", "MoEConfig", "SSMConfig", "ShapeSpec",
+    "all_configs", "cells_for", "get_config", "register", "shape_supported",
+]

@@ -1,0 +1,30 @@
+"""hubert-xlarge — encoder-only audio transformer (w2v2 arch).
+
+[arXiv:2106.07447; unverified]
+48L d_model=1280 16H (GQA kv=16) d_ff=5120 vocab=504 (cluster units).
+Encoder-only: bidirectional attention, no decode step (decode shapes
+skipped per assignment).  The CNN waveform frontend is a stub —
+``input_specs()`` provides precomputed frame embeddings.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hubert-xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    vocab_size=504,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    ffn_activation="gelu",
+    causal=False,
+    frontend_embed_dim=1280,     # precomputed conv-frame embeddings
+    rope_theta=10_000.0,
+    sharding_profile="tp",
+    microbatches_train_4k=4,
+    supports_decode=False,
+    sub_quadratic=False,
+    source="arXiv:2106.07447; unverified",
+))

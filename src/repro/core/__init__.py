@@ -1,0 +1,34 @@
+# The paper's primary contribution, as composable pieces:
+#   blocks    — Layer/Full block layouts (§A.5)
+#   analysis  — bottleneck-free traffic analysis (§4.2)
+#   loading   — dual-path loading plans (§4.1, Fig. 4)
+#   traffic   — CNIC-centric traffic manager / VL arbiter (§5)
+#   scheduler — inter-engine scheduling (§6.1, Alg. 1)
+#   intra     — compute-quota batch packing (§6.2)
+from repro.core.analysis import (
+    ClusterSpec,
+    bottleneck_free_range,
+    is_bottleneck_free,
+    link_utilisation,
+    max_aggregate_load_bw,
+    pair_traffic,
+    safe_pd_splits,
+)
+from repro.core.blocks import BlockLayout, layout_for
+from repro.core.intra import AttnTimeModel, BatchItem, PrefillWork, QuotaPacker
+from repro.core.loading import PLANS, Leg, basic_plan, de_read_plan, pe_read_plan
+from repro.core.scheduler import (
+    Assignment,
+    EngineState,
+    Request,
+    RoundRobinScheduler,
+    Scheduler,
+)
+from repro.core.traffic import (
+    DEFAULT_ARBITER,
+    SubmitCostModel,
+    TrafficClass,
+    TrafficManager,
+    VLArbiterConfig,
+    allocate_bandwidth,
+)

@@ -1,0 +1,122 @@
+"""KV-Cache block layouts (paper §A.5).
+
+* ``LayerBlock`` — byte tensor ``[1, tokens, bytes]``: one layer's KV for
+  ``block_tokens`` tokens.  Used by all layerwise streaming paths
+  (storage→HBM per layer, PE→DE per layer).
+* ``FullBlock``  — ``[layers, tokens, bytes]``: all layers for the same
+  tokens.  The only unit persistent storage sees; trie nodes map 1:1 to
+  FullBlocks.
+
+The payoff of this layout (and the reason we reproduce it bit-exactly):
+``n`` LayerBlocks concatenate into a FullBlock **without any layout
+conversion** — ``jnp.concatenate`` / ``np.concatenate`` on axis 0 — so
+the layerwise prefill stream can be persisted, and a loaded FullBlock
+can be sliced per layer, with zero reshuffling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+DEFAULT_BLOCK_TOKENS = 64
+
+
+@dataclass(frozen=True)
+class BlockLayout:
+    """Geometry of KV blocks for one model."""
+
+    n_layers: int                 # layers that carry loadable per-token state
+    block_tokens: int             # tokens per block (paper: e.g. 64)
+    bytes_per_token_layer: int    # KV bytes per token per layer
+
+    @property
+    def layer_block_bytes(self) -> int:
+        return self.block_tokens * self.bytes_per_token_layer
+
+    @property
+    def full_block_bytes(self) -> int:
+        return self.n_layers * self.layer_block_bytes
+
+    def layer_block_shape(self):
+        return (1, self.block_tokens, self.bytes_per_token_layer)
+
+    def full_block_shape(self):
+        return (self.n_layers, self.block_tokens, self.bytes_per_token_layer)
+
+    def n_blocks(self, n_tokens: int) -> int:
+        """Whole blocks covering n_tokens (partial tails are not persisted —
+        the paper persists only once a full block accumulates)."""
+        return n_tokens // self.block_tokens
+
+    def loadable_bytes(self, n_tokens: int) -> int:
+        return self.n_blocks(n_tokens) * self.full_block_bytes
+
+
+def layout_for(cfg: ModelConfig, block_tokens: int = DEFAULT_BLOCK_TOKENS,
+               kv_dtype_bytes: int = 2) -> BlockLayout:
+    """Derive the block geometry from a model config.
+
+    Per-layer per-token bytes follow the arch's attention variant; for
+    attention-free layers (SSM) there is no per-token state and the
+    'loadable' KV is only the constant-size recurrent state, handled
+    separately (see kv_bytes_per_token / ssm_state_bytes in configs).
+    """
+    per_token = cfg.kv_bytes_per_token(kv_dtype_bytes)
+    attn_layers = sum(1 for k in cfg.layer_kinds() if k != "ssm")
+    if cfg.hybrid_period:
+        attn_layers += cfg.n_layers // cfg.hybrid_period
+    if attn_layers == 0:
+        # SSM-only: a single pseudo-layer row so the machinery still works
+        # for the O(1) state block.
+        return BlockLayout(1, block_tokens, 0)
+    return BlockLayout(attn_layers, block_tokens,
+                       per_token // attn_layers)
+
+
+# ---------------------------------------------------------------------------
+# Host-side block tensors (numpy; engines wrap jnp views)
+# ---------------------------------------------------------------------------
+
+
+def new_layer_block(layout: BlockLayout) -> np.ndarray:
+    return np.zeros(layout.layer_block_shape(), np.uint8)
+
+
+def new_full_block(layout: BlockLayout) -> np.ndarray:
+    return np.zeros(layout.full_block_shape(), np.uint8)
+
+
+def full_from_layer_blocks(layer_blocks: Sequence[np.ndarray]) -> np.ndarray:
+    """Concatenate n LayerBlocks -> FullBlock.  No layout conversion."""
+    for lb in layer_blocks:
+        assert lb.ndim == 3 and lb.shape[0] == 1, lb.shape
+    return np.concatenate(list(layer_blocks), axis=0)
+
+
+def layer_blocks_from_full(full: np.ndarray) -> List[np.ndarray]:
+    """Split a FullBlock into LayerBlock views (zero-copy slices)."""
+    return [full[i:i + 1] for i in range(full.shape[0])]
+
+
+def pack_kv_to_blocks(kv_bytes: np.ndarray, layout: BlockLayout) -> List[np.ndarray]:
+    """(layers, tokens, bytes_per_token_layer) -> list of FullBlocks
+    covering the whole-token-blocks prefix.  Tail tokens that do not fill
+    a block are dropped (persisted on a later step, as in the paper)."""
+    L, T, Bp = kv_bytes.shape
+    assert L == layout.n_layers and Bp == layout.bytes_per_token_layer
+    n = layout.n_blocks(T)
+    return [np.ascontiguousarray(
+        kv_bytes[:, i * layout.block_tokens:(i + 1) * layout.block_tokens])
+        for i in range(n)]
+
+
+def unpack_blocks_to_kv(blocks: Sequence[np.ndarray],
+                        layout: BlockLayout) -> np.ndarray:
+    if not blocks:
+        return np.zeros((layout.n_layers, 0, layout.bytes_per_token_layer),
+                        np.uint8)
+    return np.concatenate(list(blocks), axis=1)

@@ -1,0 +1,143 @@
+"""Intra-engine scheduling (paper §6.2): compute-quota batch packing.
+
+Only PEs run this.  Under DP attention every GPU serves different
+requests but all synchronise before the FFN stage; imbalanced attention
+time ⇒ bubbles.  The packer bounds each forward batch's *predicted
+attention time* by a quota (300 ms in the paper), chunking the
+straddling request via binary search on its bsz'.
+
+Each request in a forward batch is (cached, bsz): ``cached`` tokens have
+KV available (storage hits or previous chunks), ``bsz`` tokens need
+compute this batch.  Theoretical attention FLOPs for a causal append:
+
+    F(cached, bsz) = 4 · n_heads · head_dim · bsz · (cached + (bsz+1)/2)
+
+(QK^T + PV, two matmuls → factor 4=2·2) summed per layer.  Wall time is
+fitted affine in FLOPs (profiled in advance, as in PrefillOnly/Sarathi).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class AttnTimeModel:
+    """t(flops) = base_overhead + flops / effective_flops_per_s."""
+
+    effective_flops: float          # attention-kernel FLOP/s actually achieved
+    base_overhead_s: float = 30e-6  # per-layer launch overhead
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, peak_flops: float = 197e12,
+                    attn_efficiency: float = 0.35):
+        """Napkin default: attention kernels reach ~35% of peak on TPU
+        (bandwidth-bound at small bsz).  Engines re-fit from measurements
+        via ``fit``."""
+        return cls(effective_flops=peak_flops * attn_efficiency)
+
+    @classmethod
+    def fit(cls, samples: Sequence[Tuple[float, float]]):
+        """Least-squares fit of (flops, seconds) measurement pairs."""
+        n = len(samples)
+        sx = sum(f for f, _ in samples)
+        sy = sum(t for _, t in samples)
+        sxx = sum(f * f for f, _ in samples)
+        sxy = sum(f * t for f, t in samples)
+        denom = n * sxx - sx * sx
+        if denom == 0:
+            return cls(effective_flops=1e12)
+        slope = (n * sxy - sx * sy) / denom
+        intercept = (sy - slope * sx) / n
+        slope = max(slope, 1e-18)
+        return cls(effective_flops=1.0 / slope,
+                   base_overhead_s=max(intercept, 0.0))
+
+    def seconds(self, flops: float) -> float:
+        return self.base_overhead_s + flops / self.effective_flops
+
+
+def attn_flops_per_layer(cfg: ModelConfig, cached: int, bsz: int) -> float:
+    """Theoretical attention FLOPs for one layer of a (cached, bsz) item."""
+    if cfg.attn_variant == "none":
+        # SSD cost is linear in bsz; treat state-chunk work as d_state-wide
+        d_inner = cfg.ssm.expand * cfg.d_model
+        return 6.0 * bsz * d_inner * cfg.ssm.d_state
+    qk_dim = cfg.head_dim if cfg.attn_variant != "mla" else (
+        cfg.mla.nope_head_dim + cfg.mla.rope_head_dim)
+    return 4.0 * cfg.n_heads * qk_dim * bsz * (cached + (bsz + 1) / 2.0)
+
+
+def attn_flops(cfg: ModelConfig, items: Sequence[Tuple[int, int]]) -> float:
+    n_attn = sum(1 for k in cfg.layer_kinds() if k != "ssm")
+    if cfg.hybrid_period:
+        n_attn += cfg.n_layers // cfg.hybrid_period
+    n_attn = max(n_attn, cfg.n_layers if cfg.attn_variant == "none" else n_attn)
+    per_layer = sum(attn_flops_per_layer(cfg, c, b) for c, b in items)
+    return per_layer * max(n_attn, 1)
+
+
+@dataclass
+class PrefillWork:
+    """Mutable prefill progress of one request on a PE."""
+
+    rid: int
+    cached: int                     # tokens whose KV exists already
+    remaining: int                  # append tokens still to compute
+
+    def advance(self, bsz: int):
+        self.cached += bsz
+        self.remaining -= bsz
+
+
+@dataclass
+class BatchItem:
+    rid: int
+    cached: int
+    bsz: int
+    chunked: bool = False           # True if this is a partial (chunked) fill
+
+
+class QuotaPacker:
+    """FIFO packing under a compute quota with binary-search chunking."""
+
+    def __init__(self, cfg: ModelConfig, time_model: AttnTimeModel,
+                 quota_s: float = 0.300, min_chunk: int = 16):
+        self.cfg = cfg
+        self.time_model = time_model
+        self.quota_s = quota_s
+        self.min_chunk = min_chunk
+
+    def predict_batch_seconds(self, items: Sequence[Tuple[int, int]]) -> float:
+        return self.time_model.seconds(attn_flops(self.cfg, items))
+
+    def pack(self, fifo: List[PrefillWork]) -> List[BatchItem]:
+        """Select the next forward batch; mutates ``fifo`` (consumed work
+        is advanced, fully-prefilled requests are removed)."""
+        batch: List[BatchItem] = []
+        items: List[Tuple[int, int]] = []
+        while fifo:
+            w = fifo[0]
+            cand = items + [(w.cached, w.remaining)]
+            if self.predict_batch_seconds(cand) <= self.quota_s:
+                items.append((w.cached, w.remaining))
+                batch.append(BatchItem(w.rid, w.cached, w.remaining))
+                w.advance(w.remaining)
+                fifo.pop(0)
+                continue
+            # straddling request: binary search the largest bsz' that fits
+            lo, hi = 0, w.remaining
+            while lo < hi:
+                mid = (lo + hi + 1) // 2
+                if self.predict_batch_seconds(
+                        items + [(w.cached, mid)]) <= self.quota_s:
+                    lo = mid
+                else:
+                    hi = mid - 1
+            if lo >= self.min_chunk:
+                batch.append(BatchItem(w.rid, w.cached, lo, chunked=True))
+                w.advance(lo)
+            break
+        return batch

@@ -1,0 +1,119 @@
+"""Dual-path KV-Cache loading plans (paper §4.1, Figure 4).
+
+A *plan* is the ordered list of transfer legs a request's KV-Cache makes
+through the machine, each leg annotated with the resources it occupies
+(storage NIC, compute-NIC PCIe read/write side, DRAM, inter-node network)
+and its byte count.  The discrete-event simulator charges each leg to
+its resources; the engine runtime executes the same legs as real buffer
+movements.  Keeping the byte accounting in one place guarantees the
+simulator, the engines, and the §4.2 closed-form analysis agree — this
+is property-tested (tests/test_loading.py asserts the per-resource sums
+match Eq. 1–8's coefficients).
+
+Resource keys are *symbolic* (pe_/de_ prefixed); the simulator binds
+them to concrete node resources:
+
+    snic       storage NIC (half-duplex FIFO, shared per node)
+    cnic_rd    compute-NIC PCIe read side (NIC pulls from DRAM/HBM)
+    cnic_wr    compute-NIC PCIe write side (NIC pushes to DRAM/HBM)
+    dram       host DRAM (half-duplex: reads+writes share)
+    net        inter-node compute network (PE<->DE)
+
+Layerwise legs (``layerwise=True``) stream LayerBlocks and overlap with
+prefill compute; the sim models them as running concurrently with the
+forward pass, matching "transfers overlap with computation".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+from repro.core.traffic import TrafficClass
+
+
+@dataclass(frozen=True)
+class Leg:
+    name: str
+    nbytes: int
+    resources: tuple                 # symbolic resource keys
+    layerwise: bool = False          # streams per layer, overlaps compute
+    phase: str = "prefill"           # 'load' | 'prefill' | 'decode_start' | 'decode'
+    tclass: TrafficClass = TrafficClass.KV_TRANSFER
+
+
+def pe_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int) -> List[Leg]:
+    """Figure 4a: storage→PE buffer→PE HBM→DE buffer→DE HBM."""
+    full = hit_bytes + miss_bytes
+    return [
+        Leg("storage_to_pe_buf", hit_bytes,
+            ("pe_snic", "pe_dram"), phase="load"),
+        Leg("pe_buf_to_pe_hbm", hit_bytes,
+            ("pe_cnic_rd", "pe_cnic_wr", "pe_dram"), layerwise=True),
+        Leg("pe_hbm_to_de_buf", full,
+            ("pe_cnic_rd", "net", "de_cnic_wr", "de_dram"), layerwise=True),
+        Leg("de_buf_to_de_hbm", full,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram"), phase="decode_start"),
+        Leg("persist_new_kv", miss_bytes + gen_bytes,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram", "de_snic"),
+            phase="decode"),
+    ]
+
+
+def de_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int) -> List[Leg]:
+    """Figure 4b: storage→DE buffer→(stream)→PE HBM; miss KV merged back."""
+    full = hit_bytes + miss_bytes
+    return [
+        Leg("storage_to_de_buf", hit_bytes,
+            ("de_snic", "de_dram"), phase="load"),
+        Leg("de_buf_to_pe_hbm", hit_bytes,
+            ("de_cnic_rd", "de_dram", "net", "pe_cnic_wr"), layerwise=True),
+        Leg("miss_kv_to_de_buf", miss_bytes,
+            ("pe_cnic_rd", "net", "de_cnic_wr", "de_dram"), layerwise=True),
+        Leg("de_buf_to_de_hbm", full,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram"), phase="decode_start"),
+        Leg("persist_new_kv", miss_bytes + gen_bytes,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram", "de_snic"),
+            phase="decode"),
+    ]
+
+
+def basic_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int) -> List[Leg]:
+    """The Basic baseline: PE-only storage reads, no DE buffer staging —
+    KV goes storage→PE DRAM→PE HBM, then PE→DE over the compute network
+    directly into DE HBM (classic PD disaggregation)."""
+    full = hit_bytes + miss_bytes
+    return [
+        Leg("storage_to_pe_buf", hit_bytes,
+            ("pe_snic", "pe_dram"), phase="load"),
+        Leg("pe_buf_to_pe_hbm", hit_bytes,
+            ("pe_cnic_rd", "pe_cnic_wr", "pe_dram"), layerwise=True),
+        Leg("pe_hbm_to_de_hbm", full,
+            ("pe_cnic_rd", "net", "de_cnic_wr"), layerwise=True),
+        Leg("persist_new_kv", miss_bytes + gen_bytes,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram", "de_snic"),
+            phase="decode"),
+    ]
+
+
+def oracle_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int) -> List[Leg]:
+    """Oracle baseline: all disk reads, D2H/H2D and inter-PD transfers
+    bypassed (zero I/O overhead upper bound)."""
+    return []
+
+
+PLANS = {
+    "pe": pe_read_plan,
+    "de": de_read_plan,
+    "basic": basic_plan,
+    "oracle": oracle_plan,
+}
+
+
+def resource_bytes(plan: List[Leg]) -> dict:
+    """Aggregate bytes per symbolic resource — the quantity the §4.2
+    analysis constrains.  Used by tests to pin the plan against Eq. 1–8."""
+    out: dict = {}
+    for leg in plan:
+        for r in leg.resources:
+            out[r] = out.get(r, 0) + leg.nbytes
+    return out

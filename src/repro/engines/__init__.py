@@ -1,0 +1,1 @@
+from repro.engines.runtime import DecodeEngine, EngineRequest, PrefillEngine

@@ -1,0 +1,149 @@
+"""KV state ↔ FullBlock byte serialisation + slot utilities.
+
+The engines keep decode state as padded jnp buffers (layer-leading, for
+lax.scan); persistent storage holds FullBlocks ``[layers, tokens, bytes]``
+(paper §A.5).  This module converts between them, per attention family:
+
+* gqa (dense/vlm/moe): row = k ‖ v            (2·hkv·dh·dtype bytes/token)
+* mla:                 row = c_kv ‖ k_rope    ((r+rd)·dtype bytes/token)
+
+SSM/hybrid archs have no per-token KV; their recurrent state is carried
+as an opaque *state blob* snapshot (see engines/runtime.py) — the
+transfer paths are identical, only the payload differs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import init_decode_state
+
+
+def batch_axes_of_state(cfg: ModelConfig):
+    """Tree matching the decode state with each leaf's batch-axis index
+    (stacking puts layers in front, so the axis varies per leaf)."""
+    s3 = init_decode_state(cfg, 3, 8, abstract=True)
+    s4 = init_decode_state(cfg, 4, 8, abstract=True)
+
+    def find(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise AssertionError((a.shape, b.shape))
+
+    return jax.tree.map(find, s3, s4)
+
+
+def slot_get(state, axes, slot: int):
+    """Extract one sequence's state (batch size 1 view)."""
+    return jax.tree.map(
+        lambda a, ax: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax),
+        state, axes)
+
+
+def slot_set(state, axes, slot: int, sub):
+    return jax.tree.map(
+        lambda a, ax, s: jax.lax.dynamic_update_slice_in_dim(a, s, slot, ax),
+        state, axes, sub)
+
+
+# ---------------------------------------------------------------------------
+# attention-layer enumeration (canonical layer order for serialisation)
+# ---------------------------------------------------------------------------
+
+
+def _kv_rows(cfg: ModelConfig) -> List[Tuple[str, tuple]]:
+    """(state_key, stack_index) per attention layer, in layer order."""
+    fam = cfg.family
+    rows: List[Tuple[str, tuple]] = []
+    if fam in ("dense", "vlm"):
+        for l in range(cfg.n_layers):
+            rows.append(("kv", (l,)))
+    elif fam == "moe":
+        m = cfg.moe
+        for l in range(m.first_k_dense):
+            rows.append(("dense", (l,)))
+        n_super = (cfg.n_layers - m.first_k_dense) // m.period
+        for i in range(n_super):
+            if m.period > 1:
+                for j in range(m.period - 1):
+                    rows.append(("pre", (i, j)))
+            rows.append(("moe", (i,)))
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.hybrid_period
+        for i in range(n_super):
+            rows.append(("shared", (i,)))
+    else:
+        raise ValueError(fam)
+    return rows
+
+
+def kv_row_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    if cfg.attn_variant == "mla":
+        return (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * dtype_bytes
+    return 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.hybrid_period
+    return cfg.n_layers
+
+
+def _to_bytes(a) -> np.ndarray:
+    return np.asarray(a).reshape(a.shape[0], -1).view(np.uint8)
+
+
+def serialize_kv(cfg: ModelConfig, state, slot: int, t0: int,
+                 t1: int) -> np.ndarray:
+    """-> (n_attn_layers, t1-t0, row_bytes) uint8."""
+    out = []
+    for key, idx in _kv_rows(cfg):
+        comp = state[key]
+        if cfg.attn_variant == "mla":
+            c = np.asarray(comp["c"][idx + (slot, slice(t0, t1))])
+            kr = np.asarray(comp["krope"][idx + (slot, slice(t0, t1))])
+            row = np.concatenate([_to_bytes(c), _to_bytes(kr)], axis=-1)
+        else:
+            k = np.asarray(comp["k"][idx + (slot, slice(t0, t1))])
+            v = np.asarray(comp["v"][idx + (slot, slice(t0, t1))])
+            row = np.concatenate([_to_bytes(k), _to_bytes(v)], axis=-1)
+        out.append(row[None])
+    return np.concatenate(out, axis=0)
+
+
+def deserialize_kv(cfg: ModelConfig, state, slot: int, t0: int,
+                   kv_bytes: np.ndarray):
+    """Write (L, T, row_bytes) uint8 back into the padded state buffers."""
+    rows = _kv_rows(cfg)
+    L, T, _ = kv_bytes.shape
+    assert L == len(rows), (L, len(rows))
+    dt = jnp.dtype(cfg.kv_cache_dtype)
+    new_state = dict(state)
+    for li, (key, idx) in enumerate(rows):
+        row = kv_bytes[li]                        # (T, row_bytes)
+        if cfg.attn_variant == "mla":
+            r = cfg.mla.kv_lora_rank
+            rd = cfg.mla.rope_head_dim
+            c = row[:, :r * dt.itemsize].copy().view(dt).reshape(T, r)
+            kr = row[:, r * dt.itemsize:].copy().view(dt).reshape(T, rd)
+            upd = {"c": jnp.asarray(c), "krope": jnp.asarray(kr)}
+        else:
+            half = cfg.n_kv_heads * cfg.head_dim * dt.itemsize
+            k = row[:, :half].copy().view(dt).reshape(
+                T, cfg.n_kv_heads, cfg.head_dim)
+            v = row[:, half:].copy().view(dt).reshape(
+                T, cfg.n_kv_heads, cfg.head_dim)
+            upd = {"k": jnp.asarray(k), "v": jnp.asarray(v)}
+        comp = dict(new_state[key])
+        for ckey, val in upd.items():
+            arr = comp[ckey]
+            comp[ckey] = arr.at[
+                idx + (slot, slice(t0, t0 + val.shape[0]))].set(
+                val.astype(arr.dtype))
+        new_state[key] = comp
+    return new_state

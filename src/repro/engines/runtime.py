@@ -1,0 +1,222 @@
+"""Inference engines: layerwise-prefill PE and paged-decode DE.
+
+Single-process, CPU-runnable versions of the paper's engines that move
+*real* KV bytes through the dual-path legs:
+
+* ``PrefillEngine`` — quota-packed chunked prefill (core/intra.py) via
+  ``model.append_step`` against a per-request padded state; hit-KV
+  arrives as FullBlocks (deserialised into the state before compute);
+  the prompt state then transfers to the DE.
+* ``DecodeEngine``  — slot-batched continuous decode via
+  ``model.decode_step``; persists newly-filled FullBlocks to storage and
+  inserts them into the trie (paper: persist per 64-token block).
+
+Transfers ride each engine's TrafficManager with TrafficClass.KV_TRANSFER
+so the CNIC-centric ordering/batching logic (§5) is exercised for real.
+SSM/hybrid archs carry an opaque state-blob instead of per-token KV
+(constant-size recurrent state; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.blocks import BlockLayout
+from repro.core.intra import AttnTimeModel, BatchItem, PrefillWork, QuotaPacker
+from repro.core.scheduler import Request
+from repro.core.traffic import TrafficClass, TrafficManager
+from repro.engines import kvio
+from repro.kvcache.store import MemoryKVStore, StateBlobStore
+from repro.kvcache.trie import BlockTrie
+from repro.models import decode_step, init_decode_state
+from repro.models.model import append_step
+
+PAGED_FAMILIES = ("dense", "vlm", "moe")
+
+
+def uses_state_blob(cfg: ModelConfig) -> bool:
+    return cfg.family in ("ssm", "hybrid")
+
+
+@dataclass
+class EngineRequest:
+    """A request with its token payload, as the engines see it."""
+
+    req: Request
+    context_tokens: List[int]        # full previous context (hit source)
+    append_tokens: List[int]         # new tokens to prefill
+    hit_refs: List[int] = field(default_factory=list)
+    state: object = None             # per-request (b=1) model state
+    length: int = 0                  # tokens materialised in state
+    generated: List[int] = field(default_factory=list)
+    first_token: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.context_tokens) + len(self.append_tokens)
+
+
+class PrefillEngine:
+    def __init__(self, eid, cfg: ModelConfig, params, store: MemoryKVStore,
+                 layout: BlockLayout, max_seq: int,
+                 quota_s: float = 0.300):
+        self.eid = eid
+        self.cfg = cfg
+        self.params = params
+        self.store = store
+        self.layout = layout
+        self.max_seq = max_seq
+        self.tm = TrafficManager()
+        self.packer = QuotaPacker(cfg, AttnTimeModel.from_config(cfg),
+                                  quota_s=quota_s)
+        self.fifo: List[Tuple[PrefillWork, EngineRequest]] = []
+        self.prefill_tokens = 0
+
+    # -- loading ---------------------------------------------------------
+    def install_hit_kv(self, er: EngineRequest, payload):
+        """payload: list of FullBlocks (paged archs) or a state blob."""
+        er.state = init_decode_state(self.cfg, 1, self.max_seq)
+        hit = er.req.cached_tokens
+        if uses_state_blob(self.cfg):
+            if payload is not None:
+                er.state = jax.tree.map(jnp.asarray, pickle.loads(payload))
+            er.length = hit
+        else:
+            if payload:
+                kv_bytes = np.concatenate(payload, axis=1)   # (L, hit, row)
+                er.state = kvio.deserialize_kv(self.cfg, er.state, 0, 0,
+                                               kv_bytes[:, :hit])
+            er.length = hit
+        self.fifo.append((PrefillWork(er.req.rid, hit,
+                                      len(er.append_tokens)), er))
+
+    # -- compute ---------------------------------------------------------
+    def step(self) -> List[EngineRequest]:
+        """Run one quota-packed forward batch; returns requests whose
+        prefill completed this step."""
+        if not self.fifo:
+            return []
+        works = [w for w, _ in self.fifo]
+        byrid = {w.rid: er for w, er in self.fifo}
+        batch = self.packer.pack(works)
+        if not batch and works:
+            # quota smaller than min_chunk for the head request: force
+            # minimal progress so the engine never stalls
+            w = works[0]
+            bsz = min(w.remaining, self.packer.min_chunk)
+            batch = [BatchItem(w.rid, w.cached, bsz, chunked=True)]
+            w.advance(bsz)
+            if w.remaining == 0:
+                works.pop(0)
+        self.fifo = [(w, byrid[w.rid]) for w in works]
+        done = []
+        for bi in batch:
+            er = byrid[bi.rid]
+            toks = er.append_tokens[bi.cached - er.req.cached_tokens:
+                                    bi.cached - er.req.cached_tokens + bi.bsz]
+            t = jnp.asarray([toks], jnp.int32)
+            lengths = jnp.asarray([er.length], jnp.int32)
+            logits, er.state = append_step(self.params, self.cfg, t,
+                                           er.state, lengths)
+            er.length += bi.bsz
+            self.prefill_tokens += bi.bsz
+            if er.length == er.prompt_len:
+                er.first_token = int(jnp.argmax(logits[0, -1]))
+                done.append(er)
+        return done
+
+
+class DecodeEngine:
+    def __init__(self, eid, cfg: ModelConfig, params, store: MemoryKVStore,
+                 trie: BlockTrie, layout: BlockLayout, max_seq: int,
+                 n_slots: int = 8, blob_store: StateBlobStore | None = None):
+        self.eid = eid
+        self.cfg = cfg
+        self.params = params
+        self.store = store
+        self.blob_store = blob_store
+        self.trie = trie
+        self.layout = layout
+        self.max_seq = max_seq
+        self.n_slots = n_slots
+        self.tm = TrafficManager()
+        self.state = init_decode_state(cfg, n_slots, max_seq)
+        self.axes = kvio.batch_axes_of_state(cfg)
+        self.slots: List[Optional[EngineRequest]] = [None] * n_slots
+        self.lengths = np.zeros(n_slots, np.int32)
+        self.next_token = np.zeros(n_slots, np.int32)
+        self.decode_steps = 0
+
+    @property
+    def free_slots(self) -> int:
+        return sum(s is None for s in self.slots)
+
+    def admit(self, er: EngineRequest) -> int:
+        slot = self.slots.index(None)
+        self.slots[slot] = er
+        self.state = kvio.slot_set(self.state, self.axes, slot, er.state)
+        self.lengths[slot] = er.length
+        self.next_token[slot] = er.first_token
+        er.generated.append(er.first_token)
+        er.state = None                      # DE owns the state now
+        return slot
+
+    def step(self) -> List[EngineRequest]:
+        """One decode step over all active slots; returns finished."""
+        if all(s is None for s in self.slots):
+            return []
+        toks = jnp.asarray(self.next_token, jnp.int32)
+        lengths = jnp.asarray(self.lengths, jnp.int32)
+        logits, self.state = decode_step(self.params, self.cfg, toks,
+                                         self.state, lengths)
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for slot, er in enumerate(self.slots):
+            if er is None:
+                continue
+            self.lengths[slot] += 1
+            self.next_token[slot] = nxt[slot]
+            if len(er.generated) < er.req.gen_tokens:
+                er.generated.append(int(nxt[slot]))
+            if len(er.generated) >= er.req.gen_tokens:
+                self._persist(slot, er)
+                finished.append(er)
+                self.slots[slot] = None
+                self.lengths[slot] = 0
+        return finished
+
+    # -- persistence (per full block, as in the paper) --------------------
+    def _persist(self, slot: int, er: EngineRequest):
+        full_tokens = er.context_tokens + er.append_tokens + er.generated
+        bt = self.layout.block_tokens
+        n_blocks = len(full_tokens) // bt
+        start_block = er.req.cached_tokens // bt
+        if uses_state_blob(self.cfg):
+            blob = pickle.dumps(jax.tree.map(
+                np.asarray, kvio.slot_get(self.state, self.axes, slot)))
+            self.tm.submit(
+                lambda b=blob, k=tuple(full_tokens), n=int(self.lengths[slot]):
+                self.blob_store.put(k, b, n),
+                len(blob), TrafficClass.KV_TRANSFER)
+            self.tm.drain()
+            return
+        if n_blocks <= start_block:
+            return
+        kv_bytes = kvio.serialize_kv(self.cfg, self.state, slot,
+                                     start_block * bt, n_blocks * bt)
+        new_refs = [self.store.alloc_ref()
+                    for _ in range(n_blocks - start_block)]
+        for i, ref in enumerate(new_refs):
+            blk = np.ascontiguousarray(kv_bytes[:, i * bt:(i + 1) * bt])
+            self.tm.submit(lambda r=ref, b=blk: self.store.write_block(r, b),
+                           blk.nbytes, TrafficClass.KV_TRANSFER)
+        self.tm.drain()
+        self.trie.insert(full_tokens[:n_blocks * bt],
+                         new_refs)

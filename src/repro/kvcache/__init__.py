@@ -1,0 +1,4 @@
+from repro.kvcache.store import AccountingKVStore, KVStore, MemoryKVStore
+from repro.kvcache.trie import BlockTrie
+
+__all__ = ["AccountingKVStore", "KVStore", "MemoryKVStore", "BlockTrie"]

@@ -1,0 +1,44 @@
+"""Serving launcher: run the DualPath serving system on an arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+        --agents 4 --mode dualpath
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import ServingSystem
+from repro.sim.traces import Round, Trajectory
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--mode", choices=("dualpath", "basic"),
+                    default="dualpath")
+    ap.add_argument("--pe", type=int, default=1)
+    ap.add_argument("--de", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    system = ServingSystem(cfg, params, n_pe=args.pe, n_de=args.de,
+                           mode=args.mode, block_tokens=16, max_seq=256,
+                           de_slots=max(4, args.agents))
+    trajs = [Trajectory(i, [Round(20, 4)] * args.rounds)
+             for i in range(args.agents)]
+    sessions = system.run_offline(trajs)
+    print(f"completed {sum(s.rounds_done for s in sessions)} rounds "
+          f"across {len(sessions)} agents ({args.mode})")
+    for k, v in system.stats().items():
+        print(f"  {k}: {v:,}" if isinstance(v, int) else f"  {k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

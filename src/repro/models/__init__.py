@@ -1,0 +1,22 @@
+from repro.models.model import (
+    decode_step,
+    embed,
+    forward,
+    init_decode_state,
+    lm_loss,
+    logits_from_hidden,
+)
+from repro.models.params import (
+    abstract_params,
+    count_active_params_analytic,
+    count_params_analytic,
+    init_params,
+    logical_axes,
+    model_schema,
+)
+
+__all__ = [
+    "decode_step", "embed", "forward", "init_decode_state", "lm_loss",
+    "logits_from_hidden", "abstract_params", "count_active_params_analytic",
+    "count_params_analytic", "init_params", "logical_axes", "model_schema",
+]

@@ -1,0 +1,295 @@
+"""Core transformer layers: norms, RoPE, attention (dense/chunked/decode),
+FFN variants.  Pure functions over param subtrees from ``params.model_schema``.
+
+Layout convention: activations ``(batch, seq, d_model)``; per-head tensors
+``(batch, seq, heads, head_dim)``.  All matmuls run in the param dtype
+(bf16) with f32 softmax/normalisation statistics.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import constrain
+
+NEG_INF = -1e30
+
+# seq length above which full-attention switches to the chunked
+# (flash-style online-softmax) implementation to avoid materialising
+# (seq x seq) score tensors.
+DENSE_ATTN_MAX_SEQ = 4096
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def _rope_angles(positions, dim: int, theta: float):
+    # positions: (...,) int32 -> (..., dim//2) angles
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (b, s, h, dh); positions: (s,) or (b, s)."""
+    dh = x.shape[-1]
+    ang = _rope_angles(positions, dh, theta)          # (s, dh/2) or (b, s, dh/2)
+    if ang.ndim == 2:
+        ang = ang[None]                               # (1, s, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(s, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+
+def _mask_bias(q_ids, kv_ids, *, causal, window, kv_valid):
+    # window: None = unlimited; static int or traced scalar otherwise.
+    """Additive mask (…,sq,skv) in f32.  q_ids (sq,), kv_ids (skv,),
+    kv_valid: scalar/(b,) count of valid kv positions or None."""
+    ok = jnp.ones((q_ids.shape[0], kv_ids.shape[0]), bool)
+    if causal:
+        ok &= q_ids[:, None] >= kv_ids[None, :]
+    if window is not None:
+        ok &= (q_ids[:, None] - kv_ids[None, :]) < window
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+    if kv_valid is not None:
+        kv_valid = jnp.asarray(kv_valid)
+        vmask = kv_ids[None, :] < kv_valid.reshape(-1, 1)          # (b|1, skv)
+        bias = bias[None] + jnp.where(vmask, 0.0, NEG_INF)[:, None, :]
+    return bias  # (sq,skv) or (b|1,sq,skv)
+
+
+def _scores(qg, k, scale):
+    # qg (b,sq,hkv,g,dh), k (b,skv,hkv,dh) -> (b,hkv,g,sq,skv) f32
+    return jnp.einsum("bqngd,bknd->bngqk", qg, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def attend(q, k, v, *, causal=True, window=None, softcap=0.0,
+           q_offset=0, kv_offset=0, kv_valid=None, scale=None,
+           force_dense: Optional[bool] = None):
+    """Full attention; dispatches to dense or chunked implementation."""
+    skv = k.shape[1]
+    use_dense = force_dense if force_dense is not None else (
+        skv <= DENSE_ATTN_MAX_SEQ and q.shape[1] <= DENSE_ATTN_MAX_SEQ)
+    fn = _attend_dense_impl if use_dense else _attend_chunked_impl
+    return fn(q, k, v, causal=causal, window=window, softcap=softcap,
+              q_offset=q_offset, kv_offset=kv_offset, kv_valid=kv_valid,
+              scale=scale)
+
+
+def _attend_dense_impl(q, k, v, *, causal, window, softcap, q_offset,
+                       kv_offset, kv_valid, scale):
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, sq, hkv, g, dh)
+    s = _scores(qg, k, scale)                              # (b,hkv,g,sq,skv)
+    s = _softcap(s, softcap)
+    q_ids = q_offset + jnp.arange(sq)
+    kv_ids = kv_offset + jnp.arange(skv)
+    bias = _mask_bias(q_ids, kv_ids, causal=causal, window=window,
+                      kv_valid=kv_valid)
+    if bias.ndim == 2:
+        s = s + bias
+    else:
+        s = s + bias[:, None, None]                        # (b,1,1,sq,skv)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bknd->bqngd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    # v head dim may differ from qk head dim (MLA)
+    return o.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+def _attend_chunked_impl(q, k, v, *, causal, window, softcap, q_offset,
+                         kv_offset, kv_valid, scale,
+                         q_chunk=Q_CHUNK, kv_chunk=KV_CHUNK):
+    """Flash-style online-softmax attention in pure jnp (O(chunk^2) memory).
+
+    Used for long-sequence prefill where (seq x seq) scores cannot be
+    materialised.  The Pallas kernel in repro.kernels.flash_attention is
+    the TPU-optimised equivalent; this is the jit-compilable fallback the
+    dry-run lowers (the kernel requires real TPU or interpret mode).
+    """
+    b, sq, hq, dh = q.shape
+    vd = v.shape[-1]
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    pad_q = (-sq) % q_chunk
+    pad_k = (-skv) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+    if kv_valid is None:
+        kv_valid_arr = jnp.full((1,), skv, jnp.int32)
+    else:
+        kv_valid_arr = jnp.reshape(jnp.asarray(kv_valid, jnp.int32), (-1,))
+    qp = qp.reshape(b, nq, q_chunk, hkv, g, dh).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, b, hkv, g, qc, dh)
+
+    def q_body(args):
+        q_blk, q_ids = args                                  # ids (qc,)
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, vd), jnp.float32)
+
+        def kv_body(i, carry):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(kp, i * kv_chunk, kv_chunk, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(vp, i * kv_chunk, kv_chunk, 1)
+            kv_ids = kv_offset + i * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bngqd,bknd->bngqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            ok = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                ok &= q_ids[:, None] >= kv_ids[None, :]
+            if window is not None:
+                ok &= (q_ids[:, None] - kv_ids[None, :]) < window
+            sbias = jnp.where(ok, 0.0, NEG_INF)
+            vmask = kv_ids[None, :] < kv_valid_arr[:, None]     # (b|1, kvc)
+            sbias = sbias[None] + jnp.where(vmask, 0.0, NEG_INF)[:, None, :]
+            s = s + sbias[:, None, None]                        # broadcast b
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bngqk,bknd->bngqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return m_new, l_new, acc_new
+
+        m, l, acc = jax.lax.fori_loop(0, nk, kv_body, (m0, l0, a0))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return acc / l[..., None]
+
+    q_ids_all = (q_offset + jnp.arange(nq * q_chunk)).reshape(nq, q_chunk)
+    out = jax.lax.map(q_body, (qp, q_ids_all))        # (nq,b,hkv,g,qc,dh)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * q_chunk, hq, vd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def append_attend(q, k_cache, v_cache, lengths, *, window=None, softcap=0.0,
+                  scale=None):
+    """Multi-token append attention against padded caches.
+
+    q: (b, s_app, hq, dh) — the append chunk, already written into the
+    caches at positions [lengths, lengths + s_app); caches (b, S, hkv, dh);
+    lengths (b,) = tokens present *before* the append.  Row r attends to
+    kv index < lengths + r + 1 (causal across the ragged batch).
+    """
+    b, s_app, hq, dh = q.shape
+    S, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, s_app, hkv, g, dh)
+    s = jnp.einsum("bqngd,bknd->bngqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    kv_ids = jnp.arange(S)[None, None, :]                     # (1,1,S)
+    row_end = (lengths[:, None] + jnp.arange(s_app)[None, :] + 1)[..., None]
+    ok = kv_ids < row_end                                     # (b,s_app,S)
+    if window is not None:
+        ok &= (row_end - 1 - kv_ids) < window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]  # (b,1,1,q,k)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngqk,bknd->bqngd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, s_app, hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+def decode_attend(q, k_cache, v_cache, lengths, *, window=None, softcap=0.0,
+                  scale=None):
+    """Single-token decode attention.
+
+    q: (b, 1, hq, dh); caches: (b, S, hkv, dh); lengths: (b,) valid length
+    (the new token is already written at position lengths-1).
+    """
+    b, _, hq, dh = q.shape
+    S, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, hkv, g, dh)
+    s = jnp.einsum("bngd,bknd->bngk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    kv_ids = jnp.arange(S)
+    ok = kv_ids[None, :] < lengths[:, None]
+    if window is not None:
+        ok &= (lengths[:, None] - 1 - kv_ids[None, :]) < window
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngk,bknd->bngd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block plumbing
+# ---------------------------------------------------------------------------
+
+
+def gqa_qkv(p, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def attn_out(p, x_heads):
+    b, s = x_heads.shape[:2]
+    merged = x_heads.reshape(b, s, -1)
+    return jnp.einsum("bsm,md->bsd", merged, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+
+def ffn(p, cfg: ModelConfig, x):
+    act = cfg.ffn_activation
+    if act in ("silu_gated", "gelu_gated"):
+        gate = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+        up = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+        gate = constrain(gate, "batch", "seq", "mlp")
+        g = jax.nn.silu(gate) if act == "silu_gated" else jax.nn.gelu(gate)
+        h = g * up
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        h = constrain(h, "batch", "seq", "mlp")
+        if act == "squared_relu":
+            h = jnp.square(jax.nn.relu(h))
+        else:  # gelu
+            h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

@@ -1,0 +1,136 @@
+"""Multi-head latent attention (DeepSeek-style) — used by the paper's own
+ds27b evaluation model.
+
+Two paths:
+* prefill/train: expand the latent to per-head K/V (compute-bound, fine);
+* decode: **absorbed** form — queries are projected into the latent space
+  (q @ W_uk) so attention runs directly against the cached latent; the
+  value expansion is likewise folded after the softmax.  The KV cache
+  per token is only (kv_lora_rank + rope_head_dim) — this is exactly why
+  DeepSeek models sit at the bottom of the paper's Table 1.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, attend, rms_norm
+
+def _split_q(cfg, q):
+    m = cfg.mla
+    return q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+
+
+def mla_latent(p, cfg: ModelConfig, x, positions):
+    """Compute the cacheable latent: c_kv (b,s,r) + roped k_rope (b,s,rd)."""
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.rms_norm_eps)
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["w_krope"])
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_q(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = _split_q(cfg, q)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_full(p, cfg: ModelConfig, x, positions, *, causal=True,
+             prefix=None):
+    """Prefill/train path (expanded K/V).
+
+    prefix: optional (c_kv, k_rope, valid_len) of already-cached tokens.
+    Returns (attn_out (b,s,d), (c_kv, k_rope) for the new tokens).
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    q_nope, q_rope = mla_q(p, cfg, x, positions)
+    c_kv, k_rope = mla_latent(p, cfg, x, positions)
+    kv_offset, kv_valid = 0, None
+    if prefix is not None:
+        pc, pk, plen = prefix
+        c_all = jnp.concatenate([pc, c_kv], axis=1)
+        k_rope_all = jnp.concatenate([pk, k_rope], axis=1)
+        q_offset = pc.shape[1]   # query global positions handled by caller
+        kv_valid = None          # caller guarantees dense packing
+    else:
+        c_all, k_rope_all = c_kv, k_rope
+    # expand latent to per-head K/V
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_all, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_all, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_all[:, :, None, :],
+                                  k_nope.shape[:3] + (m.rope_head_dim,))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q_off = c_all.shape[1] - s
+    o = attend(q, k, v, causal=causal, q_offset=q_off,
+               scale=1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim))
+    b_, s_, h, vd = o.shape
+    out = jnp.einsum("bsm,md->bsd", o.reshape(b_, s_, h * vd), p["wo"])
+    return out, (c_kv, k_rope)
+
+
+def mla_append(p, cfg: ModelConfig, x, c_cache, krope_cache, lengths):
+    """Engine append path: write the chunk's latents into the padded
+    caches at [lengths, lengths+s), expand the whole cache to per-head
+    K/V and attend with ragged causal masking.
+
+    x (b,s,d); c_cache (b,S,r); krope_cache (b,S,rd); lengths (b,).
+    Returns (out (b,s,d), (c_cache, krope_cache) updated).
+    """
+    from repro.models.layers import append_attend
+    m = cfg.mla
+    b, s, _ = x.shape
+    bidx = jnp.arange(b)[:, None]
+    positions = lengths[:, None] + jnp.arange(s)[None, :]
+    q_nope, q_rope = mla_q(p, cfg, x, positions)
+    c_new, kr_new = mla_latent(p, cfg, x, positions)
+    c_cache = c_cache.at[bidx, positions].set(c_new.astype(c_cache.dtype))
+    krope_cache = krope_cache.at[bidx, positions].set(
+        kr_new.astype(krope_cache.dtype))
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_cache, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_cache, p["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope_cache[:, :, None, :],
+                                  k_nope.shape[:3] + (m.rope_head_dim,))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = append_attend(q, k, v, lengths,
+                      scale=1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim))
+    out = jnp.einsum("bsm,md->bsd", o.reshape(b, s, -1), p["wo"])
+    return out, (c_cache, krope_cache)
+
+
+def mla_decode(p, cfg: ModelConfig, x, c_cache, krope_cache, lengths):
+    """Absorbed decode step.
+
+    x: (b,1,d); c_cache (b,S,r); krope_cache (b,S,rd); lengths (b,)
+    (the current token's latent is already written at lengths-1).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    positions = (lengths - 1)[:, None]                       # (b,1)
+    q_nope, q_rope = mla_q(p, cfg, x, positions)             # (b,1,h,*)
+    # absorb W_uk: q_lat[b,h,r] = sum_d q_nope[b,1,h,d] W_uk[r,h,d]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], p["w_uk"])
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat,
+                       c_cache.astype(q_lat.dtype))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0],
+                        krope_cache.astype(q_rope.dtype))
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s = (s_lat + s_rope).astype(jnp.float32) * scale
+    mask = jnp.arange(c_cache.shape[1])[None, :] < lengths[:, None]
+    s = s + jnp.where(mask, 0.0, -1e30)[:, None, :]
+    pw = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", pw.astype(c_cache.dtype), c_cache)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, p["w_uv"])         # (b,h,vd)
+    out = jnp.einsum("bm,md->bd", o.reshape(b, -1), p["wo"])[:, None, :]
+    return out.astype(x.dtype)

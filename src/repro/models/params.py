@@ -1,0 +1,286 @@
+"""Parameter schema: single source of truth for shapes, init, sharding axes.
+
+A schema is a pytree (nested dicts) of :class:`PSpec` leaves.  From it we
+derive (a) materialised parameters, (b) logical-axis trees, (c) analytic
+parameter counts — guaranteeing the three never diverge.
+
+Stacking convention: repeated blocks carry leading stack dimensions with
+logical axis name ``"layers"`` so the whole stack feeds a single
+``lax.scan`` (fast compiles at 48–60 layers, small HLO for the dry-run).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Tree = Dict
+
+
+@dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]           # logical axis per dim
+    init: str = "normal"            # normal | zeros | ones | ssm_a | ssm_dt
+    std: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def _stack(spec: PSpec, n: int) -> PSpec:
+    return PSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.std)
+
+
+def _stack_tree(tree, n: int):
+    return jax.tree.map(lambda s: _stack(s, n), tree,
+                        is_leaf=lambda x: isinstance(x, PSpec))
+
+
+def _norm(d: int) -> PSpec:
+    return PSpec((d,), ("embed",), "ones")
+
+
+def _proj(d_in: int, *out, axes) -> PSpec:
+    return PSpec((d_in,) + tuple(out), axes, "normal", std=1.0 / math.sqrt(d_in))
+
+
+# ---------------------------------------------------------------------------
+# Block schemas
+# ---------------------------------------------------------------------------
+
+
+def attn_schema(cfg: ModelConfig) -> Tree:
+    d = cfg.d_model
+    if cfg.attn_variant == "mla":
+        m = cfg.mla
+        qk_dim = m.nope_head_dim + m.rope_head_dim
+        s = {
+            "wq": _proj(d, cfg.n_heads, qk_dim, axes=("embed", "heads", "head_dim")),
+            "w_dkv": _proj(d, m.kv_lora_rank, axes=("embed", "mla_rank")),
+            "w_krope": _proj(d, m.rope_head_dim, axes=("embed", "head_dim")),
+            "kv_norm": PSpec((m.kv_lora_rank,), ("mla_rank",), "ones"),
+            "w_uk": _proj(m.kv_lora_rank, cfg.n_heads, m.nope_head_dim,
+                          axes=("mla_rank", "heads", "head_dim")),
+            "w_uv": _proj(m.kv_lora_rank, cfg.n_heads, m.v_head_dim,
+                          axes=("mla_rank", "heads", "head_dim")),
+            "wo": _proj(cfg.n_heads * m.v_head_dim, d, axes=("heads_merged", "embed")),
+        }
+        return s
+    s = {
+        "wq": _proj(d, cfg.n_heads, cfg.head_dim, axes=("embed", "heads", "head_dim")),
+        "wk": _proj(d, cfg.n_kv_heads, cfg.head_dim, axes=("embed", "kv_heads", "head_dim")),
+        "wv": _proj(d, cfg.n_kv_heads, cfg.head_dim, axes=("embed", "kv_heads", "head_dim")),
+        "wo": _proj(cfg.n_heads * cfg.head_dim, d, axes=("heads_merged", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = PSpec((cfg.n_heads, cfg.head_dim), ("heads", "head_dim"), "zeros")
+        s["bk"] = PSpec((cfg.n_kv_heads, cfg.head_dim), ("kv_heads", "head_dim"), "zeros")
+        s["bv"] = PSpec((cfg.n_kv_heads, cfg.head_dim), ("kv_heads", "head_dim"), "zeros")
+    return s
+
+
+def ffn_schema(cfg: ModelConfig, d_ff: int) -> Tree:
+    d = cfg.d_model
+    if cfg.ffn_activation in ("silu_gated", "gelu_gated"):
+        return {
+            "wi_gate": _proj(d, d_ff, axes=("embed", "mlp")),
+            "wi_up": _proj(d, d_ff, axes=("embed", "mlp")),
+            "wo": _proj(d_ff, d, axes=("mlp", "embed")),
+        }
+    return {
+        "wi": _proj(d, d_ff, axes=("embed", "mlp")),
+        "wo": _proj(d_ff, d, axes=("mlp", "embed")),
+    }
+
+
+def moe_schema(cfg: ModelConfig) -> Tree:
+    d, m = cfg.d_model, cfg.moe
+    s = {
+        "router": PSpec((d, m.n_experts), ("embed", "expert"), "normal",
+                        std=1.0 / math.sqrt(d)),
+        "wg": PSpec((m.n_experts, d, m.d_ff_expert),
+                    ("expert", "embed", "expert_mlp"),
+                    "normal", std=1.0 / math.sqrt(d)),
+        "wu": PSpec((m.n_experts, d, m.d_ff_expert),
+                    ("expert", "embed", "expert_mlp"),
+                    "normal", std=1.0 / math.sqrt(d)),
+        "wd": PSpec((m.n_experts, m.d_ff_expert, d),
+                    ("expert", "expert_mlp", "embed"),
+                    "normal", std=1.0 / math.sqrt(m.d_ff_expert)),
+    }
+    if m.n_shared_experts:
+        s["shared"] = ffn_schema(cfg, m.n_shared_experts * m.d_ff_expert)
+    return s
+
+
+def mamba_schema(cfg: ModelConfig) -> Tree:
+    d, s = cfg.d_model, cfg.ssm
+    d_inner = s.expand * d
+    n_heads = d_inner // s.head_dim
+    bc = s.n_groups * s.d_state
+    return {
+        "ln": _norm(d),
+        "w_z": _proj(d, d_inner, axes=("embed", "inner")),
+        "w_x": _proj(d, d_inner, axes=("embed", "inner")),
+        "w_B": _proj(d, bc, axes=("embed", "state_proj")),
+        "w_C": _proj(d, bc, axes=("embed", "state_proj")),
+        "w_dt": _proj(d, n_heads, axes=("embed", "ssm_heads")),
+        "conv_x": PSpec((s.conv_width, d_inner), ("conv", "inner"), "normal",
+                        std=1.0 / math.sqrt(s.conv_width)),
+        "conv_B": PSpec((s.conv_width, bc), ("conv", "state_proj"), "normal",
+                        std=1.0 / math.sqrt(s.conv_width)),
+        "conv_C": PSpec((s.conv_width, bc), ("conv", "state_proj"), "normal",
+                        std=1.0 / math.sqrt(s.conv_width)),
+        "A_log": PSpec((n_heads,), ("ssm_heads",), "ssm_a"),
+        "D": PSpec((n_heads,), ("ssm_heads",), "ones"),
+        "dt_bias": PSpec((n_heads,), ("ssm_heads",), "ssm_dt"),
+        "out_norm": PSpec((d_inner,), ("inner",), "ones"),
+        "out_proj": _proj(d_inner, d, axes=("inner", "embed")),
+    }
+
+
+def dense_block_schema(cfg: ModelConfig, d_ff: int | None = None) -> Tree:
+    s = {
+        "ln1": _norm(cfg.d_model),
+        "attn": attn_schema(cfg),
+        "ln2": _norm(cfg.d_model),
+        "ffn": ffn_schema(cfg, d_ff or cfg.d_ff),
+    }
+    if cfg.post_attn_norm:
+        s["ln1b"] = _norm(cfg.d_model)
+        s["ln2b"] = _norm(cfg.d_model)
+    return s
+
+
+def moe_block_schema(cfg: ModelConfig) -> Tree:
+    s = {
+        "ln1": _norm(cfg.d_model),
+        "attn": attn_schema(cfg),
+        "ln2": _norm(cfg.d_model),
+        "moe": moe_schema(cfg),
+    }
+    if cfg.post_attn_norm:
+        s["ln1b"] = _norm(cfg.d_model)
+        s["ln2b"] = _norm(cfg.d_model)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Full model schema
+# ---------------------------------------------------------------------------
+
+
+def model_schema(cfg: ModelConfig) -> Tree:
+    d = cfg.d_model
+    s: Tree = {
+        "embed": {"tok": PSpec((cfg.vocab_size, d), ("vocab", "embed"),
+                               "normal", std=1.0)},
+        "final_norm": _norm(d),
+    }
+    if cfg.frontend_embed_dim:
+        # modality connector for the stubbed frontend (patch/frame embeds)
+        s["embed"]["frontend_proj"] = _proj(cfg.frontend_embed_dim, d,
+                                            axes=("frontend", "embed"))
+    if not cfg.tie_embeddings:
+        s["lm_head"] = _proj(d, cfg.vocab_size, axes=("embed", "vocab"))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "encoder"):
+        s["blocks"] = _stack_tree(dense_block_schema(cfg), cfg.n_layers)
+    elif fam == "moe":
+        m = cfg.moe
+        n_rest = cfg.n_layers - m.first_k_dense
+        assert n_rest % m.period == 0, cfg.name
+        n_super = n_rest // m.period
+        if m.first_k_dense:
+            s["dense_blocks"] = _stack_tree(dense_block_schema(cfg),
+                                            m.first_k_dense)
+        sb: Tree = {"moe": _stack_tree(moe_block_schema(cfg), n_super)}
+        if m.period > 1:
+            sb["pre"] = _stack_tree(
+                _stack_tree(dense_block_schema(cfg), m.period - 1), n_super)
+        s["super_blocks"] = sb
+    elif fam == "ssm":
+        s["blocks"] = _stack_tree(mamba_schema(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        assert cfg.n_layers % cfg.hybrid_period == 0, cfg.name
+        n_super = cfg.n_layers // cfg.hybrid_period
+        s["blocks"] = _stack_tree(
+            _stack_tree(mamba_schema(cfg), cfg.hybrid_period), n_super)
+        s["shared_block"] = dense_block_schema(cfg, d_ff=cfg.hybrid_d_ff)
+    else:  # pragma: no cover
+        raise ValueError(fam)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Materialisation / derived trees
+# ---------------------------------------------------------------------------
+
+_IS_LEAF = lambda x: isinstance(x, PSpec)
+
+
+def _init_leaf(spec: PSpec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "ssm_a":
+        # A in [1, 16] -> store log(A); discretised as exp(-exp(A_log) * dt)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "ssm_dt":
+        # dt_bias = softplus^-1(dt), dt ~ logU[1e-3, 1e-1]
+        lo, hi = math.log(1e-3), math.log(1e-1)
+        u = jax.random.uniform(key, spec.shape, jnp.float32)
+        dt = jnp.exp(lo + u * (hi - lo))
+        return jnp.log(jnp.expm1(dt)).astype(dtype)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * spec.std).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key) -> Tree:
+    schema = model_schema(cfg)
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_IS_LEAF)
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.param_dtype)
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        model_schema(cfg), is_leaf=_IS_LEAF)
+
+
+def logical_axes(cfg: ModelConfig) -> Tree:
+    return jax.tree.map(lambda s: s.axes, model_schema(cfg), is_leaf=_IS_LEAF)
+
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    return sum(s.size for s in
+               jax.tree.leaves(model_schema(cfg), is_leaf=_IS_LEAF))
+
+
+def count_active_params_analytic(cfg: ModelConfig) -> int:
+    total = count_params_analytic(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    # routed experts are wg+wu (d*dff each) + wd (dff*d) = 3*d*dff per expert
+    per_expert = 3 * cfg.d_model * m.d_ff_expert
+    n_moe_layers = sum(cfg.moe_layer_mask())
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive

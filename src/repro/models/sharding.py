@@ -1,0 +1,192 @@
+"""Logical-axis sharding: map schema axes -> mesh axes per profile.
+
+Profiles (baseline; §Perf hillclimbs override per-arch):
+
+* ``tp``      — Megatron-style tensor parallel over ``model``; weights
+                replicated over ``data`` (small archs).
+* ``fsdp``    — 2-D: ``embed`` dim sharded over ``data`` (FSDP/ZeRO-3
+                style) on top of TP over ``model`` (llava-34b, nemotron).
+* ``ep_fsdp`` — llama4-maverick: experts over ``data``, expert-FFN over
+                ``model``, attention FSDP+TP.
+
+Rule application is per-tensor and first-come-first-served: a mesh axis
+already consumed by an earlier dim is skipped (e.g. expert weights
+``(expert->data, embed->data?, mlp->model)`` resolve to
+``P('data', None, 'model')``).
+
+The ``pod`` axis never appears in weight rules — pods are pure DP
+replicas (weights replicated, gradients all-reduced over ``pod``), which
+is the deployment story for 1000+ nodes: elasticity at pod granularity.
+
+Mesh context: model code calls :func:`constrain` which is a no-op unless
+a mesh has been installed via :func:`use_mesh` (launch/dry-run code).
+CPU smoke tests therefore run the exact same model code unconstrained.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import params as params_lib
+
+_WEIGHT_RULES = {
+    "tp": {
+        "vocab": "model",
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "heads_merged": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "expert": "model",
+        "expert_mlp": "model",
+        "mla_rank": None,
+        "inner": "model",
+        "state_proj": None,
+        "ssm_heads": "model",
+        "conv": None,
+        "frontend": None,
+        "layers": None,
+    },
+}
+_WEIGHT_RULES["fsdp"] = dict(_WEIGHT_RULES["tp"], embed="data")
+_WEIGHT_RULES["ep_fsdp"] = dict(_WEIGHT_RULES["fsdp"], expert="data")
+
+# Activation logical axes (used via `constrain`).
+# "batch" expands to ("pod","data") when a pod axis exists.
+_ACT_RULES = {
+    "batch": "data",
+    "seq": None,
+    "kv_seq": None,
+    "embed_act": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",   # dispatch buffers; ep_fsdp overrides to "data"
+    "inner": "model",
+    "mla_rank": None,
+    "layers": None,
+}
+
+
+class _MeshCtx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.profile: str = "tp"
+        self.act_overrides: Optional[dict] = None
+
+
+_CTX = _MeshCtx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], profile: str = "tp",
+             act_overrides: Optional[dict] = None):
+    prev = (_CTX.mesh, _CTX.profile, _CTX.act_overrides)
+    _CTX.mesh, _CTX.profile, _CTX.act_overrides = mesh, profile, act_overrides
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.profile, _CTX.act_overrides = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _expand(mesh_axes, name):
+    """'data'->('pod','data') for batch-like dims when pod axis exists."""
+    if name == "data" and "pod" in mesh_axes:
+        return ("pod", "data")
+    return name
+
+
+def _spec_for(axes: Tuple[str, ...], rules, mesh_axes, batch_like=("batch",)) -> P:
+    used, out = set(), []
+    for ax in axes:
+        mesh_ax = rules.get(ax)
+        if ax in batch_like and mesh_ax is not None:
+            mesh_ax = _expand(mesh_axes, mesh_ax)
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        flat = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        if any(a in used for a in flat):
+            out.append(None)
+            continue
+        used.update(flat)
+        out.append(mesh_ax)
+    return P(*out)
+
+
+def weight_rules(profile: str, overrides=None):
+    r = dict(_WEIGHT_RULES[profile])
+    if overrides:
+        r.update(overrides)
+    return r
+
+
+def sanitize_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide the dim they shard.
+
+    Explicit in/out shardings require divisibility (unlike
+    with_sharding_constraint, which GSPMD pads).  Baseline policy:
+    replicate the offending dim; §Perf hillclimbs re-shard these cases
+    deliberately (e.g. llava's 56 heads)."""
+    out = []
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, ax in zip(shape, entries):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        out.append(ax if dim % total == 0 else None)
+    return P(*out)
+
+
+def param_partition_specs(cfg: ModelConfig, mesh: Mesh, overrides=None):
+    rules = weight_rules(cfg.sharding_profile, overrides)
+    schema = params_lib.model_schema(cfg)
+    is_pspec = lambda x: isinstance(x, params_lib.PSpec)
+    return jax.tree.map(
+        lambda ps: sanitize_spec(
+            ps.shape, _spec_for(ps.axes, rules, mesh.axis_names), mesh),
+        schema, is_leaf=is_pspec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, overrides=None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_partition_specs(cfg, mesh, overrides))
+
+
+def act_spec(mesh: Mesh, *axes: Optional[str], act_overrides=None) -> P:
+    rules = dict(_ACT_RULES)
+    if act_overrides:
+        rules.update(act_overrides)
+    cooked = tuple(a if a is not None else f"__none{i}"
+                   for i, a in enumerate(axes))
+    rules.update({f"__none{i}": None for i in range(len(axes))})
+    return _spec_for(cooked, rules, mesh.axis_names)
+
+
+def constrain(x, *axes: Optional[str], act_overrides=None):
+    """Sharding-constrain an activation by logical axis names (or None)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    if _CTX.profile == "ep_fsdp":
+        act_overrides = dict(act_overrides or {}, expert="data")
+    if _CTX.act_overrides:
+        act_overrides = dict(act_overrides or {}, **_CTX.act_overrides)
+    spec = act_spec(mesh, *axes, act_overrides=act_overrides)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

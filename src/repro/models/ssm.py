@@ -1,0 +1,177 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+Implements the chunked SSD scan (train/prefill: sub-quadratic, chunk-
+local quadratic term + inter-chunk recurrence) and the O(1) recurrent
+decode step.  State layout:
+
+* ``ssm``    — (b, H, P, N): per-head state (P = head_dim, N = d_state)
+* ``conv_*`` — (b, conv_width-1, dim): causal-conv tail for x / B / C
+
+All state math runs in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.sharding import constrain
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.n_groups * s.d_state
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv over seq. x (b,s,c), w (cw,c), tail (b,cw-1,c)."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_tail = xp[:, -(cw - 1):] if cw > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+def _inputs(p, cfg: ModelConfig, x, conv_tails=None):
+    """Shared projection + conv for both scan and step paths."""
+    s = cfg.ssm
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
+    xb = jnp.einsum("bsd,di->bsi", x, p["w_x"])
+    B = jnp.einsum("bsd,dn->bsn", x, p["w_B"])
+    C = jnp.einsum("bsd,dn->bsn", x, p["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+    tails = conv_tails or {}
+    xb, tx = _causal_conv(xb, p["conv_x"], tails.get("conv_x"))
+    B, tb = _causal_conv(B, p["conv_B"], tails.get("conv_B"))
+    C, tc = _causal_conv(C, p["conv_C"], tails.get("conv_C"))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    new_tails = {"conv_x": tx, "conv_B": tb, "conv_C": tc}
+    return z, xb, B, C, dt, new_tails
+
+
+def ssd_scan(p, cfg: ModelConfig, x, initial_state=None, conv_tails_in=None):
+    """Chunked SSD over a full sequence.
+
+    x: (b, s, d_model) -> (y (b, s, d_model), final state dict
+    {"ssm" (b,H,P,N), "conv_x/B/C" tails}).  ``initial_state`` /
+    ``conv_tails_in`` continue a previous chunk (engine append path).
+    """
+    s_cfg = cfg.ssm
+    d_inner, H, P, N = _dims(cfg)
+    b, s, _ = x.shape
+    L = min(s_cfg.chunk_size, s)
+    pad = (-s) % L
+    z, xb, B, C, dt, conv_tails = _inputs(p, cfg, x, conv_tails_in)
+    if pad:
+        xb = jnp.pad(xb, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // L
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    # chunk-major for the scan: the recurrence runs over chunks anyway, so
+    # computing the chunk-local quadratic term inside the scan keeps the
+    # working set at one (b, L, L, H) block instead of nc of them
+    # (critical at prefill_32k: nc=128 chunks).
+    xh = xb.reshape(b, nc, L, H, P).transpose(1, 0, 2, 3, 4)
+    Bc = B.reshape(b, nc, L, N).transpose(1, 0, 2, 3)
+    Cc = C.reshape(b, nc, L, N).transpose(1, 0, 2, 3)
+    dtc = dt.reshape(b, nc, L, H).transpose(1, 0, 2, 3)       # f32 already
+
+    h0 = (jnp.zeros((b, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    idx = jnp.arange(L)
+    causal = (idx[:, None] >= idx[None, :])[:, :, None]       # (Li,Lj,1)
+
+    def chunk_body(h, xs):
+        xh_c, B_c, C_c, dt_c = xs
+        xh_c = xh_c.astype(jnp.float32)
+        B_c = B_c.astype(jnp.float32)
+        C_c = C_c.astype(jnp.float32)
+        dA = dt_c * A                                          # (b,L,H)
+        cs = jnp.cumsum(dA, axis=1)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]            # (b,Li,Lj,H)
+        Lmat = jnp.where(causal[None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", C_c, B_c)
+        w = CB[..., None] * Lmat * dt_c[:, None, :, :]         # (b,i,j,H)
+        y_c = jnp.einsum("bijh,bjhp->bihp", w, xh_c)
+        # inter-chunk: contribution of the carried state
+        y_c = y_c + jnp.einsum("bin,bhpn,bih->bihp",
+                               C_c, h, jnp.exp(cs))
+        # state update: h' = h * decay(chunk) + sum_j decay_to_end_j dt_j B_j x_j
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)             # (b,L,H)
+        S_c = jnp.einsum("blh,bln,blhp->bhpn",
+                         decay_to_end * dt_c, B_c, xh_c)
+        h_new = h * jnp.exp(cs[:, -1, :])[:, :, None, None] + S_c
+        return h_new, y_c
+
+    h_final, ys = jax.lax.scan(chunk_body, h0, (xh, Bc, Cc, dtc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * L, H, P)
+    if pad:
+        y = y[:, :s]
+    y = y + xb.reshape(b, nc * L, H, P)[:, :s].astype(jnp.float32) * \
+        p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.rms_norm_eps)
+    y = constrain(y, "batch", "seq", "inner")
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    final_state = dict(conv_tails, ssm=h_final.astype(jnp.float32))
+    return out, final_state
+
+
+def ssd_scan_with_tails(p, cfg: ModelConfig, x, state: Dict):
+    """Continue the SSD scan from a carried state dict (engine appends)."""
+    tails = {k: state[k] for k in ("conv_x", "conv_B", "conv_C")}
+    return ssd_scan(p, cfg, x, initial_state=state["ssm"],
+                    conv_tails_in=tails)
+
+
+def ssm_decode_step(p, cfg: ModelConfig, x, state: Dict):
+    """Single-token recurrent step.
+
+    x: (b, 1, d_model); state dict with 'ssm' (b,H,P,N) + conv tails.
+    Returns (y (b,1,d_model), new_state).
+    """
+    d_inner, H, P, N = _dims(cfg)
+    tails = {k: state[k] for k in ("conv_x", "conv_B", "conv_C")}
+    z, xb, B, C, dt, new_tails = _inputs(p, cfg, x, tails)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xb[:, 0].reshape(-1, H, P).astype(jnp.float32)       # (b,H,P)
+    Bv = B[:, 0].astype(jnp.float32)                          # (b,N)
+    Cv = C[:, 0].astype(jnp.float32)
+    dtv = dt[:, 0]                                            # (b,H)
+    h = state["ssm"].astype(jnp.float32)                      # (b,H,P,N)
+    decay = jnp.exp(dtv * A)                                  # (b,H)
+    h = h * decay[:, :, None, None] + \
+        (dtv[:, :, None] * xh)[..., None] * Bv[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.rms_norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    new_state = dict(new_tails, ssm=h.astype(jnp.float32))
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int) -> Dict:
+    d_inner, H, P, N = _dims(cfg)
+    cw = cfg.ssm.conv_width
+    bc = cfg.ssm.n_groups * cfg.ssm.d_state
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv_x": jnp.zeros((batch, cw - 1, d_inner), dt),
+        "conv_B": jnp.zeros((batch, cw - 1, bc), dt),
+        "conv_C": jnp.zeros((batch, cw - 1, bc), dt),
+    }

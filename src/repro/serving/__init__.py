@@ -1,0 +1,1 @@
+from repro.serving.system import AgentSession, ServingSystem

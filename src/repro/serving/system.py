@@ -1,0 +1,225 @@
+"""DualPath serving system: scheduler + engines + storage, end to end.
+
+Single-process orchestration of the full request lifecycle with *real*
+token generation and *real* KV bytes moving along the dual-path legs —
+the functional counterpart of the discrete-event simulator (which owns
+the timing claims).  Used by the examples and integration tests.
+
+Per round (paper Fig. 4):
+ 1. client computes the trie hit for ``context ‖ append`` (§A.4),
+ 2. scheduler assigns (PE, DE) + read path (§6.1 / Alg. 1),
+ 3. the chosen side's TrafficManager carries the FullBlock reads
+    (storage→PE directly, or storage→DE→compute-network→PE),
+ 4. PE runs quota-packed chunked prefill (§6.2) over the append chunk,
+ 5. prompt state transfers PE→DE; DE decodes ``gen`` tokens greedily and
+    persists newly-filled FullBlocks + trie entries (§A.5).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.blocks import BlockLayout, layout_for
+from repro.core.scheduler import Request, Scheduler
+from repro.core.traffic import TrafficClass
+from repro.engines.runtime import (DecodeEngine, EngineRequest,
+                                   PrefillEngine, uses_state_blob)
+from repro.kvcache.store import MemoryKVStore, StateBlobStore
+from repro.kvcache.trie import BlockTrie
+from repro.sim.traces import Trajectory
+
+
+@dataclass
+class AgentSession:
+    traj: Trajectory
+    rng: np.random.Generator
+    context: List[int] = field(default_factory=list)
+    next_round: int = 0
+    rounds_done: int = 0
+    current: Optional[EngineRequest] = None
+
+    def done(self) -> bool:
+        return self.next_round >= self.traj.n_rounds and self.current is None
+
+
+class ServingSystem:
+    def __init__(self, cfg: ModelConfig, params, *, n_pe: int = 1,
+                 n_de: int = 1, mode: str = "dualpath",
+                 block_tokens: int = 16, max_seq: int = 512,
+                 de_slots: int = 8, quota_s: float = 0.3, seed: int = 0):
+        assert mode in ("dualpath", "basic")
+        self.cfg = cfg
+        self.mode = mode
+        self.max_seq = max_seq
+        self.layout = layout_for(cfg, block_tokens)
+        self.store = MemoryKVStore(self.layout)
+        self.blob_store = StateBlobStore()
+        self.trie = BlockTrie(block_tokens)
+        self.sched = Scheduler(alpha=1 << 30, beta=1 << 30)
+        self.pes: Dict[Tuple[int, int], PrefillEngine] = {}
+        self.des: Dict[Tuple[int, int], DecodeEngine] = {}
+        for i in range(n_pe):
+            eid = (i, 0)
+            self.sched.register_engine(eid, node=i, kind="pe", group=0)
+            self.pes[eid] = PrefillEngine(eid, cfg, params, self.store,
+                                          self.layout, max_seq, quota_s)
+        for j in range(n_de):
+            eid = (n_pe + j, 0)
+            st = self.sched.register_engine(eid, node=n_pe + j, kind="de",
+                                            group=1000)
+            de = DecodeEngine(eid, cfg, params, self.store, self.trie,
+                              self.layout, max_seq, n_slots=de_slots,
+                              blob_store=self.blob_store)
+            st.free_hbm_tokens = de_slots * max_seq
+            self.des[eid] = de
+        self._rid = itertools.count()
+        self._pending_admit: deque = deque()
+        self._inflight: Dict[int, EngineRequest] = {}
+        self.rng = np.random.default_rng(seed)
+        self.read_bytes_by_side = {"pe": 0, "de": 0}
+
+    # ------------------------------------------------------------------
+    def _submit_round(self, sess: AgentSession):
+        rnd = sess.traj.rounds[sess.next_round]
+        append = list(sess.rng.integers(
+            2, self.cfg.vocab_size, size=rnd.append))
+        prompt = sess.context + append
+        if uses_state_blob(self.cfg):
+            blob, hit = self.blob_store.get(sess.context)
+            refs = []
+            hit = hit if blob is not None else 0
+        else:
+            hit, refs = self.trie.match(prompt)
+            blob = None
+        new_tokens = len(prompt) - hit
+        req = Request(rid=next(self._rid), cached_tokens=hit,
+                      new_tokens=new_tokens, gen_tokens=rnd.gen)
+        er = EngineRequest(req=req, context_tokens=prompt[:hit],
+                           append_tokens=prompt[hit:], hit_refs=refs)
+        er._blob = blob
+        er._session = sess
+        sess.current = er
+        sess.next_round += 1
+        self._inflight[req.rid] = er
+        self.sched.submit(req)
+
+    # ------------------------------------------------------------------
+    def _schedule(self):
+        de_reports = {eid: (sum(s is not None for s in de.slots),
+                            sum(int(l) for l in de.lengths),
+                            0, de.free_slots * self.max_seq)
+                      for eid, de in self.des.items()}
+        for asg in self.sched.on_de_fetch(1000, de_reports):
+            pass
+        pe_reports = {eid: (len(pe.fifo),
+                            sum(w.remaining for w, _ in pe.fifo), 0)
+                      for eid, pe in self.pes.items()}
+        for asg in self.sched.on_pe_fetch(0, pe_reports):
+            pass
+        # decide paths for every ready request first (read queues build up
+        # across the batch of decisions, as on a live cluster), then read
+        ready = []
+        for er in list(self._inflight.values()):
+            req = er.req
+            if req.pe is None or req.de is None or req.read_path is not None:
+                continue
+            if self.mode == "basic":
+                req.read_path = "pe"
+                self.sched.engines[req.pe].read_q += req.cached_tokens
+            else:
+                self.sched.choose_read_path(req)
+            ready.append(er)
+        for er in ready:
+            self._do_read(er)
+
+    def _do_read(self, er: EngineRequest):
+        """Execute the storage read on the chosen side and deliver the
+        payload to the PE (via compute network when read on the DE)."""
+        req = er.req
+        pe = self.pes[req.pe]
+        side = req.read_path
+        if uses_state_blob(self.cfg):
+            payload = er._blob
+            nbytes = len(payload) if payload else 0
+        else:
+            payload = self.store.read_blocks(er.hit_refs)
+            nbytes = sum(b.nbytes for b in payload)
+        self.read_bytes_by_side[side] += nbytes
+        tm = pe.tm if side == "pe" else self.des[req.de].tm
+        box = {}
+        tm.submit(lambda: box.update(p=payload), nbytes,
+                  TrafficClass.KV_TRANSFER)
+        tm.drain()
+        if side == "de":
+            # DE buffer -> PE over the compute network (layerwise stream)
+            pe.tm.submit(lambda: None, nbytes, TrafficClass.KV_TRANSFER)
+            pe.tm.drain()
+        pe.install_hit_kv(er, box.get("p"))
+        self.sched.on_read_done(req.pe if side == "pe" else req.de,
+                                req.cached_tokens)
+
+    # ------------------------------------------------------------------
+    def _step_engines(self):
+        for pe in self.pes.values():
+            for er in pe.step():
+                self.sched.on_request_done(er.req.pe, er.req)
+                # PE -> DE prompt-state transfer (compute network)
+                nbytes = er.req.prompt_tokens * \
+                    self.cfg.kv_bytes_per_token()
+                self.des[er.req.de].tm.submit(lambda: None, nbytes,
+                                              TrafficClass.KV_TRANSFER)
+                self.des[er.req.de].tm.drain()
+                self._pending_admit.append(er)
+        still = deque()
+        while self._pending_admit:
+            er = self._pending_admit.popleft()
+            de = self.des[er.req.de]
+            if de.free_slots:
+                de.admit(er)
+            else:
+                still.append(er)
+        self._pending_admit = still
+        for de in self.des.values():
+            for er in de.step():
+                self.sched.on_request_done(er.req.de, er.req)
+                sess = er._session
+                sess.context = (er.context_tokens + er.append_tokens +
+                                er.generated)
+                sess.rounds_done += 1
+                sess.current = None
+                del self._inflight[er.req.rid]
+                if sess.next_round < sess.traj.n_rounds:
+                    self._submit_round(sess)
+
+    # ------------------------------------------------------------------
+    def run_offline(self, trajectories: List[Trajectory],
+                    max_iters: int = 100000) -> List[AgentSession]:
+        sessions = [AgentSession(t, np.random.default_rng(1000 + t.tid))
+                    for t in trajectories]
+        for s in sessions:
+            self._submit_round(s)
+        for _ in range(max_iters):
+            if all(s.done() for s in sessions):
+                break
+            self._schedule()
+            self._step_engines()
+        else:
+            raise RuntimeError("serving system did not converge")
+        return sessions
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return dict(
+            store_reads=self.store.bytes_read,
+            store_writes=self.store.bytes_written,
+            read_bytes_pe_side=self.read_bytes_by_side["pe"],
+            read_bytes_de_side=self.read_bytes_by_side["de"],
+            trie_blocks=self.trie.n_blocks,
+            prefill_tokens=sum(p.prefill_tokens for p in self.pes.values()),
+            decode_steps=sum(d.decode_steps for d in self.des.values()),
+        )

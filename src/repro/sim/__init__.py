@@ -1,0 +1,11 @@
+from repro.sim.simulator import Sim, SimConfig
+from repro.sim.spec import (
+    DS_660B,
+    HOPPER_NODE,
+    QWEN25_32B,
+    TPU_V5E_HOST,
+    GPUSpec,
+    ModelSimSpec,
+    NodeSpec,
+)
+from repro.sim.traces import Trajectory, dataset_stats, generate_dataset

@@ -1,0 +1,727 @@
+"""Discrete-event cluster simulator for DualPath.
+
+Validates the paper's system-level claims (Fig. 7–15, Table 3) on a
+CPU-only container: network bandwidth effects cannot be *measured* here,
+so they are *modelled* — with the same scheduler code
+(repro.core.scheduler), the same loading plans (repro.core.loading) and
+the closed-form §4.2 analysis as cross-checks.
+
+Model:
+* per-node storage NIC  — FIFO server (a disk read queue; its backlog in
+  tokens is the scheduler's ``read_q`` signal),
+* per-engine CNIC PCIe read/write sides, per-node DRAM, PE–DE network —
+  processor-sharing resources (fair share among active legs; the VL
+  arbiter guarantees model collectives are unaffected, so they are not
+  simulated as contenders — see core/traffic.py),
+* engines — grouped (EP/DP unit); groups step in lockstep.  PE groups
+  pack forward batches under the compute quota (core/intra.py); DE
+  groups run continuous-batching decode in token blocks.
+
+Request lifecycle (round of a trajectory):
+  submit → (PE,DE) assignment + read-path choice → storage read (FIFO on
+  the chosen side) → PE prefill (chunks; layerwise streaming legs overlap
+  as PS flows) → PD transfer complete → DE H2D → decode blocks → done →
+  next round of the trajectory.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.intra import AttnTimeModel, PrefillWork, QuotaPacker, attn_flops
+from repro.core.loading import PLANS
+from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
+from repro.sim.spec import ModelSimSpec, NodeSpec
+from repro.sim.traces import Trajectory
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Event engine
+# ---------------------------------------------------------------------------
+
+
+class EventLoop:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: List[Tuple[float, int, Callable]] = []
+        self._seq = itertools.count()
+
+    def at(self, t: float, fn: Callable):
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable):
+        self.at(self.now + dt, fn)
+
+    def run(self, until: float = INF):
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            if t > until:
+                self.now = until
+                return
+            self.now = t
+            fn()
+
+
+class PSResource:
+    """Processor-sharing link: active flows share capacity equally."""
+
+    __slots__ = ("name", "cap", "flows")
+
+    def __init__(self, name: str, cap: float):
+        self.name = name
+        self.cap = cap
+        self.flows: set = set()
+
+
+class Flow:
+    """A transfer leg across one or more PS resources."""
+
+    __slots__ = ("sim", "nbytes_left", "resources", "on_done", "rate",
+                 "t_last", "version", "done")
+
+    def __init__(self, sim: "Sim", nbytes: float, resources, on_done):
+        self.sim = sim
+        self.nbytes_left = float(max(nbytes, 1.0))
+        self.resources = [r for r in resources if r is not None]
+        self.on_done = on_done
+        self.rate = 0.0
+        self.t_last = sim.loop.now
+        self.version = 0
+        self.done = False
+        if not self.resources:
+            sim.loop.after(0.0, self._finish)
+            return
+        for r in self.resources:
+            r.flows.add(self)
+        sim._reshare(self.resources)
+
+    def _settle(self, now: float):
+        self.nbytes_left -= self.rate * (now - self.t_last)
+        self.t_last = now
+
+    def _finish(self):
+        if self.done:
+            return
+        self.done = True
+        for r in self.resources:
+            r.flows.discard(self)
+        if self.resources:
+            self.sim._reshare(self.resources)
+        self.on_done()
+
+
+@dataclass
+class SimConfig:
+    node: NodeSpec
+    model: ModelSimSpec
+    P: int
+    D: int
+    mode: str = "dualpath"            # dualpath | basic | oracle
+    scheduler: str = "adaptive"       # adaptive | rr
+    nodes_per_pe_group: Optional[int] = None   # default: all P nodes
+    nodes_per_de_group: Optional[int] = None   # default: all D nodes
+    quota_s: float = 0.300
+    block_tokens: int = 64
+    decode_block: int = 64
+    kv_hbm_frac: float = 0.55         # fraction of HBM available for KV
+    layerwise: bool = True            # layerwise prefill (ablation: False)
+    alpha_read_s: float = 3.0         # §A.4: alpha = tokens readable in 3 s
+    beta_compute_s: float = 5.0       # beta = tokens processed in 5 s
+    split_reads: bool = False         # beyond-paper read splitting
+    kv_dtype_bytes: int = 1           # fp8 KV (paper default)
+    online: bool = False
+    seed: int = 0
+
+
+class _EngineSim:
+    __slots__ = ("eid", "node", "kind", "group", "fifo", "packer",
+                 "active_decode", "resident_tokens", "kv_capacity_tokens",
+                 "attn_sample")
+
+    def __init__(self, eid, node, kind, group):
+        self.eid = eid
+        self.node = node
+        self.kind = kind
+        self.group = group
+        self.fifo: List[PrefillWork] = []
+        self.active_decode: List["RoundSim"] = []
+        self.resident_tokens = 0
+        self.kv_capacity_tokens = 0
+        self.attn_sample = 0.0
+
+
+class RoundSim:
+    """One round (request) of a trajectory moving through the system."""
+
+    __slots__ = ("req", "traj", "round_idx", "agent", "submit_t", "read_done_t",
+                 "prefill_done_t", "first_decode_t", "done_t", "transfer_done",
+                 "prefill_left", "gen_left", "ctx", "h2d_done", "tokens_out",
+                 "second_token_t")
+
+    def __init__(self, req: Request, traj: Trajectory, round_idx: int, agent):
+        self.req = req
+        self.traj = traj
+        self.round_idx = round_idx
+        self.agent = agent
+        self.submit_t = 0.0
+        self.read_done_t = -1.0
+        self.prefill_done_t = -1.0
+        self.first_decode_t = -1.0
+        self.second_token_t = -1.0
+        self.done_t = -1.0
+        self.transfer_done = False
+        self.h2d_done = False
+        self.prefill_left = req.new_tokens
+        self.gen_left = req.gen_tokens
+        self.ctx = req.prompt_tokens
+        self.tokens_out = 0
+
+
+class AgentSim:
+    __slots__ = ("traj", "next_round", "start_t", "end_t")
+
+    def __init__(self, traj: Trajectory):
+        self.traj = traj
+        self.next_round = 0
+        self.start_t = -1.0
+        self.end_t = -1.0
+
+
+class Sim:
+    def __init__(self, cfg: SimConfig, trajectories: List[Trajectory]):
+        self.cfg = cfg
+        self.loop = EventLoop()
+        self.model = cfg.model
+        self.node_spec = cfg.node
+        g = cfg.node.g
+        self.kv_per_token = self.model.kv_bytes_per_token
+
+        # --- resources -----------------------------------------------------
+        self.snic: Dict[int, "_FifoNic"] = {}
+        self.dram: Dict[int, PSResource] = {}
+        self.cnic_rd: Dict[Tuple[int, int], PSResource] = {}
+        self.cnic_wr: Dict[Tuple[int, int], PSResource] = {}
+        self.net = PSResource("net", INF)    # paper: no compute-net congestion
+        n_nodes = cfg.P + cfg.D
+        for n in range(n_nodes):
+            self.snic[n] = _FifoNic(self, n, cfg.node.snic_bw)
+            self.dram[n] = PSResource(f"dram{n}", cfg.node.dram_bw)
+            for r in range(g):
+                self.cnic_rd[(n, r)] = PSResource(f"cr{n}.{r}", cfg.node.cnic_bw)
+                self.cnic_wr[(n, r)] = PSResource(f"cw{n}.{r}", cfg.node.cnic_bw)
+
+        # --- engines / groups ----------------------------------------------
+        npg = cfg.nodes_per_pe_group or cfg.P
+        ndg = cfg.nodes_per_de_group or cfg.D
+        self.engines: Dict[Tuple[int, int], _EngineSim] = {}
+        self.pe_groups: Dict[int, List[_EngineSim]] = defaultdict(list)
+        self.de_groups: Dict[int, List[_EngineSim]] = defaultdict(list)
+        sched_cls = Scheduler if cfg.scheduler == "adaptive" else \
+            RoundRobinScheduler
+        alpha = int(cfg.alpha_read_s * cfg.node.snic_bw / max(self.kv_per_token, 1)) \
+            if self.kv_per_token else 1 << 30
+        tok_rate = cfg.node.gpu.flops * cfg.node.gpu.mfu_prefill / \
+            max(self.model.linear_flops_per_token(), 1.0)
+        beta = int(cfg.beta_compute_s * tok_rate)
+        self.sched = sched_cls(alpha=alpha, beta=beta,
+                               split_reads=cfg.split_reads)
+
+        kv_cap_bytes = cfg.node.gpu.hbm_bytes * cfg.kv_hbm_frac
+        kv_cap_tokens = int(kv_cap_bytes / max(self.kv_per_token, 1)) \
+            if self.kv_per_token else 1 << 30
+
+        for n in range(cfg.P):
+            grp = n // npg
+            for r in range(g):
+                e = _EngineSim((n, r), n, "pe", grp)
+                tm = AttnTimeModel(effective_flops=cfg.node.gpu.flops *
+                                   cfg.node.gpu.mfu_prefill)
+                e.packer = _SimPacker(self.model, tm, cfg.quota_s)
+                self.engines[(n, r)] = e
+                self.pe_groups[grp].append(e)
+                self.sched.register_engine((n, r), node=n, kind="pe", group=grp)
+        for dn in range(cfg.D):
+            n = cfg.P + dn
+            grp = 1000 + dn // ndg
+            for r in range(g):
+                e = _EngineSim((n, r), n, "de", grp)
+                e.kv_capacity_tokens = kv_cap_tokens
+                self.engines[(n, r)] = e
+                self.de_groups[grp].append(e)
+                st = self.sched.register_engine((n, r), node=n, kind="de",
+                                                group=grp)
+                st.free_hbm_tokens = kv_cap_tokens
+
+        # engines-per-group for weight sharding in the compute model
+        self.pe_group_size = npg * g
+        self.de_group_size = ndg * g
+
+        # --- workload --------------------------------------------------------
+        self.agents = [AgentSim(t) for t in trajectories]
+        self.rounds: List[RoundSim] = []
+        self._rid = itertools.count()
+        self._pe_stepping: Dict[int, bool] = {gid: False
+                                              for gid in self.pe_groups}
+        self._de_stepping: Dict[int, bool] = {gid: False
+                                              for gid in self.de_groups}
+        self._sched_pending = False
+
+        # --- metrics ---------------------------------------------------------
+        self.snic_samples: List[Tuple[float, int, float]] = []  # (t, node, bytes)
+        self.attn_balance: List[Tuple[float, float]] = []       # (t, max/avg)
+        self.tps_samples: List[Tuple[float, int, int]] = []     # (t, prompt, gen)
+        self.prompt_tokens_done = 0
+        self.gen_tokens_done = 0
+
+    # ------------------------------------------------------------------
+    # PS rate management
+    # ------------------------------------------------------------------
+    def _reshare(self, resources):
+        now = self.loop.now
+        affected = set()
+        for r in resources:
+            affected.update(r.flows)
+        for f in affected:
+            f._settle(now)
+            new_rate = min((r.cap / len(r.flows)) for r in f.resources)
+            f.rate = new_rate
+            f.version += 1
+            if f.nbytes_left <= 1.0:          # sub-byte residual: done
+                self.loop.after(0.0, f._finish)
+            elif new_rate > 0:
+                v = f.version
+                eta = f.nbytes_left / new_rate
+                self.loop.after(eta, lambda f=f, v=v: self._flow_check(f, v))
+
+    def _flow_check(self, f: Flow, version: int):
+        if f.done or f.version != version:
+            return
+        f._settle(self.loop.now)
+        if f.nbytes_left <= 1.0:
+            f._finish()
+        else:
+            # float drift: reschedule the residual instead of dropping it
+            f.version += 1
+            v = f.version
+            eta = f.nbytes_left / max(f.rate, 1.0)
+            self.loop.after(eta, lambda f=f, v=v: self._flow_check(f, v))
+
+    # ------------------------------------------------------------------
+    # run
+    # ------------------------------------------------------------------
+    def run(self, arrivals: Optional[List[float]] = None,
+            until: float = INF):
+        """arrivals: per-agent start times (None = all at t=0, offline)."""
+        import numpy as np
+        for i, a in enumerate(self.agents):
+            t0 = 0.0 if arrivals is None else arrivals[i]
+            self.loop.at(t0, lambda a=a: self._agent_start(a))
+        self.loop.run(until)
+        return self
+
+    # ------------------------------------------------------------------
+    # agent / request lifecycle
+    # ------------------------------------------------------------------
+    def _agent_start(self, agent: AgentSim):
+        agent.start_t = self.loop.now
+        self._submit_round(agent)
+
+    def _submit_round(self, agent: AgentSim):
+        i = agent.next_round
+        traj = agent.traj
+        if i >= traj.n_rounds:
+            agent.end_t = self.loop.now
+            return
+        rnd = traj.rounds[i]
+        cached = traj.context_before(i)
+        # whole-block hits only (trie granularity)
+        bt = self.cfg.block_tokens
+        cached_blocks = (cached // bt) * bt
+        new_tokens = rnd.append + (cached - cached_blocks)
+        req = Request(rid=next(self._rid), cached_tokens=cached_blocks,
+                      new_tokens=max(new_tokens, 1), gen_tokens=rnd.gen,
+                      arrival=self.loop.now)
+        rs = RoundSim(req, traj, i, agent)
+        rs.submit_t = self.loop.now
+        self.rounds.append(rs)
+        rs.req._sim_round = rs          # backref
+        self.sched.submit(req)
+        self._kick_scheduler()
+
+    def _kick_scheduler(self):
+        if self._sched_pending:
+            return
+        self._sched_pending = True
+        self.loop.after(1e-4, self._sched_tick)
+
+    def _sched_tick(self):
+        self._sched_pending = False
+        # DE admission first (HBM reservation), then PE assignment.
+        for gid, members in self.de_groups.items():
+            if not self.sched.de_private.get(gid) and \
+                    not self.sched.de_global_queue:
+                continue
+            reports = {e.eid: (len(e.active_decode),
+                               sum(r.ctx + r.gen_left for r in e.active_decode),
+                               self.snic[e.node].queue_tokens(self.kv_per_token),
+                               e.kv_capacity_tokens - e.resident_tokens)
+                       for e in members}
+            for asg in self.sched.on_de_fetch(gid, reports):
+                rs = asg.request._sim_round
+                e = self.engines[asg.engine]
+                e.resident_tokens += asg.request.hbm_tokens
+                self._maybe_start_read(rs)
+        for gid, members in self.pe_groups.items():
+            if not self.sched.pe_queue:
+                break
+            reports = {e.eid: (len(e.fifo),
+                               sum(w.remaining for w in e.fifo),
+                               self.snic[e.node].queue_tokens(self.kv_per_token))
+                       for e in members}
+            for asg in self.sched.on_pe_fetch(gid, reports):
+                self._maybe_start_read(asg.request._sim_round)
+
+    def _maybe_start_read(self, rs: RoundSim):
+        req = rs.req
+        if req.pe is None or req.de is None or req.read_path is not None:
+            return
+        if self.cfg.mode == "oracle":
+            req.read_path = "pe"
+            self._read_done(rs)
+            return
+        if self.cfg.mode == "basic":
+            req.read_path = "pe"
+            self.sched.engines[req.pe].read_q += req.cached_tokens
+        else:
+            self.sched.choose_read_path(req)
+        hit_bytes = req.cached_tokens * self.kv_per_token + \
+            self.model.ssm_state_bytes
+        side_engine = req.pe if req.read_path == "pe" else req.de
+        node = side_engine[0]
+        if hit_bytes <= 0:
+            self._read_done(rs)
+            return
+        self.snic[node].enqueue(hit_bytes,
+                                lambda rs=rs: self._read_done(rs),
+                                read=True)
+
+    def _read_done(self, rs: RoundSim):
+        rs.read_done_t = self.loop.now
+        req = rs.req
+        if req.read_path is not None and self.cfg.mode != "oracle":
+            side = req.pe if req.read_path == "pe" else req.de
+            self.sched.on_read_done(side, req.cached_tokens)
+        pe = self.engines[req.pe]
+        pe.fifo.append(PrefillWork(req.rid, req.cached_tokens, req.new_tokens))
+        rs.prefill_left = req.new_tokens
+        if self.cfg.layerwise:
+            # layerwise streaming + PD transfer legs overlap the prefill
+            self._launch_transfer_flows(rs)
+        self._wake_pe_group(pe.group)
+        self._kick_scheduler()
+
+    # ------------------------------------------------------------------
+    # transfer flows (loading plans, minus the storage leg handled above)
+    # ------------------------------------------------------------------
+    def _resmap(self, req: Request):
+        (pn, pr), (dn, dr) = req.pe, req.de
+        return {
+            "pe_snic": None, "de_snic": None,  # handled by FIFO server
+            "pe_dram": self.dram[pn], "de_dram": self.dram[dn],
+            "pe_cnic_rd": self.cnic_rd[(pn, pr)],
+            "pe_cnic_wr": self.cnic_wr[(pn, pr)],
+            "de_cnic_rd": self.cnic_rd[(dn, dr)],
+            "de_cnic_wr": self.cnic_wr[(dn, dr)],
+            "net": self.net,
+        }
+
+    def _launch_transfer_flows(self, rs: RoundSim):
+        if self.cfg.mode == "oracle":
+            rs.transfer_done = True
+            return
+        req = rs.req
+        plan_name = req.read_path if self.cfg.mode == "dualpath" else "basic"
+        hit = req.cached_tokens * self.kv_per_token
+        miss = req.new_tokens * self.kv_per_token
+        legs = [l for l in PLANS[plan_name](hit, miss, 0)
+                if l.layerwise]
+        rmap = self._resmap(req)
+        pending = [len(legs)]
+        if not legs:
+            rs.transfer_done = True
+            return
+
+        def leg_done():
+            pending[0] -= 1
+            if pending[0] == 0:
+                rs.transfer_done = True
+                self._maybe_to_decode(rs)
+
+        for leg in legs:
+            Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done)
+
+    # ------------------------------------------------------------------
+    # PE group stepping
+    # ------------------------------------------------------------------
+    def _wake_pe_group(self, gid: int):
+        if self._pe_stepping[gid]:
+            return
+        self._pe_stepping[gid] = True
+        self.loop.after(0.0, lambda: self._pe_step(gid))
+
+    def _pe_step(self, gid: int):
+        members = self.pe_groups[gid]
+        if not any(e.fifo for e in members):
+            self._pe_stepping[gid] = False
+            return
+        t_max, attns = 0.0, []
+        work: List[Tuple[_EngineSim, list]] = []
+        kv_cap = None
+        if not self.cfg.layerwise and self.kv_per_token:
+            kv_cap = int(self.cfg.node.gpu.hbm_bytes * self.cfg.kv_hbm_frac /
+                         self.kv_per_token)
+        for e in members:
+            batch = e.packer.pack(e.fifo)
+            if batch and kv_cap is not None:
+                # without layerwise prefill the whole batch's prompt KV
+                # must reside in HBM: truncate to capacity (>=1 item)
+                kept, resid = [], 0
+                for bi in batch:
+                    resid += bi.cached + bi.bsz
+                    if kept and resid > kv_cap:
+                        # push back unprocessed work
+                        e.fifo.insert(0, PrefillWork(bi.rid, bi.cached,
+                                                     bi.bsz))
+                        continue
+                    kept.append(bi)
+                batch = kept
+            if not batch:
+                attns.append(0.0)
+                continue
+            items = [(bi.cached, bi.bsz) for bi in batch]
+            a_fl = attn_flops_sim(self.model, items)
+            lin = self.model.linear_flops_per_token() * \
+                sum(b for _, b in items)
+            eff = self.cfg.node.gpu.flops * self.cfg.node.gpu.mfu_prefill
+            t_e = (a_fl + lin) / eff
+            attns.append(a_fl / eff)
+            t_max = max(t_max, t_e)
+            work.append((e, batch))
+        pos = [a for a in attns if a > 0]
+        if pos and len(pos) > 1:
+            self.attn_balance.append((self.loop.now,
+                                      max(pos) / (sum(pos) / len(pos))))
+        if t_max <= 0:
+            self._pe_stepping[gid] = False
+            return
+        self.loop.after(t_max, lambda: self._pe_step_done(gid, work))
+
+    def _pe_step_done(self, gid, work):
+        for e, batch in work:
+            for bi in batch:
+                rs = self._round_by_rid(bi.rid)
+                rs.prefill_left -= bi.bsz
+                self.prompt_tokens_done += bi.bsz
+                if rs.prefill_left <= 0 and rs.prefill_done_t < 0:
+                    rs.prefill_done_t = self.loop.now
+                    self.sched.on_request_done(rs.req.pe, rs.req)
+                    if not self.cfg.layerwise and not rs.transfer_done:
+                        # no layerwise streaming: transfers run after the
+                        # forward pass instead of overlapping it
+                        self._launch_transfer_flows(rs)
+                    self._maybe_to_decode(rs)
+        self.tps_samples.append((self.loop.now, self.prompt_tokens_done,
+                                 self.gen_tokens_done))
+        # keep stepping
+        self._pe_stepping[gid] = False
+        self._wake_pe_group(gid)
+        self._kick_scheduler()
+
+    def _round_by_rid(self, rid):
+        return self.rounds[rid]
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _maybe_to_decode(self, rs: RoundSim):
+        if rs.prefill_done_t < 0 or not rs.transfer_done or rs.h2d_done:
+            return
+        if self.cfg.mode == "oracle":
+            self._h2d_done(rs)
+            return
+        req = rs.req
+        full = req.prompt_tokens * self.kv_per_token
+        rmap = self._resmap(req)
+        (dn, dr) = req.de
+        Flow(self, full,
+             [self.cnic_rd[(dn, dr)], self.cnic_wr[(dn, dr)], self.dram[dn]],
+             lambda: self._h2d_done(rs))
+
+    def _h2d_done(self, rs: RoundSim):
+        rs.h2d_done = True
+        e = self.engines[rs.req.de]
+        e.active_decode.append(rs)
+        self._wake_de_group(e.group)
+
+    def _wake_de_group(self, gid: int):
+        if self._de_stepping[gid]:
+            return
+        self._de_stepping[gid] = True
+        self.loop.after(0.0, lambda: self._de_step(gid))
+
+    def _de_step(self, gid: int):
+        members = self.de_groups[gid]
+        active = [e for e in members if e.active_decode]
+        if not active:
+            self._de_stepping[gid] = False
+            return
+        # block length: 1 until every new seq has emitted its 2nd token
+        block = self.cfg.decode_block
+        if any(r.tokens_out < 2 for e in active for r in e.active_decode):
+            block = 1
+        block = min(block, min(r.gen_left for e in active
+                               for r in e.active_decode))
+        gpu = self.cfg.node.gpu
+        t_max = 0.0
+        for e in active:
+            kv_bytes = sum(self.model.decode_step_bytes(r.ctx)
+                           for r in e.active_decode)
+            w_bytes = self.model.active_param_bytes_resident(
+                self.de_group_size)
+            step_bytes = kv_bytes + w_bytes
+            step_flops = sum(self.model.decode_step_flops(r.ctx)
+                             for r in e.active_decode)
+            t_step = max(step_bytes / (gpu.hbm_bw * gpu.mbu_decode),
+                         step_flops / (gpu.flops * gpu.mfu_prefill))
+            t_max = max(t_max, t_step * block)
+        self.loop.after(t_max, lambda: self._de_step_done(gid, block))
+
+    def _de_step_done(self, gid: int, block: int):
+        members = self.de_groups[gid]
+        persist_bytes: Dict[int, int] = defaultdict(int)
+        for e in members:
+            done = []
+            for r in e.active_decode:
+                if r.first_decode_t < 0:
+                    r.first_decode_t = self.loop.now
+                r.tokens_out += block
+                if r.tokens_out >= 2 and r.second_token_t < 0:
+                    r.second_token_t = self.loop.now
+                r.gen_left -= block
+                r.ctx += block
+                self.gen_tokens_done += block
+                persist_bytes[e.node] += block * self.kv_per_token
+                if r.gen_left <= 0:
+                    done.append(r)
+            for r in done:
+                e.active_decode.remove(r)
+                e.resident_tokens -= r.req.hbm_tokens
+                self.sched.on_request_done(r.req.de, r.req)
+                r.done_t = self.loop.now
+                r.agent.next_round += 1
+                self._submit_round(r.agent)
+        if self.cfg.mode != "oracle":
+            for node, nb in persist_bytes.items():
+                # miss-token KV persists ride along with generated blocks
+                self.snic[node].enqueue(nb, lambda: None, read=False)
+        self._de_stepping[gid] = False
+        self._wake_de_group(gid)
+        self._kick_scheduler()
+
+    # ------------------------------------------------------------------
+    # metrics
+    # ------------------------------------------------------------------
+    def results(self) -> dict:
+        done_rounds = [r for r in self.rounds if r.done_t >= 0]
+        jcts = [a.end_t - a.start_t for a in self.agents if a.end_t >= 0]
+        ttfts = [r.prefill_done_t - r.submit_t for r in done_rounds]
+        ttsts = [r.second_token_t - r.submit_t for r in done_rounds
+                 if r.second_token_t >= 0]
+        tpots = [(r.done_t - r.first_decode_t) / max(r.req.gen_tokens - 1, 1)
+                 for r in done_rounds if r.req.gen_tokens > 1]
+        import numpy as np
+        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else float("nan")
+        mean = lambda xs: float(np.mean(xs)) if xs else float("nan")
+        return dict(
+            finished_agents=len(jcts),
+            finished_rounds=len(done_rounds),
+            jct_mean=mean(jcts), jct_max=max(jcts) if jcts else float("nan"),
+            ttft_mean=mean(ttfts), ttft_p99=pct(ttfts, 99),
+            ttst_mean=mean(ttsts), tpot_mean=mean(tpots),
+            tpot_p99=pct(tpots, 99),
+            sim_time=self.loop.now,
+            prompt_tokens=self.prompt_tokens_done,
+            gen_tokens=self.gen_tokens_done,
+        )
+
+
+class _FifoNic:
+    """Per-node storage NIC: serial FIFO server with byte accounting."""
+
+    def __init__(self, sim: Sim, node: int, bw: float):
+        self.sim = sim
+        self.node = node
+        self.bw = bw
+        self.queue: deque = deque()
+        self.busy = False
+        self.queued_bytes = 0
+        self.total_bytes = 0
+        self.samples: List[Tuple[float, float]] = []   # (t_done, bytes)
+
+    def queue_tokens(self, kv_per_token: float) -> int:
+        if kv_per_token <= 0:
+            return 0
+        return int(self.queued_bytes / kv_per_token)
+
+    def enqueue(self, nbytes: float, on_done, read=True):
+        self.queue.append((nbytes, on_done))
+        self.queued_bytes += nbytes
+        if not self.busy:
+            self._serve()
+
+    def _serve(self):
+        if not self.queue:
+            self.busy = False
+            return
+        self.busy = True
+        nbytes, cb = self.queue.popleft()
+        dt = nbytes / self.bw
+
+        def done():
+            self.queued_bytes -= nbytes
+            self.total_bytes += nbytes
+            self.samples.append((self.sim.loop.now, nbytes))
+            cb()
+            self._serve()
+
+        self.sim.loop.after(dt, done)
+
+
+class _SimPacker(QuotaPacker):
+    def __init__(self, model: ModelSimSpec, time_model: AttnTimeModel,
+                 quota_s: float):
+        self.model = model
+        self.time_model = time_model
+        self.quota_s = quota_s
+        self.min_chunk = 16
+
+    def predict_batch_seconds(self, items) -> float:
+        return self.time_model.seconds(attn_flops_sim(self.model, items))
+
+
+def attn_flops_sim(model: ModelSimSpec, items) -> float:
+    tot = 0.0
+    for cached, bsz in items:
+        a = 4.0 * model.n_layers * model.n_heads * model.qk_head_dim * \
+            bsz * (cached + (bsz + 1) / 2.0)
+        if model.sparse_topk:
+            a = min(a, 4.0 * model.n_layers * model.n_heads *
+                    model.qk_head_dim * bsz * model.sparse_topk)
+        tot += a
+    return tot

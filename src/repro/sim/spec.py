@@ -1,0 +1,147 @@
+"""Hardware / model / workload specs for the cluster simulator.
+
+Two built-in hardware profiles:
+* ``hopper_node``  — the paper's testbed (8 GPUs, 8×400 Gb CNIC,
+  1×400 Gb SNIC, ~500 GB/s DRAM); used for paper-reproduction numbers.
+* ``tpu_v5e_host`` — the TPU adaptation target (4 chips/host, shared
+  host NIC, 819 GB/s HBM, 197 TFLOP/s bf16); used for the adapted runs
+  recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.analysis import ClusterSpec
+
+
+@dataclass(frozen=True)
+class GPUSpec:
+    flops: float                 # effective dense FLOP/s for inference dtype
+    hbm_bw: float                # bytes/s
+    hbm_bytes: float
+    mfu_prefill: float = 0.55    # achievable fraction during prefill
+    mbu_decode: float = 0.70     # achievable HBM-bandwidth fraction in decode
+
+
+@dataclass(frozen=True)
+class NodeSpec:
+    g: int                       # engines per node
+    cnic_bw: float               # per-engine compute-NIC bandwidth [B/s]
+    snic_bw: float               # per-node storage-NIC bandwidth [B/s]
+    dram_bw: float               # per-node DRAM bandwidth [B/s]
+    gpu: GPUSpec = field(default_factory=lambda: HOPPER_GPU)
+
+    def cluster_spec(self) -> ClusterSpec:
+        return ClusterSpec(g=self.g, B=self.cnic_bw,
+                           s=self.snic_bw / self.cnic_bw, M=self.dram_bw)
+
+
+HOPPER_GPU = GPUSpec(flops=990e12, hbm_bw=3.35e12, hbm_bytes=80e9)
+TPU_V5E = GPUSpec(flops=197e12, hbm_bw=819e9, hbm_bytes=16e9,
+                  mfu_prefill=0.5, mbu_decode=0.75)
+
+# 400 Gbps = 50 GB/s
+HOPPER_NODE = NodeSpec(g=8, cnic_bw=50e9, snic_bw=50e9, dram_bw=500e9,
+                       gpu=HOPPER_GPU)
+TPU_V5E_HOST = NodeSpec(g=4, cnic_bw=45e9, snic_bw=25e9, dram_bw=200e9,
+                        gpu=TPU_V5E)
+
+
+@dataclass(frozen=True)
+class ModelSimSpec:
+    """Analytic per-token quantities the simulator needs."""
+
+    name: str
+    n_layers: int
+    kv_bytes_per_token: int          # loadable KV bytes per context token
+    active_param_bytes: float        # bytes touched per decode step
+    active_params: float             # active parameter count
+    n_heads: int
+    qk_head_dim: int
+    sparse_topk: int = 0             # DSA-style sparse attention (0 = dense)
+    linear_ctx_flops: float = 0.0    # extra FLOPs per (token x ctx-token):
+                                     # DSA lightning-indexer style terms
+    ssm_state_bytes: int = 0
+    total_param_bytes: float = 0.0   # full weight bytes (MoE: all experts)
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, kv_dtype_bytes: int = 2,
+                    param_dtype_bytes: int = 2) -> "ModelSimSpec":
+        qk = cfg.head_dim if cfg.attn_variant != "mla" else (
+            cfg.mla.nope_head_dim + cfg.mla.rope_head_dim)
+        return cls(
+            name=cfg.name,
+            n_layers=cfg.n_layers,
+            kv_bytes_per_token=cfg.kv_bytes_per_token(kv_dtype_bytes),
+            active_param_bytes=cfg.active_param_count() * param_dtype_bytes,
+            active_params=cfg.active_param_count(),
+            n_heads=max(cfg.n_heads, 1),
+            qk_head_dim=max(qk, 1),
+            ssm_state_bytes=cfg.ssm_state_bytes(),
+            total_param_bytes=cfg.param_count() * param_dtype_bytes,
+        )
+
+    def active_param_bytes_resident(self, group_size: int) -> float:
+        """Weight bytes one engine touches per decode step: its shard of
+        the resident weights (decode batches activate ~all experts)."""
+        tot = self.total_param_bytes or self.active_param_bytes
+        return tot / max(group_size, 1)
+
+    # --- compute/IO models -------------------------------------------------
+    def linear_flops_per_token(self) -> float:
+        return 2.0 * self.active_params
+
+    def attn_flops_per_token(self, ctx: int) -> float:
+        """Attention FLOPs for one new token at context length ctx."""
+        eff_ctx = min(ctx, self.sparse_topk) if self.sparse_topk else ctx
+        return (4.0 * self.n_layers * self.n_heads * self.qk_head_dim *
+                eff_ctx + self.linear_ctx_flops * ctx)
+
+    def prefill_flops(self, cached: int, bsz: int) -> float:
+        # append bsz tokens on top of `cached` context
+        lin = self.linear_flops_per_token() * bsz
+        attn = 4.0 * self.n_layers * self.n_heads * self.qk_head_dim * \
+            bsz * (cached + (bsz + 1) / 2.0)
+        if self.sparse_topk:
+            attn = min(attn, 4.0 * self.n_layers * self.n_heads *
+                       self.qk_head_dim * bsz * self.sparse_topk)
+        attn += self.linear_ctx_flops * bsz * (cached + (bsz + 1) / 2.0)
+        return lin + attn
+
+    def decode_step_flops(self, ctx: int) -> float:
+        return self.linear_flops_per_token() + self.attn_flops_per_token(ctx)
+
+    def decode_step_bytes(self, ctx: int) -> float:
+        """HBM bytes touched per decode step per sequence (KV read)."""
+        eff_ctx = min(ctx, self.sparse_topk) if self.sparse_topk else ctx
+        return self.kv_bytes_per_token * eff_ctx + self.ssm_state_bytes
+
+    def cache_compute_ratio(self, ctx: int, append: int) -> float:
+        """GB of KV to load per PFLOP of compute (paper Table 1)."""
+        load = self.kv_bytes_per_token * ctx
+        comp = self.prefill_flops(ctx, append)
+        return (load / 1e9) / (comp / 1e15)
+
+
+# --- the paper's evaluation models (sim-level descriptors) -----------------
+# DS 660B (DeepSeek-V3.2): MLA rank 512 + 64 rope, 61 layers, DSA topk 2048,
+# ~37B active params.  KV fp8 => 576 B/token/layer.
+DS_660B = ModelSimSpec(
+    name="ds660b", n_layers=61,
+    kv_bytes_per_token=61 * (512 + 64),          # fp8 latent
+    active_param_bytes=37e9 * 1,                 # fp8 weights
+    active_params=37e9, n_heads=128, qk_head_dim=192,
+    sparse_topk=2048,
+    total_param_bytes=660e9,
+)
+
+QWEN25_32B = ModelSimSpec(
+    name="qwen2.5-32b", n_layers=64,
+    kv_bytes_per_token=64 * 2 * 8 * 128 * 2,     # GQA kv=8, fp16 (Table 1)
+    active_param_bytes=32.8e9 * 2,
+    active_params=32.8e9, n_heads=40, qk_head_dim=128,
+    total_param_bytes=32.8e9 * 2,
+)

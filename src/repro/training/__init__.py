@@ -1,0 +1,6 @@
+from repro.training.data import SyntheticLM, TrajectoryLM
+from repro.training.optimizer import (adafactor_init, adafactor_update,
+                                      adamw_init, adamw_update,
+                                      make_optimizer)
+from repro.training.schedules import cosine, wsd
+from repro.training.train import loss_fn, make_train_step

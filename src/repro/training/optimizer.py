@@ -1,0 +1,128 @@
+"""Optimizers: AdamW and Adafactor, with configurable state dtype.
+
+Optimizer state is a pytree mirroring the params, so it inherits the
+parameter sharding (FSDP-sharded params ⇒ FSDP-sharded moments): that is
+what lets the llama4-maverick train_4k cell fit 16 GB/chip (DESIGN.md §4
+— Adafactor + bf16 accumulators there).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params, state_dtype: str = "float32") -> Dict:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1) -> Tuple[Tree, Dict]:
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        u = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * u
+        return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    newp = jax.tree.map(lambda t3: t3[0], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newm = jax.tree.map(lambda t3: t3[1], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    newv = jax.tree.map(lambda t3: t3[2], flat,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return newp, {"m": newm, "v": newv, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment for >=2D params)
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params, state_dtype: str = "float32") -> Dict:
+    dt = jnp.dtype(state_dtype)
+
+    def init(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], dt),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)}
+        return {"v": jnp.zeros(p.shape, dt)}
+
+    return {"fac": jax.tree.map(init, params,
+                                is_leaf=lambda x: hasattr(x, "ndim")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, *, lr, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - jnp.power(t, -decay)
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if p.ndim >= 2:
+            vr = s["vr"].astype(jnp.float32) * beta2 + \
+                jnp.mean(g2, axis=-1) * (1 - beta2)
+            vc = s["vc"].astype(jnp.float32) * beta2 + \
+                jnp.mean(g2, axis=-2) * (1 - beta2)
+            denom = jnp.sqrt(
+                vr[..., None] / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                * vc[..., None, :])
+            u = g32 / jnp.maximum(denom, 1e-30)
+            news = {"vr": vr.astype(s["vr"].dtype),
+                    "vc": vc.astype(s["vc"].dtype)}
+        else:
+            v = s["v"].astype(jnp.float32) * beta2 + g2 * (1 - beta2)
+            u = g32 / jnp.sqrt(v + 1e-30)
+            news = {"v": v.astype(s["v"].dtype)}
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        newp = p.astype(jnp.float32) - lr * (u + weight_decay *
+                                             p.astype(jnp.float32))
+        return newp.astype(p.dtype), news
+
+    is_state_leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    pairs = jax.tree.map(upd, params, grads, state["fac"],
+                         is_leaf=lambda x: hasattr(x, "ndim"))
+    # pairs has tuples at param leaves
+    is_pair = lambda x: isinstance(x, tuple)
+    newp = jax.tree.map(lambda pr: pr[0], pairs, is_leaf=is_pair)
+    news = jax.tree.map(lambda pr: pr[1], pairs, is_leaf=is_pair)
+    return newp, {"fac": news, "step": step}
+
+
+def make_optimizer(name: str, state_dtype: str = "float32"):
+    if name == "adamw":
+        return (partial(adamw_init, state_dtype=state_dtype), adamw_update)
+    if name == "adafactor":
+        return (partial(adafactor_init, state_dtype=state_dtype),
+                adafactor_update)
+    raise ValueError(name)

@@ -1,0 +1,72 @@
+"""Training step: microbatched gradient accumulation + per-layer remat.
+
+``make_train_step(cfg)`` builds the jit-able step the dry-run lowers for
+the train_4k cells: batch (global_batch, seq) int32 tokens; loss is
+next-token cross-entropy; gradients accumulate over
+``cfg.microbatches_train_4k`` microbatches via lax.scan so activation
+residency is one microbatch deep (the 400 B llama4 cell fits 16 GB/chip
+this way — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, lm_loss
+from repro.training.optimizer import make_optimizer
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, moe_impl: str = "ragged",
+            remat="full"):
+    """batch: {'tokens': (b, s)} for token LMs (causal shift internally)
+    or {'inputs': (b, s, frontend_dim), 'labels': (b, s)} for stubbed-
+    frontend archs (llava/hubert)."""
+    if "tokens" in batch:
+        inputs, labels = batch["tokens"][:, :-1], batch["tokens"][:, 1:]
+    else:
+        inputs, labels = batch["inputs"], batch["labels"]
+    logits, _ = forward(params, cfg, inputs, remat=remat, moe_impl=moe_impl)
+    return lm_loss(logits, labels)
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
+                    moe_impl: str = "ragged",
+                    n_microbatches: int | None = None,
+                    remat="full"):
+    """Returns (init_fn(params)->opt_state, train_step)."""
+    opt_init, opt_update = make_optimizer(cfg.optimizer, cfg.opt_state_dtype)
+    n_micro = n_microbatches or cfg.microbatches_train_4k
+
+    def train_step(params, opt_state, batch):
+        if not isinstance(batch, dict):
+            batch = {"tokens": batch}
+        gb = jax.tree.leaves(batch)[0].shape[0]
+        assert gb % n_micro == 0, (gb, n_micro)
+        mb = gb // n_micro
+        micro = jax.tree.map(
+            lambda a: a.reshape((n_micro, mb) + a.shape[1:]), batch)
+
+        grad_fn = jax.value_and_grad(
+            lambda p, mbatch: loss_fn(p, cfg, mbatch, moe_impl=moe_impl,
+                                      remat=remat))
+
+        def body(carry, mbatch):
+            loss_acc, grads_acc = carry
+            loss, grads = grad_fn(params, mbatch)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(a.dtype), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros),
+                                            micro)
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        new_params, new_opt = opt_update(params, grads, opt_state, lr=lr)
+        return new_params, new_opt, loss_sum / n_micro
+
+    return opt_init, train_step

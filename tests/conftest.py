@@ -1,0 +1,23 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
+# the single real CPU device; only launch/dryrun.py forces 512 devices.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    # the suite compiles hundreds of XLA programs; on the CPU backend the
+    # LLVM JIT memory is never returned, so long single-process runs OOM
+    # ("Cannot allocate memory" in execution_engine) — clear per module
+    yield
+    jax.clear_caches()

@@ -1,0 +1,89 @@
+"""Bottleneck-free analysis (paper §4.2) — exact paper numbers + properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analysis import (ClusterSpec, bottleneck_free_range,
+                                 is_bottleneck_free, link_utilisation,
+                                 max_aggregate_load_bw, pair_traffic,
+                                 safe_pd_splits)
+
+
+def test_paper_range():
+    """Paper: for (g=8, s=1, M≈500 GB/s, Bs≈50 GB/s): 1/7 ≤ P/D ≤ 7/2."""
+    spec = ClusterSpec(g=8, B=50e9, s=1.0, M=500e9)
+    lo, hi = bottleneck_free_range(spec)
+    assert math.isclose(lo, 1 / 7)
+    assert math.isclose(hi, 3.5)
+
+
+def test_eq9_terms():
+    """hi = min{(g-2s)/s, (g-s)/2s, (M/Bs-3)/2} — each term correct."""
+    spec = ClusterSpec(g=8, B=50e9, s=1.0, M=500e9)
+    assert math.isclose((spec.g - 2 * spec.s) / spec.s, 6.0)
+    assert math.isclose((spec.g - spec.s) / (2 * spec.s), 3.5)
+    assert math.isclose((spec.M / (spec.B * spec.s) - 3) / 2, 3.5)
+
+
+def test_paper_default_deployments_are_safe():
+    spec = ClusterSpec()
+    for P, D in [(2, 4), (1, 2), (1, 1), (2, 1), (1, 2), (48, 96), (44, 88)]:
+        ok, worst = is_bottleneck_free(P, D, spec)
+        assert ok, (P, D, worst, link_utilisation(P, D, spec))
+
+
+def test_outside_range_binds():
+    spec = ClusterSpec()
+    ok, worst = is_bottleneck_free(8, 1, spec)     # P/D = 8 > 3.5
+    assert not ok
+    ok, _ = is_bottleneck_free(1, 8, spec)         # P/D = 1/8 < 1/7
+    assert not ok
+
+
+@given(P=st.integers(1, 64), D=st.integers(1, 64),
+       g=st.integers(2, 16), s_frac=st.floats(0.25, 1.0))
+@settings(max_examples=200, deadline=None)
+def test_utilisation_matches_range(P, D, g, s_frac):
+    """Eq.1–8 utilisations ≤ 1 ⟺ P/D inside the Eq.9 range (up to the
+    always-true read constraint)."""
+    spec = ClusterSpec(g=g, B=50e9, s=s_frac, M=500e9)
+    lo, hi = bottleneck_free_range(spec)
+    util = link_utilisation(P, D, spec)
+    inside = lo - 1e-9 <= P / D <= hi + 1e-9
+    # pe_cnic_read is bottleneck-free whenever s <= g (always here)
+    assert util["pe_cnic_read"] <= 1 + 1e-9
+    constrained = {k: v for k, v in util.items() if k != "pe_cnic_read"}
+    if inside:
+        assert max(constrained.values()) <= 1 + 1e-6, constrained
+    else:
+        assert max(constrained.values()) > 1 - 1e-6, constrained
+
+
+def test_aggregate_bandwidth_equivalences():
+    """§7.3: Basic 2P1D == DualPath 1P1D == 2 SNICs of load bandwidth."""
+    spec = ClusterSpec()
+    assert max_aggregate_load_bw(2, 1, spec, dualpath=False) == \
+        max_aggregate_load_bw(1, 1, spec, dualpath=True)
+    assert max_aggregate_load_bw(2, 1, spec, dualpath=True) == \
+        max_aggregate_load_bw(1, 2, spec, dualpath=True)
+
+
+def test_safe_splits_elastic():
+    spec = ClusterSpec()
+    splits = safe_pd_splits(6, spec)
+    assert (2, 4) in splits and (3, 3) in splits
+    for P, D in splits:
+        assert is_bottleneck_free(P, D, spec)[0]
+
+
+@given(P=st.integers(1, 32), D=st.integers(1, 32))
+@settings(max_examples=100, deadline=None)
+def test_pair_traffic_saturates_snics(P, D):
+    """Σ pair traffic over all pairs == aggregate storage bandwidth of
+    each side (the loading paths fully drain the NICs they use)."""
+    spec = ClusterSpec()
+    T_p, T_c = pair_traffic(P, D, spec)
+    n_pairs = P * spec.g * D * spec.g
+    assert math.isclose(T_p * n_pairs, P * spec.snic_bw, rel_tol=1e-9)
+    assert math.isclose(T_c * n_pairs, D * spec.snic_bw, rel_tol=1e-9)

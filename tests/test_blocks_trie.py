@@ -1,0 +1,100 @@
+"""Block layouts (§A.5) + trie store properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.blocks import (BlockLayout, full_from_layer_blocks,
+                               layer_blocks_from_full, layout_for,
+                               pack_kv_to_blocks, unpack_blocks_to_kv)
+from repro.kvcache.trie import BlockTrie
+
+
+def test_layer_full_roundtrip():
+    lay = BlockLayout(n_layers=4, block_tokens=8, bytes_per_token_layer=16)
+    full = np.random.default_rng(0).integers(
+        0, 255, lay.full_block_shape(), dtype=np.uint8)
+    layers = layer_blocks_from_full(full)
+    assert all(lb.shape == lay.layer_block_shape() for lb in layers)
+    re = full_from_layer_blocks(layers)
+    np.testing.assert_array_equal(re, full)
+
+
+@given(tokens=st.integers(0, 1000))
+@settings(max_examples=50, deadline=None)
+def test_whole_block_persistence(tokens):
+    """Only whole blocks persist (paper: per accumulated 64-token block)."""
+    lay = BlockLayout(n_layers=2, block_tokens=64, bytes_per_token_layer=4)
+    kv = np.zeros((2, tokens, 4), np.uint8)
+    blocks = pack_kv_to_blocks(kv, lay)
+    assert len(blocks) == tokens // 64
+    back = unpack_blocks_to_kv(blocks, lay)
+    assert back.shape[1] == (tokens // 64) * 64
+
+
+def test_layout_for_known_archs():
+    assert layout_for(get_config("llava-next-34b")).bytes_per_token_layer \
+        == 2 * 8 * 128 * 2
+    assert layout_for(get_config("ds27b")).bytes_per_token_layer == \
+        (512 + 64) * 2
+    assert layout_for(get_config("mamba2-1.3b")).bytes_per_token_layer == 0
+    # zamba2: 9 shared-attention applications carry the per-token KV
+    assert layout_for(get_config("zamba2-2.7b")).n_layers == 9
+
+
+# ---------------------------------------------------------------------------
+# trie
+# ---------------------------------------------------------------------------
+
+
+def test_trie_match_insert():
+    t = BlockTrie(block_tokens=4)
+    toks = list(range(16))
+    assert t.match(toks) == (0, [])
+    ins = t.insert(toks, [101, 102, 103, 104])
+    assert ins == [101, 102, 103, 104]
+    hit, refs = t.match(toks + [99, 98])
+    assert hit == 16 and refs == [101, 102, 103, 104]
+    # diverging suffix hits only the shared prefix
+    hit, refs = t.match(toks[:8] + [55] * 8)
+    assert hit == 8 and refs == [101, 102]
+
+
+@given(st.data())
+@settings(max_examples=50, deadline=None)
+def test_trie_properties(data):
+    bt = data.draw(st.integers(1, 8))
+    t = BlockTrie(block_tokens=bt)
+    ref_counter = [0]
+
+    def fresh_refs(n):
+        out = list(range(ref_counter[0], ref_counter[0] + n))
+        ref_counter[0] += n
+        return out
+
+    seqs = data.draw(st.lists(
+        st.lists(st.integers(0, 3), min_size=0, max_size=40),
+        min_size=1, max_size=10))
+    for s in seqs:
+        n_blocks = len(s) // bt
+        t.insert(s, fresh_refs(n_blocks))
+    for s in seqs:
+        hit, refs = t.match(s)
+        # inserted sequences always fully hit their whole-block prefix
+        assert hit == (len(s) // bt) * bt
+        assert len(refs) == hit // bt
+        # hit is monotone: prefixes hit at least as much (up to their length)
+        half = s[:len(s) // 2]
+        h2, _ = t.match(half)
+        assert h2 == (len(half) // bt) * bt
+
+
+def test_trie_lru_eviction():
+    t = BlockTrie(block_tokens=2)
+    t.insert([1, 2, 3, 4], [1, 2])
+    t.insert([1, 2, 9, 9], [3])
+    t.match([1, 2, 3, 4])          # touch the 3,4 branch
+    evicted = t.evict_lru(1)
+    assert evicted == [3]          # LRU leaf was the untouched 9,9 block
+    hit, _ = t.match([1, 2, 9, 9])
+    assert hit == 2

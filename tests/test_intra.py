@@ -1,0 +1,74 @@
+"""Intra-engine compute-quota packing (§6.2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.intra import (AttnTimeModel, PrefillWork, QuotaPacker,
+                              attn_flops)
+
+CFG = get_config("qwen1.5-0.5b")
+TM = AttnTimeModel(effective_flops=1e12, base_overhead_s=0.0)
+
+
+def packer(quota=0.3):
+    return QuotaPacker(CFG, TM, quota_s=quota, min_chunk=16)
+
+
+def test_pack_respects_quota():
+    p = packer(quota=0.050)
+    fifo = [PrefillWork(i, 30_000, 2000) for i in range(8)]
+    batch = p.pack(fifo)
+    assert batch
+    assert p.predict_batch_seconds([(b.cached, b.bsz) for b in batch]) \
+        <= p.quota_s + 1e-9
+
+
+def test_chunked_prefill_binary_search():
+    p = packer(quota=1.0)      # fits ~100 tokens at 100k context
+    fifo = [PrefillWork(0, 100_000, 50_000)]
+    batch = p.pack(fifo)
+    assert len(batch) == 1 and batch[0].chunked
+    bsz = batch[0].bsz
+    # maximality: bsz+1 would exceed the quota
+    assert p.predict_batch_seconds([(100_000, bsz)]) <= p.quota_s
+    assert p.predict_batch_seconds([(100_000, bsz + 1)]) > p.quota_s
+    # fifo head advanced, not removed
+    assert fifo and fifo[0].remaining == 50_000 - bsz
+
+
+def test_fifo_order():
+    p = packer(quota=1000.0)
+    fifo = [PrefillWork(i, 10, 100) for i in range(5)]
+    batch = p.pack(fifo)
+    assert [b.rid for b in batch] == [0, 1, 2, 3, 4]
+    assert fifo == []
+
+
+@given(quota=st.floats(0.001, 1.0),
+       works=st.lists(st.tuples(st.integers(0, 100_000),
+                                st.integers(1, 10_000)),
+                      min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_property_quota_never_exceeded(quota, works):
+    p = packer(quota=quota)
+    fifo = [PrefillWork(i, c, b) for i, (c, b) in enumerate(works)]
+    batch = p.pack(fifo)
+    if batch:
+        t = p.predict_batch_seconds([(b.cached, b.bsz) for b in batch])
+        assert t <= quota + 1e-9
+        for b in batch:
+            assert b.bsz >= 1
+
+
+def test_time_model_fit():
+    m = AttnTimeModel(effective_flops=2e12, base_overhead_s=1e-4)
+    samples = [(f, m.seconds(f)) for f in (1e9, 5e9, 2e10, 1e11)]
+    fit = AttnTimeModel.fit(samples)
+    assert abs(fit.effective_flops - 2e12) / 2e12 < 1e-6
+    assert abs(fit.base_overhead_s - 1e-4) < 1e-8
+
+
+def test_attn_flops_quadratic_in_context():
+    f1 = attn_flops(CFG, [(1000, 100)])
+    f2 = attn_flops(CFG, [(2000, 100)])
+    assert f2 > f1 * 1.9

@@ -1,0 +1,60 @@
+"""Loading plans (Fig. 4) must reproduce the §4.2 per-resource coefficients."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.loading import (basic_plan, de_read_plan, oracle_plan,
+                                pe_read_plan, resource_bytes)
+
+
+@given(hit=st.integers(0, 10**9), miss=st.integers(0, 10**7),
+       gen=st.integers(0, 10**7))
+@settings(max_examples=100, deadline=None)
+def test_pe_plan_matches_eq_coefficients(hit, miss, gen):
+    """PE-read path: PE CNIC reads 2×T_p (Eq.1: paths 3 and 5), DE CNIC
+    writes 2×T_p (Eq.6: paths 7 and 9), DE CNIC reads T_p (Eq.4: path 8)
+    — with hit ≈ full (99% hit rate) the plan's per-resource sums follow
+    exactly these multiplicities."""
+    full = hit + miss
+    rb = resource_bytes(pe_read_plan(hit, miss, gen))
+    assert rb.get("pe_snic", 0) == hit                       # storage read
+    assert rb.get("pe_cnic_rd", 0) == hit + full             # paths 3+5
+    assert rb.get("pe_cnic_wr", 0) == hit                    # path 4
+    persist = miss + gen
+    assert rb.get("de_cnic_wr", 0) == full + full + persist  # paths 7+9(+persist)
+    assert rb.get("de_cnic_rd", 0) == full + persist         # path 8
+    assert rb.get("de_snic", 0) == persist
+
+
+@given(hit=st.integers(0, 10**9), miss=st.integers(0, 10**7),
+       gen=st.integers(0, 10**7))
+@settings(max_examples=100, deadline=None)
+def test_de_plan_matches_eq_coefficients(hit, miss, gen):
+    """DE-read path: DE CNIC reads 2×T_c (Eq.4: paths 3/6), PE CNIC
+    writes T_c (Eq.2: path 5), DE CNIC writes T_c (Eq.6: path 7)."""
+    full = hit + miss
+    rb = resource_bytes(de_read_plan(hit, miss, gen))
+    persist = miss + gen
+    assert rb.get("de_snic", 0) == hit + persist   # read + block persists
+    assert rb.get("de_cnic_rd", 0) == hit + full + persist   # paths 3+6
+    assert rb.get("pe_cnic_wr", 0) == hit                    # path 5
+    assert rb.get("de_cnic_wr", 0) == miss + full + persist  # path 7 (+miss merge)
+    assert rb.get("pe_cnic_rd", 0) == miss                   # miss-back
+
+
+def test_oracle_plan_empty():
+    assert oracle_plan(10**9, 10**6, 10**6) == []
+
+
+def test_basic_plan_pe_only_storage():
+    rb = resource_bytes(basic_plan(1000, 10, 5))
+    assert "de_snic" in rb and rb["de_snic"] == 15   # only persists
+    assert rb["pe_snic"] == 1000                     # all loads on PE side
+
+
+def test_layerwise_legs_marked():
+    plan = pe_read_plan(1000, 10, 5)
+    lw = [l.name for l in plan if l.layerwise]
+    assert "pe_buf_to_pe_hbm" in lw and "pe_hbm_to_de_buf" in lw
+    assert all(not l.layerwise for l in plan if l.phase == "load")

@@ -1,0 +1,69 @@
+"""Correctness of the §Perf hillclimb variants (EXPERIMENTS.md §Perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_decode_state, init_params
+from repro.models.model import decode_step
+from repro.models.moe import moe_ffn
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "gemma2-2b",
+                                  "llava-next-34b"])
+def test_decode_cache_carry_bitexact(arch):
+    """cache_mode='carry' (in-place scan carry) == scan_xs, bitwise."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, KEY)
+    b = 2
+    st1 = init_decode_state(cfg, b, 16)
+    st2 = init_decode_state(cfg, b, 16)
+    toks = jnp.array([3, 5], jnp.int32)
+    for i in range(5):
+        lengths = jnp.full((b,), i, jnp.int32)
+        l1, st1 = decode_step(params, cfg, toks, st1, lengths)
+        l2, st2 = decode_step(params, cfg, toks, st2, lengths,
+                              cache_mode="carry")
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    for a, c in zip(jax.tree.leaves(st1), jax.tree.leaves(st2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def _moe_fixture():
+    cfg = get_config("granite-moe-3b-a800m").reduced()
+    params = init_params(cfg, KEY)
+    p = jax.tree.map(lambda a: a[0], params["super_blocks"]["moe"])["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 16, cfg.d_model),
+                          jnp.float32)
+    return cfg, p, x
+
+
+def test_moe_dense_matches_ragged():
+    """dense all-experts == dropless ragged (exact routing, no capacity)."""
+    cfg, p, x = _moe_fixture()
+    y1 = moe_ffn(p, cfg, x, impl="ragged")
+    y2 = moe_ffn(p, cfg, x, impl="dense")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+
+
+def test_moe_ep_local_matches_ragged_without_drops():
+    cfg, p, x = _moe_fixture()
+    y1 = moe_ffn(p, cfg, x, impl="ragged")
+    y2 = moe_ffn(p, cfg, x, impl="ep_local", capacity_factor=1000.0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+
+
+def test_remat_policies_equivalent_loss():
+    from repro.training import make_train_step
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    batch = jax.random.randint(KEY, (2, 17), 0, cfg.vocab_size)
+    losses = []
+    for remat in ("full", "dots", False):
+        opt_init, ts = make_train_step(cfg, n_microbatches=1, remat=remat)
+        _, _, loss = ts(params, opt_init(params), batch)
+        losses.append(float(loss))
+    assert max(losses) - min(losses) < 1e-3, losses

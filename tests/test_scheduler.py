@@ -1,0 +1,207 @@
+"""Inter-engine scheduler (§6.1, Algorithm 1) — behaviour + invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
+
+
+def mk_sched(alpha=100, beta=1000, n_pe=3, n_de=3, **kw):
+    s = Scheduler(alpha=alpha, beta=beta, **kw)
+    for i in range(n_pe):
+        s.register_engine((i, 0), node=i, kind="pe", group=0)
+    for j in range(n_de):
+        st_ = s.register_engine((10 + j, 0), node=10 + j, kind="de",
+                                group=1000)
+        st_.free_hbm_tokens = 10_000
+    return s
+
+
+def reqs(*sizes, gen=10):
+    return [Request(rid=i, cached_tokens=s, new_tokens=10, gen_tokens=gen)
+            for i, s in enumerate(sizes)]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def test_alg1_prefers_short_read_queue():
+    s = mk_sched(alpha=100)
+    s.engines[(0, 0)].read_q = 500     # C3: long read queue
+    s.engines[(1, 0)].read_q = 50      # C2
+    s.engines[(2, 0)].read_q = 40      # C2, higher tok
+    s.engines[(2, 0)].tok = 100
+    for r in reqs(100):
+        s.submit(r)
+    out = s.on_pe_fetch(0)
+    assert out[0].engine == (1, 0)     # C2 with min tok
+
+
+def test_alg1_skips_overloaded():
+    s = mk_sched(beta=100)
+    s.engines[(0, 0)].tok = 150        # C1: overloaded
+    s.engines[(1, 0)].tok = 150
+    s.engines[(2, 0)].tok = 50
+    for r in reqs(10, 10, 10):
+        s.submit(r)
+    out = s.on_pe_fetch(0)
+    assert all(a.engine == (2, 0) for a in out[:1])
+
+
+def test_alg1_terminates_when_all_overloaded():
+    s = mk_sched(beta=10)
+    for e in s.engines.values():
+        if e.kind == "pe":
+            e.tok = 100
+    for r in reqs(10, 10):
+        s.submit(r)
+    out = s.on_pe_fetch(0)
+    assert out == []
+    assert len(s.pe_queue) == 2        # queue preserved
+
+
+def test_alg1_reclassifies_after_assignment():
+    """An engine pushed over beta by an assignment stops receiving."""
+    s = mk_sched(beta=100, n_pe=2)
+    s.engines[(1, 0)].tok = 90
+    s.engines[(0, 0)].tok = 80
+    for r in reqs(50, 50, 50):        # prompt = cached+new = 60 each
+        s.submit(r)
+    out = s.on_pe_fetch(0)
+    # first -> (0,0) tok 80->140 (overloaded); second -> (1,0) 90->150;
+    # third: no engine left
+    assert [a.engine for a in out] == [(0, 0), (1, 0)]
+    assert len(s.pe_queue) == 1
+
+
+def test_fifo_order_preserved():
+    s = mk_sched()
+    rs = reqs(10, 20, 30, 40)
+    for r in rs:
+        s.submit(r)
+    out = s.on_pe_fetch(0)
+    assert [a.request.rid for a in out] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# DE scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_de_phase1_balances_groups():
+    s = Scheduler(alpha=10, beta=10_000)
+    for j in range(2):
+        for k in range(2):
+            st_ = s.register_engine((j, k), node=j, kind="de", group=j)
+            st_.free_hbm_tokens = 100_000
+    s.engines[(0, 0)].tok = 5000       # group 0 heavily loaded
+    for r in reqs(100, 100, 100, 100):
+        s.submit(r)
+        s.de_global_queue[-1]          # in queue
+    s.de_phase1()
+    # group 1 (empty) should receive more work
+    assert len(s.de_private[1]) >= len(s.de_private[0])
+
+
+def test_de_within_group_hbm_admission():
+    s = mk_sched(n_de=2)
+    for st_ in s.engines.values():
+        if st_.kind == "de":
+            st_.free_hbm_tokens = 100
+    big = Request(rid=0, cached_tokens=500, new_tokens=10, gen_tokens=10)
+    s.submit(big)
+    out = s.on_de_fetch(1000)
+    assert out == []                   # no DE has enough HBM
+    small = Request(rid=1, cached_tokens=10, new_tokens=10, gen_tokens=10)
+    s.submit(small)
+    out = s.on_de_fetch(1000)
+    # FIFO head (big) still blocks the queue — the paper pops from head
+    assert out == []
+
+
+def test_de_prefers_low_token_class_by_seq():
+    s = mk_sched(n_de=3)
+    des = [e for e in s.engines.values() if e.kind == "de"]
+    des[0].tok, des[0].seq = 10, 5
+    des[1].tok, des[1].seq = 20, 1
+    des[2].tok, des[2].seq = 100_000, 0    # will exceed Z
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    s.submit(r)
+    out = s.on_de_fetch(1000)
+    assert out[0].engine == des[1].engine  # min seq among low-token class
+
+
+# ---------------------------------------------------------------------------
+# read-path selection
+# ---------------------------------------------------------------------------
+
+
+def test_read_path_shorter_queue_wins():
+    s = mk_sched()
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.engines[(0, 0)].read_q = 1000
+    s.engines[(10, 0)].read_q = 10
+    assert s.choose_read_path(r) == "de"
+    # the chosen side's queue grows by the request's cached tokens
+    assert s.engines[(10, 0)].read_q == 110
+
+
+def test_read_path_tie_prefers_pe():
+    s = mk_sched()
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    assert s.choose_read_path(r) == "pe"
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+
+
+@given(sizes=st.lists(st.integers(0, 2000), min_size=1, max_size=40),
+       beta=st.integers(100, 5000))
+@settings(max_examples=50, deadline=None)
+def test_property_assignments_complete_and_balanced(sizes, beta):
+    s = mk_sched(alpha=1 << 30, beta=beta)
+    rs = reqs(*sizes)
+    for r in rs:
+        s.submit(r)
+    out = s.on_pe_fetch(0)
+    # every assignment has a PE; FIFO prefix property
+    assert [a.request.rid for a in out] == list(range(len(out)))
+    for a in out:
+        assert a.request.pe is not None
+    # no engine exceeds beta by more than one request's prompt
+    for e in s.engines.values():
+        if e.kind == "pe" and e.tok > beta:
+            assert e.tok - beta <= max(r.prompt_tokens for r in rs)
+
+
+@given(n=st.integers(1, 30))
+@settings(max_examples=30, deadline=None)
+def test_property_de_hbm_never_oversubscribed(n):
+    s = mk_sched(n_de=3)
+    cap = 10_000
+    for r in reqs(*([300] * n)):
+        s.submit(r)
+    out = s.on_de_fetch(1000)
+    used = {}
+    for a in out:
+        used[a.engine] = used.get(a.engine, 0) + a.request.hbm_tokens
+    for e, u in used.items():
+        assert u <= cap
+
+
+def test_round_robin_baseline():
+    s = RoundRobinScheduler(alpha=10, beta=10)
+    for i in range(2):
+        s.register_engine((i, 0), node=i, kind="pe", group=0)
+        st_ = s.register_engine((10 + i, 0), node=10 + i, kind="de",
+                                group=1000)
+        st_.free_hbm_tokens = 10_000
+    for r in reqs(10, 10, 10, 10):
+        s.submit(r)
+    out = s.on_pe_fetch(0)
+    assert [a.engine for a in out] == [(0, 0), (1, 0), (0, 0), (1, 0)]

@@ -1,0 +1,128 @@
+"""End-to-end serving integration: dual-path loading with real KV bytes.
+
+The decisive test: multi-turn generation through the full system (trie
+hits, FullBlock reads on either path, chunked prefill, PD transfer,
+slot-batched decode, block persistence) must produce the SAME tokens as
+a cache-free reference that re-prefills the whole prompt every round.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, forward, init_decode_state, init_params
+from repro.serving import ServingSystem
+from repro.sim.traces import Round, Trajectory
+
+KEY = jax.random.PRNGKey(0)
+
+
+def reference_generate(cfg, params, rounds, rng):
+    """Cache-free oracle: full forward per round, greedy decode."""
+    context = []
+    all_gen = []
+    for rnd in rounds:
+        append = list(rng.integers(2, cfg.vocab_size, size=rnd.append))
+        prompt = context + append
+        toks = jnp.asarray([prompt], jnp.int32)
+        logits, _ = forward(params, cfg, toks)
+        first = int(jnp.argmax(logits[0, -1]))
+        gen = [first]
+        st = init_decode_state(cfg, 1, len(prompt) + rnd.gen + 4)
+        _, st = __import__("repro.models.model", fromlist=["append_step"]) \
+            .append_step(params, cfg, toks, st, jnp.zeros((1,), jnp.int32))
+        cur = first
+        for i in range(rnd.gen - 1):
+            lg, st = decode_step(params, cfg, jnp.asarray([cur], jnp.int32),
+                                 st, jnp.asarray([len(prompt) + i], jnp.int32))
+            cur = int(jnp.argmax(lg[0]))
+            gen.append(cur)
+        all_gen.append(gen)
+        context = prompt + gen
+    return all_gen
+
+
+@pytest.mark.parametrize("mode", ["dualpath", "basic"])
+def test_generation_with_cache_reuse_matches_reference(mode):
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    rounds = [Round(20, 4), Round(13, 3), Round(9, 4)]
+    traj = Trajectory(0, rounds)
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, mode=mode,
+                         block_tokens=16, max_seq=160, de_slots=2, seed=0)
+    sessions = sys_.run_offline([traj])
+    assert sessions[0].rounds_done == 3
+    ref = reference_generate(cfg, params, rounds,
+                             np.random.default_rng(1000))
+    got = []
+    ctx = sessions[0].context
+    # reconstruct per-round gens from the final context? easier: compare
+    # final context suffix — instead regenerate via the recorded sessions
+    # by replaying; simplest strong check: final context equality.
+    ref_context = []
+    rng = np.random.default_rng(1000)
+    for rnd, gen in zip(rounds, ref):
+        append = list(rng.integers(2, cfg.vocab_size, size=rnd.append))
+        ref_context = ref_context + append + gen
+    assert ctx == ref_context, (
+        f"cache-reuse generation diverged from cache-free reference "
+        f"({mode}); first mismatch at "
+        f"{next(i for i, (a, b) in enumerate(zip(ctx, ref_context)) if a != b)}")
+
+
+def test_multi_agent_multi_engine():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    trajs = [Trajectory(i, [Round(18, 3), Round(12, 3)]) for i in range(5)]
+    sys_ = ServingSystem(cfg, params, n_pe=2, n_de=2, mode="dualpath",
+                         block_tokens=16, max_seq=128, de_slots=4, seed=0)
+    sessions = sys_.run_offline(trajs)
+    assert all(s.rounds_done == 2 for s in sessions)
+    st = sys_.stats()
+    assert st["store_reads"] > 0          # round 2 hit the cache
+    assert st["trie_blocks"] > 0
+    assert st["decode_steps"] > 0
+
+
+def test_dualpath_uses_both_sides_under_load():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    trajs = [Trajectory(i, [Round(24, 3), Round(16, 3), Round(8, 3)])
+             for i in range(6)]
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, mode="dualpath",
+                         block_tokens=16, max_seq=160, de_slots=8, seed=0)
+    sys_.run_offline(trajs)
+    st = sys_.stats()
+    assert st["read_bytes_de_side"] > 0, "storage->DE path never used"
+    assert st["read_bytes_pe_side"] > 0
+
+
+def test_basic_mode_never_uses_de_side():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    trajs = [Trajectory(i, [Round(20, 3), Round(12, 3)]) for i in range(4)]
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, mode="basic",
+                         block_tokens=16, max_seq=128, de_slots=4, seed=0)
+    sys_.run_offline(trajs)
+    assert sys_.stats()["read_bytes_de_side"] == 0
+
+
+def test_ssm_state_blob_reuse():
+    cfg = get_config("mamba2-1.3b").reduced()
+    params = init_params(cfg, KEY)
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, max_seq=128,
+                         de_slots=2, seed=0)
+    sessions = sys_.run_offline([Trajectory(0, [Round(16, 3), Round(8, 3)])])
+    assert sessions[0].rounds_done == 2
+    assert sys_.blob_store.bytes_read > 0, "state blob never reused"
+
+
+def test_mla_arch_serving():
+    cfg = get_config("ds27b").reduced()
+    params = init_params(cfg, KEY)
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, max_seq=128,
+                         block_tokens=16, de_slots=2, seed=0)
+    sessions = sys_.run_offline([Trajectory(0, [Round(18, 3), Round(10, 3)])])
+    assert sessions[0].rounds_done == 2
+    assert sys_.stats()["store_reads"] > 0

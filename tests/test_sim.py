@@ -1,0 +1,112 @@
+"""Discrete-event simulator: paper-claim directionality + invariants."""
+import numpy as np
+import pytest
+
+from repro.core.analysis import ClusterSpec, link_utilisation
+from repro.sim import (DS_660B, HOPPER_NODE, QWEN25_32B, Sim, SimConfig,
+                       generate_dataset)
+
+
+def run(mode, n_agents=96, max_len=32768, scheduler="adaptive", P=1, D=2,
+        **kw):
+    trajs = generate_dataset(n_agents, max_len, seed=0)
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=P, D=D, mode=mode,
+                    scheduler=scheduler, **kw)
+    return Sim(cfg, trajs).run().results()
+
+
+def test_all_agents_finish():
+    for mode in ("basic", "dualpath", "oracle"):
+        r = run(mode, n_agents=24)
+        assert r["finished_agents"] == 24, (mode, r)
+
+
+def test_dualpath_beats_basic_when_io_bound():
+    """Needs a storage-bound operating point: 2P4D / 64K contexts (at
+    1P2D/32K decode capacity binds first and all modes tie — verified;
+    that P/D sensitivity is itself a paper finding, Fig. 8)."""
+    rb = run("basic", n_agents=192, max_len=65536, P=2, D=4)
+    rd = run("dualpath", n_agents=192, max_len=65536, P=2, D=4)
+    ro = run("oracle", n_agents=192, max_len=65536, P=2, D=4)
+    assert rd["jct_max"] < rb["jct_max"] * 0.95, (rb, rd)
+    assert ro["jct_max"] <= rd["jct_max"] * 1.02
+
+
+def test_oracle_is_lower_bound_on_ttft():
+    rb = run("basic", n_agents=48)
+    ro = run("oracle", n_agents=48)
+    assert ro["ttft_mean"] <= rb["ttft_mean"] * 1.05
+
+
+def test_tpot_unaffected_by_dualpath():
+    """Paper §7.4: DualPath introduces no additional decoding overhead."""
+    rb = run("basic", n_agents=48)
+    rd = run("dualpath", n_agents=48)
+    assert abs(rd["tpot_mean"] - rb["tpot_mean"]) / rb["tpot_mean"] < 0.15
+
+
+def test_adaptive_no_worse_than_round_robin():
+    """Fig. 13 caveat (documented in EXPERIMENTS.md): our RR baseline
+    already includes read-path alternation, which is structurally
+    well-balanced for small P:D node ratios, so the paper's Max/Avg gap
+    (1.53 -> 1.18) is not reproduced under this stronger RR.  The
+    throughput-level guarantee holds: adaptive JCT <= RR JCT, and
+    adaptive engages every storage NIC."""
+    import dataclasses
+    slow = dataclasses.replace(HOPPER_NODE, snic_bw=10e9)  # force I/O-bound
+    res = {}
+    for scheduler in ("adaptive", "rr"):
+        trajs = generate_dataset(96, 32768, seed=0)
+        cfg = SimConfig(node=slow, model=DS_660B, P=1, D=2,
+                        mode="dualpath", scheduler=scheduler)
+        sim = Sim(cfg, trajs).run()
+        res[scheduler] = sim.results()["jct_max"]
+        assert all(n.total_bytes > 0 for n in sim.snic.values())
+    assert res["adaptive"] <= res["rr"] * 1.03, res
+
+
+def test_online_poisson_slo():
+    trajs = generate_dataset(32, 32768, seed=1)
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1 / 0.5, size=len(trajs)))
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
+                    mode="dualpath", online=True)
+    r = Sim(cfg, trajs).run(arrivals=list(arrivals)).results()
+    assert r["finished_agents"] == 32
+    assert r["tpot_mean"] < 0.050          # SLO from the paper
+
+
+def test_sim_steady_state_matches_analysis():
+    """Aggregate storage bandwidth used by dualpath ≈ all NICs (the
+    §4.2 assumption the closed form is built on)."""
+    trajs = generate_dataset(96, 32768, seed=0)
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
+                    mode="dualpath")
+    sim = Sim(cfg, trajs).run()
+    tot = [n.total_bytes for n in sim.snic.values()]
+    # every node's storage NIC moved bytes (PE-only systems leave D idle)
+    assert all(t > 0 for t in tot), tot
+
+    cfgb = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2, mode="basic")
+    simb = Sim(cfgb, trajs).run()
+    totb = [n.total_bytes for n in simb.snic.values()]
+    assert totb[1] == 0 or totb[1] < totb[0] * 0.05  # DE NICs ~idle in basic
+
+
+def test_split_reads_option_is_safe():
+    """Beyond-paper: the paper's future-work read splitting
+    (scheduler split_reads=True) — JCT-neutral in our FIFO-per-node
+    storage model (the gain would come from intra-request read
+    parallelism, which needs a sub-request storage model); asserted
+    here as a safe, non-regressing option."""
+    import dataclasses
+    slow = dataclasses.replace(HOPPER_NODE, snic_bw=10e9)
+    trajs = generate_dataset(64, 32768, seed=0)
+    res = {}
+    for split in (False, True):
+        cfg = SimConfig(node=slow, model=DS_660B, P=1, D=2,
+                        mode="dualpath", split_reads=split)
+        r = Sim(cfg, trajs).run().results()
+        assert r["finished_agents"] == 64
+        res[split] = r["jct_max"]
+    assert res[True] <= res[False] * 1.05
