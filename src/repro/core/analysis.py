@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -57,6 +57,49 @@ def link_utilisation(P: int, D: int, spec: ClusterSpec) -> Dict[str, float]:
         # DRAM, half-duplex: sum of read+write pressure
         "pe_dram": 2 * s * B / M,
         "de_dram": (3 + 2 * P / D) * B * s / M,
+    }
+    return util
+
+
+def link_utilisation_mix(P: int, D: int, spec: ClusterSpec,
+                         phi: Optional[float] = None) -> Dict[str, float]:
+    """Eq. 1–8 generalised to an arbitrary *read mix* φ — the fraction
+    of hit bytes entering via PE-side storage NICs (split reads make φ
+    a continuous knob instead of the per-request binary 'pe'|'de').
+
+    Aggregate load bandwidth is L(φ) = min(P·sB/φ, D·sB/(1−φ)), i.e.
+    whichever side's storage NICs saturate first; the maximiser
+    φ* = P/(P+D) saturates both sides simultaneously and recovers the
+    paper's L = (P+D)·sB.  Per-(PE,DE)-pair traffic follows as
+    T_p(φ) = φ·L/(P·D·g²) and T_c(φ) = (1−φ)·L/(P·D·g²), and every
+    Eq. 1–8 expression keeps its coefficient structure — at φ=φ* this
+    function is exactly ``link_utilisation`` (property-tested).
+
+    DRAM terms, derived from the plan legs (core/loading.py):
+    per PE node 2·φL/P (storage-in + buf→HBM read); per DE node
+    L(3−φ)/D (storage-in and stream-out of the DE share, write-in of
+    the PE share, and the full de_buf→de_hbm pass every byte makes).
+    """
+    g, B, s, M = spec.g, spec.B, spec.s, spec.M
+    if phi is None:
+        phi = P / (P + D)
+    if not 0.0 <= phi <= 1.0:
+        raise ValueError(f"read mix phi must be in [0, 1], got {phi}")
+    sides = []
+    if phi > 0:
+        sides.append(P * s * B / phi)
+    if phi < 1:
+        sides.append(D * s * B / (1 - phi))
+    L = min(sides)
+    T_p = phi * L / (P * D * g * g)
+    T_c = (1 - phi) * L / (P * D * g * g)
+    util = {
+        "pe_cnic_read": 2 * T_p * D * g / B,
+        "pe_cnic_write": (T_p + T_c) * D * g / B,
+        "de_cnic_read": (T_p + 2 * T_c) * P * g / B,
+        "de_cnic_write": (2 * T_p + T_c) * P * g / B,
+        "pe_dram": 2 * phi * L / P / M,
+        "de_dram": (3 - phi) * L / D / M,
     }
     return util
 

@@ -101,12 +101,76 @@ def oracle_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int) -> List[Leg]:
     return []
 
 
+def split_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int,
+                    pe_bytes: int) -> List[Leg]:
+    """Split read (paper §6.1 future work): one request's hit bytes are
+    partitioned across *both* storage NICs — ``pe_bytes`` enter via the
+    PE side (Figure 4a legs) and ``hit_bytes - pe_bytes`` via the DE
+    side (Figure 4b legs), so both ``snic`` resources serve the same
+    request's load phase concurrently.
+
+    The miss/persist legs are path-independent (they occupy identical
+    resources in Fig. 4a and 4b), so the per-resource byte sums of a
+    split plan are the *exact* convex combination of the two pure plans
+    with weight r = pe_bytes / hit_bytes — property-tested byte-for-byte
+    in tests/test_loading.py.  Zero-byte legs are dropped, making the
+    r=1 / r=0 endpoints structurally identical to the pure plans.
+    """
+    assert 0 <= pe_bytes <= hit_bytes, (pe_bytes, hit_bytes)
+    de_bytes = hit_bytes - pe_bytes
+    full = hit_bytes + miss_bytes
+    legs = [
+        # both storage NICs engaged concurrently on one request
+        Leg("storage_to_pe_buf", pe_bytes,
+            ("pe_snic", "pe_dram"), phase="load"),
+        Leg("storage_to_de_buf", de_bytes,
+            ("de_snic", "de_dram"), phase="load"),
+        # PE-side share climbs into PE HBM locally
+        Leg("pe_buf_to_pe_hbm", pe_bytes,
+            ("pe_cnic_rd", "pe_cnic_wr", "pe_dram"), layerwise=True),
+        # DE-side share streams over the compute network into PE HBM
+        Leg("de_buf_to_pe_hbm", de_bytes,
+            ("de_cnic_rd", "de_dram", "net", "pe_cnic_wr"), layerwise=True),
+        # PE-resident KV (PE-side hit + computed miss) forwarded to DE buf
+        Leg("pe_hbm_to_de_buf", pe_bytes + miss_bytes,
+            ("pe_cnic_rd", "net", "de_cnic_wr", "de_dram"), layerwise=True),
+        Leg("de_buf_to_de_hbm", full,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram"), phase="decode_start"),
+        Leg("persist_new_kv", miss_bytes + gen_bytes,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram", "de_snic"),
+            phase="decode"),
+    ]
+    return [l for l in legs if l.nbytes > 0]
+
+
 PLANS = {
     "pe": pe_read_plan,
     "de": de_read_plan,
     "basic": basic_plan,
     "oracle": oracle_plan,
 }
+
+
+def plan_for(read_path: str, read_split: float, hit_bytes: int,
+             miss_bytes: int, gen_bytes: int) -> List[Leg]:
+    """The legs a scheduled request actually executes.
+
+    ``read_path``/``read_split`` come straight from the scheduler
+    (core/scheduler.py): ``read_split`` is the fraction of hit bytes
+    read on the ``read_path`` side; 1.0 means a pure Fig. 4a/4b plan,
+    anything below means a split plan.  The simulator, the engines and
+    the tests all dispatch through here so the byte accounting cannot
+    diverge between them.
+    """
+    if read_path not in PLANS:
+        raise ValueError(
+            f"read_path {read_path!r} (valid: {sorted(PLANS)}); did the "
+            f"scheduler choose a path for this request yet?")
+    if read_split >= 1.0 or read_path not in ("pe", "de"):
+        return PLANS[read_path](hit_bytes, miss_bytes, gen_bytes)
+    pe_frac = read_split if read_path == "pe" else 1.0 - read_split
+    pe_bytes = int(hit_bytes * pe_frac)
+    return split_read_plan(hit_bytes, miss_bytes, gen_bytes, pe_bytes)
 
 
 def resource_bytes(plan: List[Leg]) -> dict:

@@ -20,9 +20,14 @@ Faithful to the paper:
   among DEs with enough HBM prefer the low-token class (tok_e+len ≤ Z)
   by min seq_e, else min tok_e in the high class; stop when no DE fits.
 * **Read-path selection** — the side (PE node / DE node) with the
-  shorter disk reading queue.  (Splitting one request across both sides
-  is the paper's future work; implemented here behind
-  ``split_reads=True`` as a beyond-paper option, default off.)
+  shorter disk reading queue.  Splitting one request's read across both
+  sides is the paper's named future work (§6.1); ``split_reads=True``
+  implements it: the hit is partitioned by water-filling over the two
+  sides' disk-queue depths (equalising both NICs' drain times) and the
+  request carries ``(read_path, read_split)`` — the majority side and
+  its fraction — which core/loading.py turns into a split plan whose
+  storage legs occupy both ``snic`` resources concurrently.  Default
+  off (beyond-paper option).
 
 The same scheduler object drives both the discrete-event simulator and
 the real JAX engines.
@@ -58,6 +63,29 @@ class Request:
     def hbm_tokens(self) -> int:
         """KV residency a DE must reserve (prompt + generated)."""
         return self.prompt_tokens + self.gen_tokens
+
+    @property
+    def pe_read_frac(self) -> float:
+        """Fraction of hit bytes read via the PE-side storage NIC.
+
+        Derived from (read_path, read_split): 1.0 for a pure PE read,
+        0.0 for a pure DE read, in between for a split read.  This is
+        the single source of truth the scheduler's read_q accounting,
+        the simulator's storage legs and the engines' block partition
+        all derive from."""
+        if self.read_path is None:
+            return 0.0
+        if self.read_path == "pe":
+            return self.read_split
+        return 1.0 - self.read_split
+
+    def read_tokens_by_side(self) -> Dict[str, int]:
+        """Hit tokens charged to each side's disk reading queue.
+
+        PE side gets floor(cached * pe_frac); the DE side the remainder,
+        so the two sides always sum to exactly ``cached_tokens``."""
+        pe_t = int(self.cached_tokens * self.pe_read_frac)
+        return {"pe": pe_t, "de": self.cached_tokens - pe_t}
 
 
 @dataclass
@@ -220,11 +248,17 @@ class Scheduler:
         pe_q = self.engines[req.pe].read_q
         de_q = self.engines[req.de].read_q
         if self.split_reads and req.cached_tokens:
-            # beyond-paper: split proportionally to inverse queue pressure
-            tot = pe_q + de_q
-            frac_pe = 0.5 if tot == 0 else de_q / tot
+            # Split read (§6.1 future work): partition the hit across
+            # both sides' storage NICs in proportion to their disk-queue
+            # depths.  Water-filling: with equal NIC bandwidth the read
+            # finishes when the slower side drains, so pick x (PE share)
+            # equalising pe_q + x·h = de_q + (1-x)·h — the unique split
+            # that minimises the request's own read completion time.
+            h = req.cached_tokens
+            frac_pe = (de_q - pe_q + h) / (2.0 * h)
+            frac_pe = min(1.0, max(0.0, frac_pe))
             req.read_path = "pe" if frac_pe >= 0.5 else "de"
-            req.read_split = max(frac_pe, 1 - frac_pe)
+            req.read_split = max(frac_pe, 1.0 - frac_pe)
         else:
             if pe_q == de_q:
                 # ties are frequent between queue build-ups; a fixed
@@ -235,11 +269,9 @@ class Scheduler:
             else:
                 req.read_path = "pe" if pe_q < de_q else "de"
             req.read_split = 1.0
-        side = self.engines[req.pe if req.read_path == "pe" else req.de]
-        side.read_q += int(req.cached_tokens * req.read_split)
-        if req.read_split < 1.0:
-            other = self.engines[req.de if req.read_path == "pe" else req.pe]
-            other.read_q += int(req.cached_tokens * (1 - req.read_split))
+        tokens = req.read_tokens_by_side()
+        self.engines[req.pe].read_q += tokens["pe"]
+        self.engines[req.de].read_q += tokens["de"]
         return req.read_path
 
     # ------------------------------------------------------------------

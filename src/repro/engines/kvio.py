@@ -10,16 +10,24 @@ lax.scan); persistent storage holds FullBlocks ``[layers, tokens, bytes]``
 SSM/hybrid archs have no per-token KV; their recurrent state is carried
 as an opaque *state blob* snapshot (see engines/runtime.py) — the
 transfer paths are identical, only the payload differs.
+
+:func:`layer_stream` is the engine-side realisation of layerwise
+loading (paper §4.1): it delivers one attention layer's KV at a time,
+gathered through the kernels/kv_gather.py Pallas path, with the next
+layer's gather already submitted (in flight on the TrafficManager)
+while the current layer is being installed — double buffering at
+LayerBlock granularity.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.traffic import TrafficClass, TrafficManager
 from repro.models.model import init_decode_state
 
 
@@ -98,52 +106,116 @@ def _to_bytes(a) -> np.ndarray:
     return np.asarray(a).reshape(a.shape[0], -1).view(np.uint8)
 
 
+def serialize_kv_layer(cfg: ModelConfig, state, slot: int, t0: int,
+                       t1: int, layer: int) -> np.ndarray:
+    """One attention layer's KV rows -> (t1-t0, row_bytes) uint8."""
+    key, idx = _kv_rows(cfg)[layer]
+    comp = state[key]
+    if cfg.attn_variant == "mla":
+        c = np.asarray(comp["c"][idx + (slot, slice(t0, t1))])
+        kr = np.asarray(comp["krope"][idx + (slot, slice(t0, t1))])
+        return np.concatenate([_to_bytes(c), _to_bytes(kr)], axis=-1)
+    k = np.asarray(comp["k"][idx + (slot, slice(t0, t1))])
+    v = np.asarray(comp["v"][idx + (slot, slice(t0, t1))])
+    return np.concatenate([_to_bytes(k), _to_bytes(v)], axis=-1)
+
+
 def serialize_kv(cfg: ModelConfig, state, slot: int, t0: int,
                  t1: int) -> np.ndarray:
     """-> (n_attn_layers, t1-t0, row_bytes) uint8."""
-    out = []
-    for key, idx in _kv_rows(cfg):
-        comp = state[key]
-        if cfg.attn_variant == "mla":
-            c = np.asarray(comp["c"][idx + (slot, slice(t0, t1))])
-            kr = np.asarray(comp["krope"][idx + (slot, slice(t0, t1))])
-            row = np.concatenate([_to_bytes(c), _to_bytes(kr)], axis=-1)
-        else:
-            k = np.asarray(comp["k"][idx + (slot, slice(t0, t1))])
-            v = np.asarray(comp["v"][idx + (slot, slice(t0, t1))])
-            row = np.concatenate([_to_bytes(k), _to_bytes(v)], axis=-1)
-        out.append(row[None])
-    return np.concatenate(out, axis=0)
+    return np.stack([serialize_kv_layer(cfg, state, slot, t0, t1, l)
+                     for l in range(len(_kv_rows(cfg)))], axis=0)
+
+
+def deserialize_kv_layer(cfg: ModelConfig, state, slot: int, t0: int,
+                         layer: int, row: np.ndarray):
+    """Write one layer's (T, row_bytes) uint8 rows into the state —
+    the per-LayerBlock HBM placement step of layerwise loading."""
+    key, idx = _kv_rows(cfg)[layer]
+    T = row.shape[0]
+    dt = jnp.dtype(cfg.kv_cache_dtype)
+    if cfg.attn_variant == "mla":
+        r = cfg.mla.kv_lora_rank
+        rd = cfg.mla.rope_head_dim
+        c = row[:, :r * dt.itemsize].copy().view(dt).reshape(T, r)
+        kr = row[:, r * dt.itemsize:].copy().view(dt).reshape(T, rd)
+        upd = {"c": jnp.asarray(c), "krope": jnp.asarray(kr)}
+    else:
+        half = cfg.n_kv_heads * cfg.head_dim * dt.itemsize
+        k = row[:, :half].copy().view(dt).reshape(
+            T, cfg.n_kv_heads, cfg.head_dim)
+        v = row[:, half:].copy().view(dt).reshape(
+            T, cfg.n_kv_heads, cfg.head_dim)
+        upd = {"k": jnp.asarray(k), "v": jnp.asarray(v)}
+    new_state = dict(state)
+    comp = dict(new_state[key])
+    for ckey, val in upd.items():
+        arr = comp[ckey]
+        comp[ckey] = arr.at[
+            idx + (slot, slice(t0, t0 + val.shape[0]))].set(
+            val.astype(arr.dtype))
+    new_state[key] = comp
+    return new_state
 
 
 def deserialize_kv(cfg: ModelConfig, state, slot: int, t0: int,
                    kv_bytes: np.ndarray):
     """Write (L, T, row_bytes) uint8 back into the padded state buffers."""
     rows = _kv_rows(cfg)
-    L, T, _ = kv_bytes.shape
+    L = kv_bytes.shape[0]
     assert L == len(rows), (L, len(rows))
-    dt = jnp.dtype(cfg.kv_cache_dtype)
-    new_state = dict(state)
-    for li, (key, idx) in enumerate(rows):
-        row = kv_bytes[li]                        # (T, row_bytes)
-        if cfg.attn_variant == "mla":
-            r = cfg.mla.kv_lora_rank
-            rd = cfg.mla.rope_head_dim
-            c = row[:, :r * dt.itemsize].copy().view(dt).reshape(T, r)
-            kr = row[:, r * dt.itemsize:].copy().view(dt).reshape(T, rd)
-            upd = {"c": jnp.asarray(c), "krope": jnp.asarray(kr)}
-        else:
-            half = cfg.n_kv_heads * cfg.head_dim * dt.itemsize
-            k = row[:, :half].copy().view(dt).reshape(
-                T, cfg.n_kv_heads, cfg.head_dim)
-            v = row[:, half:].copy().view(dt).reshape(
-                T, cfg.n_kv_heads, cfg.head_dim)
-            upd = {"k": jnp.asarray(k), "v": jnp.asarray(v)}
-        comp = dict(new_state[key])
-        for ckey, val in upd.items():
-            arr = comp[ckey]
-            comp[ckey] = arr.at[
-                idx + (slot, slice(t0, t0 + val.shape[0]))].set(
-                val.astype(arr.dtype))
-        new_state[key] = comp
-    return new_state
+    for li in range(L):
+        state = deserialize_kv_layer(cfg, state, slot, t0, li, kv_bytes[li])
+    return state
+
+
+# ---------------------------------------------------------------------------
+# layerwise double-buffered delivery (paper §4.1)
+# ---------------------------------------------------------------------------
+
+
+def layer_stream(cfg: ModelConfig, blocks: List[np.ndarray],
+                 tm: Optional[TrafficManager] = None,
+                 tclass: TrafficClass = TrafficClass.KV_TRANSFER,
+                 interpret: bool = True
+                 ) -> Iterator[Tuple[int, np.ndarray]]:
+    """Double-buffered per-layer LayerBlock stream from FullBlock pages.
+
+    ``blocks``: the request's hit FullBlocks, each (L, page_tokens,
+    row_bytes) uint8.  Yields ``(layer, rows)`` with ``rows`` of shape
+    (n_blocks·page_tokens, row_bytes), gathered through the
+    kernels/kv_gather.py Pallas kernel (interpret mode on CPU) so the
+    HBM-placement path is the same pipelined-DMA gather the TPU runs.
+
+    Pipeline shape: layer ``i+1``'s gather is *submitted* to the
+    TrafficManager before layer ``i`` is yielded, so while the consumer
+    installs layer ``i`` the next LayerBlock sits in flight on the KV
+    virtual lane — at most two layer buffers are ever live, exactly the
+    double-buffering the paper overlaps with per-layer prefill compute.
+    The TrafficManager charges each gather's bytes to the KV traffic
+    class, exercising the §5 ordering/doorbell-batching machinery.
+    """
+    from repro.kernels.kv_gather import kv_layer_gather
+
+    n_l = n_attn_layers(cfg)
+    if not blocks or n_l == 0:
+        return
+    pool = jnp.asarray(np.stack(blocks))      # (n_blocks, L, pt, row)
+    n, _, pt, row = pool.shape
+    table = jnp.arange(n, dtype=jnp.int32)
+    layer_bytes = int(n * pt * row)
+    own_tm = tm is None
+    if own_tm:
+        tm = TrafficManager()
+    buf: Dict[int, np.ndarray] = {}
+
+    def fetch(layer: int):
+        out = kv_layer_gather(pool, table, layer=layer, interpret=interpret)
+        buf[layer] = np.asarray(out).reshape(n * pt, row)
+
+    tm.submit(lambda: fetch(0), layer_bytes, tclass)
+    for l in range(n_l):
+        tm.drain()                            # layer l has landed
+        if l + 1 < n_l:                       # layer l+1 goes in flight
+            tm.submit(lambda nxt=l + 1: fetch(nxt), layer_bytes, tclass)
+        yield l, buf.pop(l)

@@ -65,13 +65,14 @@ class EngineRequest:
 class PrefillEngine:
     def __init__(self, eid, cfg: ModelConfig, params, store: MemoryKVStore,
                  layout: BlockLayout, max_seq: int,
-                 quota_s: float = 0.300):
+                 quota_s: float = 0.300, layerwise: bool = True):
         self.eid = eid
         self.cfg = cfg
         self.params = params
         self.store = store
         self.layout = layout
         self.max_seq = max_seq
+        self.layerwise = layerwise
         self.tm = TrafficManager()
         self.packer = QuotaPacker(cfg, AttnTimeModel.from_config(cfg),
                                   quota_s=quota_s)
@@ -80,19 +81,32 @@ class PrefillEngine:
 
     # -- loading ---------------------------------------------------------
     def install_hit_kv(self, er: EngineRequest, payload):
-        """payload: list of FullBlocks (paged archs) or a state blob."""
+        """payload: list of FullBlocks (paged archs) or a state blob.
+
+        With ``layerwise`` (default, paper §4.1) the hit KV is installed
+        one LayerBlock at a time via kvio.layer_stream: each layer's
+        rows are gathered through the kernels/kv_gather.py path while
+        the next layer's gather is already in flight on this engine's
+        TrafficManager (double buffering).  The non-layerwise path is
+        the whole-prompt bulk install, kept for the Fig. 12 ablation.
+        """
         er.state = init_decode_state(self.cfg, 1, self.max_seq)
         hit = er.req.cached_tokens
         if uses_state_blob(self.cfg):
             if payload is not None:
                 er.state = jax.tree.map(jnp.asarray, pickle.loads(payload))
             er.length = hit
-        else:
-            if payload:
+        elif payload:
+            if self.layerwise:
+                for l, rows in kvio.layer_stream(self.cfg, payload,
+                                                 tm=self.tm):
+                    er.state = kvio.deserialize_kv_layer(
+                        self.cfg, er.state, 0, 0, l, rows[:hit])
+            else:
                 kv_bytes = np.concatenate(payload, axis=1)   # (L, hit, row)
                 er.state = kvio.deserialize_kv(self.cfg, er.state, 0, 0,
                                                kv_bytes[:, :hit])
-            er.length = hit
+        er.length = hit
         self.fifo.append((PrefillWork(er.req.rid, hit,
                                       len(er.append_tokens)), er))
 

@@ -27,6 +27,7 @@ from repro.configs.base import ModelConfig
 from repro.core.blocks import BlockLayout, layout_for
 from repro.core.scheduler import Request, Scheduler
 from repro.core.traffic import TrafficClass
+from repro.engines import kvio
 from repro.engines.runtime import (DecodeEngine, EngineRequest,
                                    PrefillEngine, uses_state_blob)
 from repro.kvcache.store import MemoryKVStore, StateBlobStore
@@ -51,7 +52,8 @@ class ServingSystem:
     def __init__(self, cfg: ModelConfig, params, *, n_pe: int = 1,
                  n_de: int = 1, mode: str = "dualpath",
                  block_tokens: int = 16, max_seq: int = 512,
-                 de_slots: int = 8, quota_s: float = 0.3, seed: int = 0):
+                 de_slots: int = 8, quota_s: float = 0.3, seed: int = 0,
+                 split_reads: bool = False, layerwise: bool = True):
         assert mode in ("dualpath", "basic")
         self.cfg = cfg
         self.mode = mode
@@ -60,14 +62,16 @@ class ServingSystem:
         self.store = MemoryKVStore(self.layout)
         self.blob_store = StateBlobStore()
         self.trie = BlockTrie(block_tokens)
-        self.sched = Scheduler(alpha=1 << 30, beta=1 << 30)
+        self.sched = Scheduler(alpha=1 << 30, beta=1 << 30,
+                               split_reads=split_reads)
         self.pes: Dict[Tuple[int, int], PrefillEngine] = {}
         self.des: Dict[Tuple[int, int], DecodeEngine] = {}
         for i in range(n_pe):
             eid = (i, 0)
             self.sched.register_engine(eid, node=i, kind="pe", group=0)
             self.pes[eid] = PrefillEngine(eid, cfg, params, self.store,
-                                          self.layout, max_seq, quota_s)
+                                          self.layout, max_seq, quota_s,
+                                          layerwise=layerwise)
         for j in range(n_de):
             eid = (n_pe + j, 0)
             st = self.sched.register_engine(eid, node=n_pe + j, kind="de",
@@ -82,6 +86,7 @@ class ServingSystem:
         self._inflight: Dict[int, EngineRequest] = {}
         self.rng = np.random.default_rng(seed)
         self.read_bytes_by_side = {"pe": 0, "de": 0}
+        self.n_split_reads = 0
 
     # ------------------------------------------------------------------
     def _submit_round(self, sess: AgentSession):
@@ -138,42 +143,89 @@ class ServingSystem:
             self._do_read(er)
 
     def _do_read(self, er: EngineRequest):
-        """Execute the storage read on the chosen side and deliver the
-        payload to the PE (via compute network when read on the DE)."""
+        """Execute the storage read and deliver the payload to the PE.
+
+        Pure reads ride one side's TrafficManager (storage→PE directly,
+        or storage→DE→compute-network→PE).  Split reads (scheduler
+        ``split_reads=True``, §6.1 future work) partition the hit
+        FullBlocks at page granularity: the PE side reads the leading
+        pages while the DE side reads the trailing ones concurrently,
+        and only the DE share crosses the compute network — the engine
+        realisation of core/loading.split_read_plan."""
         req = er.req
         pe = self.pes[req.pe]
-        side = req.read_path
+        de_tm = self.des[req.de].tm
         if uses_state_blob(self.cfg):
+            # one opaque state snapshot: unsplittable, rides the chosen side
+            side = req.read_path
             payload = er._blob
             nbytes = len(payload) if payload else 0
-        else:
-            payload = self.store.read_blocks(er.hit_refs)
-            nbytes = sum(b.nbytes for b in payload)
-        self.read_bytes_by_side[side] += nbytes
-        tm = pe.tm if side == "pe" else self.des[req.de].tm
-        box = {}
-        tm.submit(lambda: box.update(p=payload), nbytes,
-                  TrafficClass.KV_TRANSFER)
-        tm.drain()
-        if side == "de":
-            # DE buffer -> PE over the compute network (layerwise stream)
-            pe.tm.submit(lambda: None, nbytes, TrafficClass.KV_TRANSFER)
-            pe.tm.drain()
-        pe.install_hit_kv(er, box.get("p"))
-        self.sched.on_read_done(req.pe if side == "pe" else req.de,
-                                req.cached_tokens)
+            self.read_bytes_by_side[side] += nbytes
+            tm = pe.tm if side == "pe" else de_tm
+            box = {}
+            tm.submit(lambda: box.update(p=payload), nbytes,
+                      TrafficClass.KV_TRANSFER)
+            tm.drain()
+            if side == "de":
+                pe.tm.submit(lambda: None, nbytes, TrafficClass.KV_TRANSFER)
+                pe.tm.drain()
+            pe.install_hit_kv(er, box.get("p"))
+            self._release_read_q(req)
+            return
+        n = len(er.hit_refs)
+        k = int(round(req.pe_read_frac * n))       # PE share, whole pages
+        if 0 < k < n:
+            self.n_split_reads += 1
+        payload: List = [None] * n
+        for side, refs, lo in (("pe", er.hit_refs[:k], 0),
+                               ("de", er.hit_refs[k:], k)):
+            if not refs:
+                continue
+            blocks = self.store.read_blocks(refs)
+            nbytes = sum(b.nbytes for b in blocks)
+            self.read_bytes_by_side[side] += nbytes
+            tm = pe.tm if side == "pe" else de_tm
+            tm.submit(lambda blocks=blocks, lo=lo:
+                      payload.__setitem__(slice(lo, lo + len(blocks)),
+                                          blocks),
+                      nbytes, TrafficClass.KV_TRANSFER)
+            tm.drain()
+            if side == "de":
+                # DE buffer -> PE over the compute network (layerwise)
+                pe.tm.submit(lambda: None, nbytes, TrafficClass.KV_TRANSFER)
+                pe.tm.drain()
+        pe.install_hit_kv(er, [b for b in payload if b is not None])
+        self._release_read_q(req)
+
+    def _release_read_q(self, req: Request):
+        """Release exactly what choose_read_path charged — with
+        split_reads the charge may span both sides."""
+        tokens = req.read_tokens_by_side()
+        for side in ("pe", "de"):
+            if tokens[side]:
+                self.sched.on_read_done(
+                    req.pe if side == "pe" else req.de, tokens[side])
 
     # ------------------------------------------------------------------
     def _step_engines(self):
         for pe in self.pes.values():
             for er in pe.step():
                 self.sched.on_request_done(er.req.pe, er.req)
-                # PE -> DE prompt-state transfer (compute network)
-                nbytes = er.req.prompt_tokens * \
-                    self.cfg.kv_bytes_per_token()
-                self.des[er.req.de].tm.submit(lambda: None, nbytes,
-                                              TrafficClass.KV_TRANSFER)
-                self.des[er.req.de].tm.drain()
+                # PE -> DE prompt-state transfer (compute network), one
+                # submission per attention layer: the DE-side doorbell
+                # batching sees the same LayerBlock granularity the
+                # layerwise install used on the PE side
+                n_l = max(kvio.n_attn_layers(self.cfg), 1)
+                nbytes = er.req.prompt_tokens * self.cfg.kv_bytes_per_token()
+                de_tm = self.des[er.req.de].tm
+                per_layer, rem = divmod(nbytes, n_l)
+                for li in range(n_l):
+                    # last layer carries the remainder: byte totals stay
+                    # exact across the per-layer submissions
+                    de_tm.submit(lambda: None,
+                                 per_layer + (rem if li == n_l - 1 else 0),
+                                 TrafficClass.KV_TRANSFER)
+                de_tm.drain()
                 self._pending_admit.append(er)
         still = deque()
         while self._pending_admit:
@@ -219,6 +271,7 @@ class ServingSystem:
             store_writes=self.store.bytes_written,
             read_bytes_pe_side=self.read_bytes_by_side["pe"],
             read_bytes_de_side=self.read_bytes_by_side["de"],
+            split_reads=self.n_split_reads,
             trie_blocks=self.trie.n_blocks,
             prefill_tokens=sum(p.prefill_tokens for p in self.pes.values()),
             decode_steps=sum(d.decode_steps for d in self.des.values()),

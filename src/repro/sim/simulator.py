@@ -19,9 +19,15 @@ Model:
 
 Request lifecycle (round of a trajectory):
   submit → (PE,DE) assignment + read-path choice → storage read (FIFO on
-  the chosen side) → PE prefill (chunks; layerwise streaming legs overlap
-  as PS flows) → PD transfer complete → DE H2D → decode blocks → done →
-  next round of the trajectory.
+  the chosen side; with ``split_reads`` the hit is partitioned and BOTH
+  sides' NICs serve the request concurrently) → PE prefill (chunks;
+  layerwise streaming legs overlap as PS flows) → PD transfer complete →
+  DE H2D → decode blocks → done → next round of the trajectory.
+
+All legs come from core/loading.plan_for, and every executed leg is
+charged to ``RoundSim.charged`` per symbolic resource — the sim's byte
+accounting therefore matches the plans (and, via tests/test_loading.py,
+the §4.2 closed form) to the byte.
 """
 from __future__ import annotations
 
@@ -33,7 +39,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.intra import AttnTimeModel, PrefillWork, QuotaPacker, attn_flops
-from repro.core.loading import PLANS
+from repro.core.loading import Leg, PLANS, plan_for
 from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
 from repro.sim.spec import ModelSimSpec, NodeSpec
 from repro.sim.traces import Trajectory
@@ -162,7 +168,7 @@ class RoundSim:
     __slots__ = ("req", "traj", "round_idx", "agent", "submit_t", "read_done_t",
                  "prefill_done_t", "first_decode_t", "done_t", "transfer_done",
                  "prefill_left", "gen_left", "ctx", "h2d_done", "tokens_out",
-                 "second_token_t")
+                 "second_token_t", "charged", "read_legs")
 
     def __init__(self, req: Request, traj: Trajectory, round_idx: int, agent):
         self.req = req
@@ -181,6 +187,17 @@ class RoundSim:
         self.gen_left = req.gen_tokens
         self.ctx = req.prompt_tokens
         self.tokens_out = 0
+        # per-symbolic-resource bytes this round charged (load + layerwise
+        # + decode_start legs) — must equal the loading-plan byte sums
+        self.charged: Dict[str, int] = {}
+        # storage legs: [side, nbytes, t_service_start, t_done] — split
+        # reads have one entry per side, letting tests assert both NICs
+        # served this request's load phase concurrently
+        self.read_legs: List[list] = []
+
+    def charge(self, leg: Leg):
+        for r in leg.resources:
+            self.charged[r] = self.charged.get(r, 0) + leg.nbytes
 
 
 class AgentSim:
@@ -400,23 +417,52 @@ class Sim:
             self.sched.engines[req.pe].read_q += req.cached_tokens
         else:
             self.sched.choose_read_path(req)
-        hit_bytes = req.cached_tokens * self.kv_per_token + \
-            self.model.ssm_state_bytes
-        side_engine = req.pe if req.read_path == "pe" else req.de
-        node = side_engine[0]
-        if hit_bytes <= 0:
-            self._read_done(rs)
+        load_legs = [l for l in self._request_legs(req)
+                     if l.phase == "load" and l.nbytes > 0]
+        # an SSM/hybrid state blob is one opaque snapshot — it cannot be
+        # partitioned, so it rides the majority side's storage NIC
+        extra = self.model.ssm_state_bytes
+        major = "pe" if req.pe_read_frac >= 0.5 else "de"
+        tokens = req.read_tokens_by_side()
+        if not load_legs:
+            # no per-token KV to read (e.g. pure-SSM models): release the
+            # read_q charge on both sides, then complete (after the blob
+            # read, if any)
+            def finish(rs=rs):
+                for side, engine in (("pe", req.pe), ("de", req.de)):
+                    if tokens[side]:
+                        self.sched.on_read_done(engine, tokens[side])
+                self._read_done(rs)
+
+            if extra > 0:
+                node = (req.pe if major == "pe" else req.de)[0]
+                self.snic[node].enqueue(extra, finish)
+                return
+            finish()
             return
-        self.snic[node].enqueue(hit_bytes,
-                                lambda rs=rs: self._read_done(rs),
-                                read=True)
+        pending = [len(load_legs)]
+        for leg in load_legs:
+            side = "pe" if "pe_snic" in leg.resources else "de"
+            engine = req.pe if side == "pe" else req.de
+            nbytes = leg.nbytes + (extra if side == major else 0)
+            rs.charge(leg)
+            entry = [side, nbytes, -1.0, -1.0]
+            rs.read_legs.append(entry)
+
+            def leg_done(side=side, engine=engine, entry=entry):
+                entry[3] = self.loop.now
+                self.sched.on_read_done(engine, tokens[side])
+                pending[0] -= 1
+                if pending[0] == 0:
+                    self._read_done(rs)
+
+            self.snic[engine[0]].enqueue(
+                nbytes, leg_done, read=True,
+                on_start=lambda t, entry=entry: entry.__setitem__(2, t))
 
     def _read_done(self, rs: RoundSim):
         rs.read_done_t = self.loop.now
         req = rs.req
-        if req.read_path is not None and self.cfg.mode != "oracle":
-            side = req.pe if req.read_path == "pe" else req.de
-            self.sched.on_read_done(side, req.cached_tokens)
         pe = self.engines[req.pe]
         pe.fifo.append(PrefillWork(req.rid, req.cached_tokens, req.new_tokens))
         rs.prefill_left = req.new_tokens
@@ -429,6 +475,20 @@ class Sim:
     # ------------------------------------------------------------------
     # transfer flows (loading plans, minus the storage leg handled above)
     # ------------------------------------------------------------------
+    def _request_legs(self, req: Request) -> List[Leg]:
+        """The loading-plan legs this request executes.  One dispatch
+        point (core/loading.plan_for) shared with the engines and the
+        property tests, so the sim's byte accounting is the plan's byte
+        accounting by construction — including split plans, whose two
+        load legs charge both snic resources concurrently."""
+        if self.cfg.mode == "oracle":
+            return []
+        hit = req.cached_tokens * self.kv_per_token
+        miss = req.new_tokens * self.kv_per_token
+        if self.cfg.mode == "basic":
+            return PLANS["basic"](hit, miss, 0)
+        return plan_for(req.read_path, req.read_split, hit, miss, 0)
+
     def _resmap(self, req: Request):
         (pn, pr), (dn, dr) = req.pe, req.de
         return {
@@ -446,11 +506,7 @@ class Sim:
             rs.transfer_done = True
             return
         req = rs.req
-        plan_name = req.read_path if self.cfg.mode == "dualpath" else "basic"
-        hit = req.cached_tokens * self.kv_per_token
-        miss = req.new_tokens * self.kv_per_token
-        legs = [l for l in PLANS[plan_name](hit, miss, 0)
-                if l.layerwise]
+        legs = [l for l in self._request_legs(req) if l.layerwise]
         rmap = self._resmap(req)
         pending = [len(legs)]
         if not legs:
@@ -464,6 +520,7 @@ class Sim:
                 self._maybe_to_decode(rs)
 
         for leg in legs:
+            rs.charge(leg)
             Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done)
 
     # ------------------------------------------------------------------
@@ -556,12 +613,32 @@ class Sim:
             self._h2d_done(rs)
             return
         req = rs.req
-        full = req.prompt_tokens * self.kv_per_token
         rmap = self._resmap(req)
-        (dn, dr) = req.de
-        Flow(self, full,
-             [self.cnic_rd[(dn, dr)], self.cnic_wr[(dn, dr)], self.dram[dn]],
-             lambda: self._h2d_done(rs))
+        legs = [l for l in self._request_legs(req)
+                if l.phase == "decode_start"]
+        if not legs:
+            # the basic plan writes PE HBM -> DE HBM directly (no
+            # decode_start leg); the sim still stages decode start
+            # through DE DRAM like real PD-disaggregated systems do
+            full = req.prompt_tokens * self.kv_per_token
+            (dn, dr) = req.de
+            rs.charge(Leg("de_h2d", full,
+                          ("de_cnic_rd", "de_cnic_wr", "de_dram")))
+            Flow(self, full,
+                 [self.cnic_rd[(dn, dr)], self.cnic_wr[(dn, dr)],
+                  self.dram[dn]],
+                 lambda: self._h2d_done(rs))
+            return
+        pending = [len(legs)]
+
+        def leg_done():
+            pending[0] -= 1
+            if pending[0] == 0:
+                self._h2d_done(rs)
+
+        for leg in legs:
+            rs.charge(leg)
+            Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done)
 
     def _h2d_done(self, rs: RoundSim):
         rs.h2d_done = True
@@ -662,7 +739,12 @@ class Sim:
 
 
 class _FifoNic:
-    """Per-node storage NIC: serial FIFO server with byte accounting."""
+    """Per-node storage NIC: serial FIFO server with byte accounting.
+
+    Tracks reads (KV loads) and writes (block persists) separately so
+    tests can pin the read totals against the loading-plan snic sums,
+    and reports service start via ``on_start`` so split-read tests can
+    assert two NICs were busy concurrently on one request."""
 
     def __init__(self, sim: Sim, node: int, bw: float):
         self.sim = sim
@@ -672,6 +754,8 @@ class _FifoNic:
         self.busy = False
         self.queued_bytes = 0
         self.total_bytes = 0
+        self.read_bytes = 0
+        self.write_bytes = 0
         self.samples: List[Tuple[float, float]] = []   # (t_done, bytes)
 
     def queue_tokens(self, kv_per_token: float) -> int:
@@ -679,8 +763,8 @@ class _FifoNic:
             return 0
         return int(self.queued_bytes / kv_per_token)
 
-    def enqueue(self, nbytes: float, on_done, read=True):
-        self.queue.append((nbytes, on_done))
+    def enqueue(self, nbytes: float, on_done, read=True, on_start=None):
+        self.queue.append((nbytes, on_done, read, on_start))
         self.queued_bytes += nbytes
         if not self.busy:
             self._serve()
@@ -690,12 +774,18 @@ class _FifoNic:
             self.busy = False
             return
         self.busy = True
-        nbytes, cb = self.queue.popleft()
+        nbytes, cb, read, on_start = self.queue.popleft()
+        if on_start is not None:
+            on_start(self.sim.loop.now)
         dt = nbytes / self.bw
 
         def done():
             self.queued_bytes -= nbytes
             self.total_bytes += nbytes
+            if read:
+                self.read_bytes += nbytes
+            else:
+                self.write_bytes += nbytes
             self.samples.append((self.sim.loop.now, nbytes))
             cb()
             self._serve()

@@ -5,6 +5,14 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+try:                                   # property tests prefer the real thing
+    import hypothesis                  # noqa: F401
+except ImportError:                    # hermetic container: deterministic stub
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.register(sys.modules)
+
 import jax
 import pytest
 

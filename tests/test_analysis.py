@@ -6,6 +6,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.analysis import (ClusterSpec, bottleneck_free_range,
                                  is_bottleneck_free, link_utilisation,
+                                 link_utilisation_mix,
                                  max_aggregate_load_bw, pair_traffic,
                                  safe_pd_splits)
 
@@ -75,6 +76,45 @@ def test_safe_splits_elastic():
     assert (2, 4) in splits and (3, 3) in splits
     for P, D in splits:
         assert is_bottleneck_free(P, D, spec)[0]
+
+
+@given(P=st.integers(1, 32), D=st.integers(1, 32),
+       g=st.integers(2, 16), s_frac=st.floats(0.25, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_mix_reduces_to_eq18_at_saturating_phi(P, D, g, s_frac):
+    """The split-read generalisation evaluated at the saturating mix
+    φ* = P/(P+D) IS Eq. 1–8: every resource utilisation coincides."""
+    spec = ClusterSpec(g=g, B=50e9, s=s_frac, M=500e9)
+    a = link_utilisation(P, D, spec)
+    b = link_utilisation_mix(P, D, spec)
+    assert set(a) == set(b)
+    for k in a:
+        assert math.isclose(a[k], b[k], rel_tol=1e-12), (k, a[k], b[k])
+
+
+@given(P=st.integers(1, 16), D=st.integers(1, 16),
+       phi=st.floats(0.01, 0.99))
+@settings(max_examples=100, deadline=None)
+def test_mix_aggregate_traffic_identities(P, D, phi):
+    """For any mix φ, the utilisations returned by link_utilisation_mix
+    must satisfy the plan-coefficient identities: aggregate PE-CNIC
+    read traffic is 2× the PE-side load (Fig. 4a paths 3+5), DE-CNIC
+    read is (2−φ)× the load (DE share twice + every byte's HBM pass),
+    PE DRAM 2φ×, DE DRAM (3−φ)× — and the implied load never exceeds
+    the both-sides-saturated optimum L(φ*) = (P+D)·sB, which is why
+    water-filling steers the average mix toward φ*."""
+    spec = ClusterSpec()
+    util = link_utilisation_mix(P, D, spec, phi=phi)
+    B, g, M = spec.B, spec.g, spec.M
+    L = min(P * spec.snic_bw / phi, D * spec.snic_bw / (1 - phi))
+    assert math.isclose(util["pe_cnic_read"] * P * g * B, 2 * phi * L,
+                        rel_tol=1e-9)
+    assert math.isclose(util["de_cnic_read"] * D * g * B, (2 - phi) * L,
+                        rel_tol=1e-9)
+    assert math.isclose(util["pe_dram"] * M * P, 2 * phi * L, rel_tol=1e-9)
+    assert math.isclose(util["de_dram"] * M * D, (3 - phi) * L,
+                        rel_tol=1e-9)
+    assert L <= (P + D) * spec.snic_bw * (1 + 1e-9)
 
 
 @given(P=st.integers(1, 32), D=st.integers(1, 32))

@@ -1,11 +1,13 @@
 """Loading plans (Fig. 4) must reproduce the §4.2 per-resource coefficients."""
 import math
+from fractions import Fraction
 
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.loading import (basic_plan, de_read_plan, oracle_plan,
-                                pe_read_plan, resource_bytes)
+                                pe_read_plan, plan_for, resource_bytes,
+                                split_read_plan)
 
 
 @given(hit=st.integers(0, 10**9), miss=st.integers(0, 10**7),
@@ -58,3 +60,72 @@ def test_layerwise_legs_marked():
     lw = [l.name for l in plan if l.layerwise]
     assert "pe_buf_to_pe_hbm" in lw and "pe_hbm_to_de_buf" in lw
     assert all(not l.layerwise for l in plan if l.phase == "load")
+
+
+# ---------------------------------------------------------------------------
+# split reads (§6.1 future work, beyond-paper)
+# ---------------------------------------------------------------------------
+
+
+@given(hit=st.integers(0, 10**9), miss=st.integers(0, 10**7),
+       gen=st.integers(0, 10**7), r=st.floats(0.0, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_split_plan_is_convex_combination_of_pure_plans(hit, miss, gen, r):
+    """For any split ratio r∈[0,1], the per-resource byte sums of a
+    split plan equal the convex combination r·PE + (1−r)·DE of the pure
+    plans — byte-exact (checked in rational arithmetic).  This is what
+    lets the §4.2 analysis, the simulator and the engines stay
+    byte-identical under split reads: the miss/persist legs occupy the
+    same resources on both paths, and the hit legs interpolate."""
+    pe_bytes = int(hit * r)
+    rb_s = resource_bytes(split_read_plan(hit, miss, gen, pe_bytes))
+    rb_pe = resource_bytes(pe_read_plan(hit, miss, gen))
+    rb_de = resource_bytes(de_read_plan(hit, miss, gen))
+    keys = set(rb_s) | set(rb_pe) | set(rb_de)
+    if hit == 0:
+        # no hit bytes: both pure plans degenerate to the same sums
+        for k in keys:
+            assert rb_s.get(k, 0) == rb_pe.get(k, 0) == rb_de.get(k, 0)
+        return
+    frac = Fraction(pe_bytes, hit)
+    for k in keys:
+        expect = frac * rb_pe.get(k, 0) + (1 - frac) * rb_de.get(k, 0)
+        assert Fraction(rb_s.get(k, 0)) == expect, (k, rb_s.get(k, 0), expect)
+
+
+@given(hit=st.integers(1, 10**9), miss=st.integers(0, 10**7),
+       gen=st.integers(0, 10**7))
+@settings(max_examples=50, deadline=None)
+def test_split_plan_endpoints_equal_pure_plans(hit, miss, gen):
+    rb_pe = resource_bytes(pe_read_plan(hit, miss, gen))
+    rb_de = resource_bytes(de_read_plan(hit, miss, gen))
+    at_pe = resource_bytes(split_read_plan(hit, miss, gen, hit))
+    at_de = resource_bytes(split_read_plan(hit, miss, gen, 0))
+    for k in set(rb_pe) | set(at_pe):
+        assert at_pe.get(k, 0) == rb_pe.get(k, 0)
+    for k in set(rb_de) | set(at_de):
+        assert at_de.get(k, 0) == rb_de.get(k, 0)
+
+
+def test_split_plan_load_legs_occupy_both_snics():
+    """A genuine split must put one load leg on each side's storage NIC
+    (the two legs the simulator serves concurrently)."""
+    plan = split_read_plan(1000, 10, 5, 400)
+    load = [l for l in plan if l.phase == "load"]
+    assert len(load) == 2
+    snics = {r for l in load for r in l.resources if r.endswith("snic")}
+    assert snics == {"pe_snic", "de_snic"}
+    assert sum(l.nbytes for l in load) == 1000
+
+
+def test_plan_for_dispatch():
+    """plan_for is the single dispatch the sim and engines share."""
+    assert resource_bytes(plan_for("pe", 1.0, 100, 10, 5)) == \
+        resource_bytes(pe_read_plan(100, 10, 5))
+    assert resource_bytes(plan_for("de", 1.0, 100, 10, 5)) == \
+        resource_bytes(de_read_plan(100, 10, 5))
+    # read_path carries the majority side; read_split its fraction
+    rb = resource_bytes(plan_for("pe", 0.6, 100, 10, 5))
+    assert rb == resource_bytes(split_read_plan(100, 10, 5, 60))
+    rb = resource_bytes(plan_for("de", 0.7, 100, 10, 5))
+    assert rb == resource_bytes(split_read_plan(100, 10, 5, 30))

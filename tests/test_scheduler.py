@@ -156,6 +156,68 @@ def test_read_path_tie_prefers_pe():
 
 
 # ---------------------------------------------------------------------------
+# split reads (§6.1 future work)
+# ---------------------------------------------------------------------------
+
+
+def test_split_read_even_when_queues_equal():
+    s = mk_sched(split_reads=True)
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r)
+    assert r.read_split == 0.5 and r.pe_read_frac == 0.5
+    # both sides' disk queues are charged their share
+    assert s.engines[(0, 0)].read_q == 50
+    assert s.engines[(10, 0)].read_q == 50
+
+
+def test_split_read_water_filling_equalises_queues():
+    """The split equalises pe_q + x·h == de_q + (1−x)·h."""
+    s = mk_sched(split_reads=True)
+    s.engines[(10, 0)].read_q = 30     # DE backlogged by 30
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r)
+    # x = (30 - 0 + 100) / 200 = 0.65 -> PE majority side
+    assert r.read_path == "pe" and abs(r.read_split - 0.65) < 1e-12
+    tokens = r.read_tokens_by_side()
+    assert tokens == {"pe": 65, "de": 35}
+    assert s.engines[(0, 0)].read_q == 65       # 0 + 65
+    assert s.engines[(10, 0)].read_q == 65      # 30 + 35: equalised
+
+
+def test_split_read_collapses_to_pure_side_under_heavy_skew():
+    """When one queue exceeds the other by more than the request's own
+    read, water-filling clamps to a pure read on the short side."""
+    s = mk_sched(split_reads=True)
+    s.engines[(0, 0)].read_q = 1000
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r)
+    assert r.read_path == "de" and r.read_split == 1.0
+    assert r.pe_read_frac == 0.0
+    assert s.engines[(0, 0)].read_q == 1000     # untouched
+    assert s.engines[(10, 0)].read_q == 100
+
+
+def test_split_read_tokens_always_sum_to_cached():
+    s = mk_sched(split_reads=True)
+    for pe_q, de_q, cached in [(0, 0, 101), (7, 19, 33), (5, 0, 1)]:
+        s.engines[(0, 0)].read_q = pe_q
+        s.engines[(10, 0)].read_q = de_q
+        r = Request(rid=0, cached_tokens=cached, new_tokens=1, gen_tokens=1)
+        r.pe, r.de = (0, 0), (10, 0)
+        s.choose_read_path(r)
+        tokens = r.read_tokens_by_side()
+        assert tokens["pe"] + tokens["de"] == cached
+        # on_read_done per side restores the queues exactly
+        s.on_read_done((0, 0), tokens["pe"])
+        s.on_read_done((10, 0), tokens["de"])
+        assert s.engines[(0, 0)].read_q == pe_q
+        assert s.engines[(10, 0)].read_q == de_q
+
+
+# ---------------------------------------------------------------------------
 # properties
 # ---------------------------------------------------------------------------
 

@@ -43,13 +43,15 @@ def reference_generate(cfg, params, rounds, rng):
     return all_gen
 
 
-@pytest.mark.parametrize("mode", ["dualpath", "basic"])
+@pytest.mark.parametrize("mode", ["dualpath", "basic", "split"])
 def test_generation_with_cache_reuse_matches_reference(mode):
     cfg = get_config("qwen1.5-0.5b").reduced()
     params = init_params(cfg, KEY)
     rounds = [Round(20, 4), Round(13, 3), Round(9, 4)]
     traj = Trajectory(0, rounds)
-    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, mode=mode,
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1,
+                         mode="dualpath" if mode == "split" else mode,
+                         split_reads=(mode == "split"),
                          block_tokens=16, max_seq=160, de_slots=2, seed=0)
     sessions = sys_.run_offline([traj])
     assert sessions[0].rounds_done == 3
@@ -96,6 +98,25 @@ def test_dualpath_uses_both_sides_under_load():
     st = sys_.stats()
     assert st["read_bytes_de_side"] > 0, "storage->DE path never used"
     assert st["read_bytes_pe_side"] > 0
+
+
+def test_split_reads_use_both_sides_within_one_request():
+    """§6.1 future work executed for real: with split_reads the hit
+    FullBlocks of a single request are read partly on the PE side and
+    partly on the DE side (block-granular partition), and generation
+    still matches — asserted via the split arm of the reference test
+    above; here we check the split actually happened."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    trajs = [Trajectory(i, [Round(32, 3), Round(16, 3)]) for i in range(3)]
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, mode="dualpath",
+                         split_reads=True, block_tokens=16, max_seq=160,
+                         de_slots=4, seed=0)
+    sys_.run_offline(trajs)
+    st = sys_.stats()
+    assert st["split_reads"] > 0, "no request was split"
+    assert st["read_bytes_pe_side"] > 0
+    assert st["read_bytes_de_side"] > 0
 
 
 def test_basic_mode_never_uses_de_side():
