@@ -5,7 +5,12 @@ counts (CI-sized); default sizes reproduce the paper's operating points
 (fig7 at 1024 agents reaches the ~1.87x headline).
 """
 import argparse
+import os
 import sys
+
+if __package__ in (None, ""):       # direct `python benchmarks/run.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
 
 def main(argv=None) -> None:
@@ -13,12 +18,14 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--list", action="store_true",
+                    help="list benchmark names and exit")
     args = ap.parse_args(argv)
 
     from benchmarks import (fig7_offline, fig8_pd_ratio, fig9_append_gen,
                             fig10_online, fig12_ablation, fig13_balance,
-                            kernel_bench, micro_submit, roofline,
-                            table1_cache_compute, table3_scale)
+                            fig_tiered_prefetch, kernel_bench, micro_submit,
+                            roofline, table1_cache_compute, table3_scale)
     from benchmarks.common import header
 
     suite = {
@@ -31,9 +38,16 @@ def main(argv=None) -> None:
         "fig10": fig10_online.run,
         "fig12": fig12_ablation.run,
         "fig13": fig13_balance.run,
+        "fig_tiered": fig_tiered_prefetch.run,
         "table3": table3_scale.run,
         "roofline": roofline.run,
     }
+    if args.list:
+        for name, fn in suite.items():
+            doc = (sys.modules[fn.__module__].__doc__ or
+                   "").strip().splitlines()
+            print(f"{name}: {doc[0] if doc else ''}")
+        return
     only = set(args.only.split(",")) if args.only else None
     header()
     for name, fn in suite.items():

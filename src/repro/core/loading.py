@@ -26,7 +26,7 @@ forward pass, matching "transfers overlap with computation".
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional
 
 from repro.core.traffic import TrafficClass
 
@@ -143,6 +143,55 @@ def split_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int,
     return [l for l in legs if l.nbytes > 0]
 
 
+def tiered_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int,
+                     pe_snic_bytes: int, de_snic_bytes: int,
+                     pe_tier_bytes: int, de_tier_bytes: int) -> List[Leg]:
+    """Split read with node-local DRAM-tier hits (kvcache/tiers.py).
+
+    The hit partitions four ways: per side, ``*_snic_bytes`` are read
+    from remote storage (Fig. 4a/4b load legs) and ``*_tier_bytes`` are
+    already resident in that side's DRAM tier — they skip the storage
+    NIC entirely and appear as a zero-transfer ``*_tier_hit`` leg whose
+    only resource is the accounting key ``{side}_tier``.  Everything
+    downstream of the DRAM buffer is unchanged: tier bytes ride the same
+    buf→HBM / cross-network legs as freshly-read bytes, so the plan's
+    non-load resources equal ``split_read_plan`` with
+    ``pe_bytes = pe_snic + pe_tier`` byte-for-byte (property-tested in
+    tests/test_tiers.py), and the load legs conserve exactly:
+    ``pe_snic + de_snic + pe_tier + de_tier == hit_bytes``.
+    """
+    assert pe_snic_bytes >= 0 and de_snic_bytes >= 0
+    assert pe_tier_bytes >= 0 and de_tier_bytes >= 0
+    total = pe_snic_bytes + de_snic_bytes + pe_tier_bytes + de_tier_bytes
+    assert total == hit_bytes, (total, hit_bytes)
+    pe_total = pe_snic_bytes + pe_tier_bytes
+    de_total = de_snic_bytes + de_tier_bytes
+    full = hit_bytes + miss_bytes
+    legs = [
+        # DRAM-tier hits: already staged in that side's buffer — no SNIC
+        Leg("pe_tier_hit", pe_tier_bytes, ("pe_tier",), phase="load"),
+        Leg("de_tier_hit", de_tier_bytes, ("de_tier",), phase="load"),
+        # cold remainder still pays the storage NICs
+        Leg("storage_to_pe_buf", pe_snic_bytes,
+            ("pe_snic", "pe_dram"), phase="load"),
+        Leg("storage_to_de_buf", de_snic_bytes,
+            ("de_snic", "de_dram"), phase="load"),
+        # downstream movement is source-agnostic (tier == warm buffer)
+        Leg("pe_buf_to_pe_hbm", pe_total,
+            ("pe_cnic_rd", "pe_cnic_wr", "pe_dram"), layerwise=True),
+        Leg("de_buf_to_pe_hbm", de_total,
+            ("de_cnic_rd", "de_dram", "net", "pe_cnic_wr"), layerwise=True),
+        Leg("pe_hbm_to_de_buf", pe_total + miss_bytes,
+            ("pe_cnic_rd", "net", "de_cnic_wr", "de_dram"), layerwise=True),
+        Leg("de_buf_to_de_hbm", full,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram"), phase="decode_start"),
+        Leg("persist_new_kv", miss_bytes + gen_bytes,
+            ("de_cnic_rd", "de_cnic_wr", "de_dram", "de_snic"),
+            phase="decode"),
+    ]
+    return [l for l in legs if l.nbytes > 0]
+
+
 PLANS = {
     "pe": pe_read_plan,
     "de": de_read_plan,
@@ -152,7 +201,8 @@ PLANS = {
 
 
 def plan_for(read_path: str, read_split: float, hit_bytes: int,
-             miss_bytes: int, gen_bytes: int) -> List[Leg]:
+             miss_bytes: int, gen_bytes: int,
+             tier: Optional[tuple] = None) -> List[Leg]:
     """The legs a scheduled request actually executes.
 
     ``read_path``/``read_split`` come straight from the scheduler
@@ -161,7 +211,15 @@ def plan_for(read_path: str, read_split: float, hit_bytes: int,
     anything below means a split plan.  The simulator, the engines and
     the tests all dispatch through here so the byte accounting cannot
     diverge between them.
+
+    ``tier`` — optional explicit hit partition
+    ``(pe_snic, de_snic, pe_tier, de_tier)`` in bytes (from
+    ``Request.hit_bytes_partition``) for requests whose hit is partly
+    served by a node-local DRAM tier; it overrides the
+    ``read_split``-derived partition and must sum to ``hit_bytes``.
     """
+    if tier is not None:
+        return tiered_read_plan(hit_bytes, miss_bytes, gen_bytes, *tier)
     if read_path not in PLANS:
         raise ValueError(
             f"read_path {read_path!r} (valid: {sorted(PLANS)}); did the "

@@ -54,6 +54,13 @@ class Request:
     de: Optional[EngineId] = None
     read_path: Optional[str] = None   # 'pe' | 'de'
     read_split: float = 1.0           # fraction read on `read_path` side
+    # DRAM-tier serving (kvcache/tiers.py): ``dram_tokens`` hit tokens
+    # are already resident in the ``dram_side`` node's DRAM tier and
+    # never touch a storage NIC; ``snic_tokens`` is the explicit
+    # per-side partition of the remaining (SNIC-served) hit tokens.
+    dram_side: Optional[str] = None   # 'pe' | 'de'
+    dram_tokens: int = 0
+    snic_tokens: Optional[Dict[str, int]] = None
 
     @property
     def prompt_tokens(self) -> int:
@@ -66,13 +73,21 @@ class Request:
 
     @property
     def pe_read_frac(self) -> float:
-        """Fraction of hit bytes read via the PE-side storage NIC.
+        """Fraction of hit bytes entering via the PE side (tier + SNIC).
 
         Derived from (read_path, read_split): 1.0 for a pure PE read,
-        0.0 for a pure DE read, in between for a split read.  This is
-        the single source of truth the scheduler's read_q accounting,
-        the simulator's storage legs and the engines' block partition
-        all derive from."""
+        0.0 for a pure DE read, in between for a split read.  With a
+        DRAM-tier hit the explicit token partition is authoritative
+        (no float-derived flooring can drift from it).  This is the
+        single source of truth the scheduler's read_q accounting, the
+        simulator's storage legs and the engines' block partition all
+        derive from."""
+        if self.snic_tokens is not None:
+            if not self.cached_tokens:
+                return 0.0
+            pe_total = self.snic_tokens["pe"] + \
+                (self.dram_tokens if self.dram_side == "pe" else 0)
+            return pe_total / self.cached_tokens
         if self.read_path is None:
             return 0.0
         if self.read_path == "pe":
@@ -82,10 +97,47 @@ class Request:
     def read_tokens_by_side(self) -> Dict[str, int]:
         """Hit tokens charged to each side's disk reading queue.
 
-        PE side gets floor(cached * pe_frac); the DE side the remainder,
+        Tier-served tokens never enter a reading queue, so with an
+        explicit partition this is just the SNIC share per side.
+        Otherwise PE gets floor(cached * pe_frac) and DE the remainder,
         so the two sides always sum to exactly ``cached_tokens``."""
+        if self.snic_tokens is not None:
+            return dict(self.snic_tokens)
         pe_t = int(self.cached_tokens * self.pe_read_frac)
         return {"pe": pe_t, "de": self.cached_tokens - pe_t}
+
+    def hit_blocks_by_side(self, n_blocks: int) -> Dict[str, int]:
+        """Block-granular realisation of the hit partition: the leading
+        ``tier`` blocks come from the ``dram_side`` node's DRAM tier,
+        the next ``pe`` blocks via the PE-side storage NIC, the rest
+        via the DE side.  The single source both the engines' page
+        split and the simulator's tier-admission sets derive from, so
+        they can never disagree on which blocks entered where."""
+        if n_blocks <= 0 or not self.cached_tokens:
+            return {"tier": 0, "pe": 0, "de": max(n_blocks, 0)}
+        # exact when cached_tokens == n_blocks * block_tokens, which both
+        # callers guarantee (the sim floors cached_tokens to whole blocks
+        # at submit; serving's trie hit is block-granular) — dram_tokens
+        # is a whole-block prefix, so the division recovers its count
+        k_tier = (self.dram_tokens * n_blocks) // self.cached_tokens
+        tok = self.read_tokens_by_side()
+        rem_blocks = n_blocks - k_tier
+        rem_tok = tok["pe"] + tok["de"]
+        k_pe = int(round(rem_blocks * tok["pe"] / rem_tok)) if rem_tok else 0
+        return {"tier": k_tier, "pe": k_pe, "de": rem_blocks - k_pe}
+
+    def hit_bytes_partition(self, kv_per_token: int) -> Optional[tuple]:
+        """(pe_snic, de_snic, pe_tier, de_tier) hit bytes — the ``tier``
+        argument of loading.plan_for.  None when no DRAM tier served
+        this request (the read_split-derived partition applies)."""
+        if self.snic_tokens is None:
+            return None
+        return (self.snic_tokens["pe"] * kv_per_token,
+                self.snic_tokens["de"] * kv_per_token,
+                (self.dram_tokens if self.dram_side == "pe" else 0)
+                * kv_per_token,
+                (self.dram_tokens if self.dram_side == "de" else 0)
+                * kv_per_token)
 
 
 @dataclass
@@ -243,31 +295,81 @@ class Scheduler:
     # ------------------------------------------------------------------
     # read-path selection (§6.1 "KV-Cache Read Task Scheduling")
     # ------------------------------------------------------------------
-    def choose_read_path(self, req: Request) -> str:
+    def _water_fill_frac(self, pe_q: int, de_q: int, h: int) -> float:
+        """PE share x of ``h`` tokens equalising both sides' queue drain
+        times — pe_q + x·h = de_q + (1−x)·h, clamped to [0, 1]: with
+        equal NIC bandwidth the read finishes when the slower side
+        drains, so this is the unique split minimising the request's own
+        read completion time."""
+        return min(1.0, max(0.0, (de_q - pe_q + h) / (2.0 * h)))
+
+    def _shorter_queue_side(self, pe_q: int, de_q: int) -> str:
+        if pe_q == de_q:
+            # ties are frequent between queue build-ups; a fixed
+            # preference systematically overloads one side (measured
+            # Max/Avg 1.71 vs 1.49 RR) — alternate instead
+            self._tie_toggle = not getattr(self, "_tie_toggle", False)
+            return "pe" if self._tie_toggle else "de"
+        return "pe" if pe_q < de_q else "de"
+
+    def choose_read_path(self, req: Request,
+                         tier_tokens: Optional[Dict[str, int]] = None) -> str:
         assert req.pe is not None and req.de is not None, req.rid
         pe_q = self.engines[req.pe].read_q
         de_q = self.engines[req.de].read_q
+        if tier_tokens and req.cached_tokens:
+            t_pe = min(tier_tokens.get("pe", 0), req.cached_tokens)
+            t_de = min(tier_tokens.get("de", 0), req.cached_tokens)
+        else:
+            t_pe = t_de = 0
+        if t_pe or t_de:
+            # Tier-aware selection: prefer the side whose DRAM tier
+            # already holds (a prefix of) the hit — those tokens skip
+            # the storage NIC entirely.  The cold remainder is routed by
+            # disk-queue depth exactly like a tier-less read (a small
+            # warm prefix must not drag the whole cold read onto a
+            # backlogged NIC): shorter queue wins, or water-filled
+            # across both SNICs when split_reads is on.
+            if t_pe > t_de:
+                side, t = "pe", t_pe
+            elif t_de > t_pe:
+                side, t = "de", t_de
+            else:
+                # equal prefixes: shorter queue wins, full ties alternate
+                # (a fixed preference would bias one side — see
+                # _shorter_queue_side)
+                side, t = self._shorter_queue_side(pe_q, de_q), t_pe
+            req.dram_side, req.dram_tokens = side, t
+            rem = req.cached_tokens - t
+            snic = {"pe": 0, "de": 0}
+            if rem:
+                if self.split_reads:
+                    frac_pe = self._water_fill_frac(pe_q, de_q, rem)
+                    snic["pe"] = int(rem * frac_pe)
+                    snic["de"] = rem - snic["pe"]
+                else:
+                    snic[self._shorter_queue_side(pe_q, de_q)] = rem
+            req.snic_tokens = snic
+            pe_total = snic["pe"] + (t if side == "pe" else 0)
+            de_total = snic["de"] + (t if side == "de" else 0)
+            if pe_total == de_total:
+                req.read_path = side
+            else:
+                req.read_path = "pe" if pe_total > de_total else "de"
+            major = pe_total if req.read_path == "pe" else de_total
+            req.read_split = major / req.cached_tokens
+            self.engines[req.pe].read_q += snic["pe"]
+            self.engines[req.de].read_q += snic["de"]
+            return req.read_path
         if self.split_reads and req.cached_tokens:
             # Split read (§6.1 future work): partition the hit across
             # both sides' storage NICs in proportion to their disk-queue
-            # depths.  Water-filling: with equal NIC bandwidth the read
-            # finishes when the slower side drains, so pick x (PE share)
-            # equalising pe_q + x·h = de_q + (1-x)·h — the unique split
-            # that minimises the request's own read completion time.
-            h = req.cached_tokens
-            frac_pe = (de_q - pe_q + h) / (2.0 * h)
-            frac_pe = min(1.0, max(0.0, frac_pe))
+            # depths (water-filling, see _water_fill_frac).
+            frac_pe = self._water_fill_frac(pe_q, de_q, req.cached_tokens)
             req.read_path = "pe" if frac_pe >= 0.5 else "de"
             req.read_split = max(frac_pe, 1.0 - frac_pe)
         else:
-            if pe_q == de_q:
-                # ties are frequent between queue build-ups; a fixed
-                # preference systematically overloads one side (measured
-                # Max/Avg 1.71 vs 1.49 RR) — alternate instead
-                self._tie_toggle = not getattr(self, "_tie_toggle", False)
-                req.read_path = "pe" if self._tie_toggle else "de"
-            else:
-                req.read_path = "pe" if pe_q < de_q else "de"
+            req.read_path = self._shorter_queue_side(pe_q, de_q)
             req.read_split = 1.0
         tokens = req.read_tokens_by_side()
         self.engines[req.pe].read_q += tokens["pe"]
@@ -343,7 +445,8 @@ class RoundRobinScheduler(Scheduler):
             out.append(Assignment(req, de.engine))
         return out
 
-    def choose_read_path(self, req: Request) -> str:
+    def choose_read_path(self, req: Request, tier_tokens=None) -> str:
+        # the RR baseline ignores tier residency (like it ignores queues)
         req.read_path = "pe" if next(self._rr_path) % 2 == 0 else "de"
         req.read_split = 1.0
         side = self.engines[req.pe if req.read_path == "pe" else req.de]

@@ -1,4 +1,8 @@
 from repro.kvcache.store import AccountingKVStore, KVStore, MemoryKVStore
+from repro.kvcache.tiers import (AgenticTTLPolicy, DramTier, LRUPolicy,
+                                 ThinkTimePrefetcher, make_policy)
 from repro.kvcache.trie import BlockTrie
 
-__all__ = ["AccountingKVStore", "KVStore", "MemoryKVStore", "BlockTrie"]
+__all__ = ["AccountingKVStore", "KVStore", "MemoryKVStore", "BlockTrie",
+           "DramTier", "LRUPolicy", "AgenticTTLPolicy",
+           "ThinkTimePrefetcher", "make_policy"]

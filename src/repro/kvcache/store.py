@@ -44,6 +44,14 @@ class KVStore:
     def read_blocks(self, refs: Sequence[int]) -> List:
         return [self.read_block(r) for r in refs]
 
+    def peek(self, ref: int):
+        """Payload access with NO byte accounting — for warming a DRAM
+        tier with blocks that already moved through the node (e.g. the
+        decode side's full context at round end): those bytes were paid
+        by the plan legs that staged them, so peeking must not charge
+        the storage NIC a second time."""
+        return self._get(ref)
+
     # storage-layer hooks
     def _put(self, ref, block):  # pragma: no cover - abstract
         raise NotImplementedError

@@ -1,0 +1,444 @@
+"""Tiered KV-Cache: a capacity-bounded node-local DRAM tier.
+
+The remote ``KVStore`` (3FS in the paper) is reachable only through the
+storage NIC, so every hit byte a round-start read pulls pays the SNIC —
+the exact resource DualPath identifies as the bottleneck.  ``DramTier``
+layers a node-local DRAM cache over the store: blocks staged there are
+served at round start without touching the SNIC, turning the
+storage-to-decode path into a cache-warming path.
+
+Design points (mirroring DUAL-BLADE's dual-path offloading and the
+heterogeneous-memory KV-placement line of work, PAPERS.md):
+
+* **capacity-bounded** — admissions never push ``used_bytes`` past
+  ``capacity_bytes``; if eviction cannot free enough space the admission
+  is *rejected* (the block simply stays remote), never over-committed;
+* **ref-count pinning** — blocks referenced by an in-flight request (or
+  otherwise held, e.g. by the trie) carry a pin count and are never
+  eviction victims; a fully-pinned tier rejects admissions rather than
+  evict pinned data;
+* **pluggable eviction** — ``LRUPolicy`` (recency) and
+  ``AgenticTTLPolicy`` (trajectory liveness: blocks of finished
+  trajectories first, then blocks whose trajectory has been idle past a
+  TTL, then LRU) choose victims;
+* **dual accounting/payload use** — with a ``backing`` store the tier
+  serves *real* FullBlocks (serving/engines); without one it is a pure
+  occupancy model (the discrete-event simulator drives admissions and
+  reads itself and charges resources from the loading plans).
+
+``ThinkTimePrefetcher`` is the policy half of the inter-round prefetch:
+given the predicted next-round hit refs it plans which missing blocks to
+stage (in chunks, so a round start mid-prefetch still finds a useful
+resident prefix).  The *mechanism* — moving the bytes — belongs to the
+caller: the simulator enqueues chunk reads on the storage-NIC FIFO, the
+serving system reads through the backing store.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Hashable, Iterable, Iterator, List, Optional, \
+    Sequence, Set
+
+
+@dataclass
+class TierEntry:
+    ref: Hashable
+    nbytes: int
+    owner: Optional[Hashable] = None      # trajectory / session id
+    payload: object = None                # FullBlock (None in sim mode)
+    last_used: float = 0.0
+    pins: int = 0
+    prefetched: bool = False
+
+
+class EvictionPolicy:
+    """Victim selection strategy.  ``victims`` yields *candidate* entries
+    in eviction order; the tier skips pinned ones and stops once enough
+    bytes are freed."""
+
+    name = "base"
+
+    def victims(self, tier: "DramTier", now: float) -> Iterator[TierEntry]:
+        raise NotImplementedError  # pragma: no cover - abstract
+
+
+class LRUPolicy(EvictionPolicy):
+    """Least-recently-used: the tier keeps entries in recency order."""
+
+    name = "lru"
+
+    def victims(self, tier: "DramTier", now: float) -> Iterator[TierEntry]:
+        # lazy: the tier collects victims and drops them only after the
+        # iteration stops, so no copy of the entry table is needed and a
+        # satisfied eviction touches only the stale front of the order
+        yield from tier._entries.values()
+
+
+class AgenticTTLPolicy(EvictionPolicy):
+    """Trajectory-liveness eviction for agentic workloads.
+
+    A trajectory's blocks stay useful exactly as long as the trajectory
+    is alive: once the agent finishes, its KV prefix will never be hit
+    again (hits occur only within a trajectory, paper §A.4).  Victim
+    order is therefore
+
+    1. blocks of trajectories marked *done* (``note_done``),
+    2. blocks whose trajectory has been idle longer than ``ttl_s``
+       (agent abandoned / stuck in a long tool call),
+    3. plain LRU over the rest.
+    """
+
+    name = "agentic-ttl"
+
+    def __init__(self, ttl_s: float = 120.0):
+        self.ttl_s = ttl_s
+
+    def victims(self, tier: "DramTier", now: float) -> Iterator[TierEntry]:
+        done = tier._done_owners
+        for owner in list(done):                # 1. dead trajectories
+            for ref in list(tier._by_owner.get(owner, ())):
+                e = tier._entries.get(ref)
+                if e is not None:
+                    yield e
+        # owner liveness is evaluated once per eviction pass (owners are
+        # few — one per trajectory — so this stays cheap under pressure)
+        expired = {o for o, last in tier._owner_alive.items()
+                   if o not in done and now - last > self.ttl_s}
+        if expired:
+            for e in tier._entries.values():    # 2. TTL-expired
+                if e.owner in expired:
+                    yield e
+        for e in tier._entries.values():        # 3. LRU fallback
+            if e.owner not in done and e.owner not in expired:
+                yield e
+
+
+def make_policy(name: str, **kw) -> EvictionPolicy:
+    if isinstance(name, EvictionPolicy):
+        return name
+    if name == "lru":
+        return LRUPolicy()
+    if name in ("agentic-ttl", "ttl"):
+        ttl = kw.get("ttl_s")
+        return AgenticTTLPolicy(ttl) if ttl is not None else \
+            AgenticTTLPolicy()
+    raise ValueError(f"unknown tier eviction policy {name!r} "
+                     f"(valid: lru, agentic-ttl)")
+
+
+class DramTier:
+    """Node-local DRAM tier over a remote KVStore.
+
+    With ``backing`` set the tier duck-types the store's hot-path API
+    (``alloc_ref`` / ``read_block`` / ``read_blocks`` / ``write_block``)
+    so engines can be pointed at it transparently: reads served from
+    DRAM never reach the backing store (no SNIC bytes), misses read
+    through and are admitted, writes write through and warm the tier.
+    """
+
+    def __init__(self, capacity_bytes: float, policy="lru",
+                 backing=None, ttl_s: Optional[float] = None):
+        self.capacity_bytes = float(capacity_bytes)
+        kw = {"ttl_s": ttl_s} if ttl_s is not None else {}
+        self.policy = make_policy(policy, **kw)
+        self.backing = backing
+        self._entries: "OrderedDict[Hashable, TierEntry]" = OrderedDict()
+        self._by_owner: Dict[Hashable, Set[Hashable]] = {}
+        self._owner_alive: Dict[Hashable, float] = {}
+        self._done_owners: Set[Hashable] = set()
+        self._tick = itertools.count()
+        self.used_bytes = 0
+        self._pinned_bytes = 0
+        # --- accounting -------------------------------------------------
+        self.dram_hit_bytes = 0       # hit bytes served from DRAM (no SNIC)
+        self.miss_bytes = 0           # demand reads through the backing store
+        self.prefetch_bytes = 0       # bytes staged ahead of demand
+        self.evicted_bytes = 0
+        self.rejected_bytes = 0       # admissions refused (pinned/capacity)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    # occupancy queries
+    # ------------------------------------------------------------------
+    @property
+    def free_bytes(self) -> float:
+        return self.capacity_bytes - self.used_bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def contains(self, ref) -> bool:
+        return ref in self._entries
+
+    def resident_prefix(self, refs: Sequence) -> int:
+        """Number of *leading* refs resident — hit lengths are always
+        prefixes (trie granularity), so only a resident prefix can be
+        served without a hole."""
+        n = 0
+        for r in refs:
+            if r not in self._entries:
+                break
+            n += 1
+        return n
+
+    # ------------------------------------------------------------------
+    # pinning (in-flight requests / trie holds)
+    # ------------------------------------------------------------------
+    def pin(self, refs: Iterable) -> None:
+        for r in refs:
+            e = self._entries.get(r)
+            if e is not None:
+                if e.pins == 0:
+                    self._pinned_bytes += e.nbytes
+                e.pins += 1
+
+    def unpin(self, refs: Iterable) -> None:
+        for r in refs:
+            e = self._entries.get(r)
+            if e is not None and e.pins > 0:
+                e.pins -= 1
+                if e.pins == 0:
+                    self._pinned_bytes -= e.nbytes
+
+    def pinned_bytes(self) -> int:
+        return self._pinned_bytes
+
+    def can_admit(self, nbytes: int) -> bool:
+        """Whether an admission of ``nbytes`` could possibly succeed:
+        free space plus every evictable (unpinned) byte covers it.
+        Lets callers (e.g. the prefetcher) skip paying a backing-store
+        read for data the tier would immediately reject."""
+        return 0 < nbytes <= self.capacity_bytes - self._pinned_bytes
+
+    # ------------------------------------------------------------------
+    # trajectory liveness (AgenticTTLPolicy signals)
+    # ------------------------------------------------------------------
+    def note_alive(self, owner, now: Optional[float] = None) -> None:
+        if owner is None:
+            return
+        self._owner_alive[owner] = self._now(now)
+        self._done_owners.discard(owner)
+
+    def note_done(self, owner) -> None:
+        if owner is None:
+            return
+        if not self._by_owner.get(owner):
+            # no blocks left: purge immediately so long-lived deployments
+            # don't accumulate one bookkeeping record per dead trajectory
+            self._forget_owner(owner)
+        else:
+            self._done_owners.add(owner)
+
+    def _forget_owner(self, owner) -> None:
+        self._by_owner.pop(owner, None)
+        self._owner_alive.pop(owner, None)
+        self._done_owners.discard(owner)
+
+    # ------------------------------------------------------------------
+    # admission / eviction
+    # ------------------------------------------------------------------
+    def _now(self, now: Optional[float]) -> float:
+        return float(next(self._tick)) if now is None else float(now)
+
+    def touch(self, refs: Iterable, now: Optional[float] = None) -> None:
+        t = self._now(now)
+        for r in refs:
+            e = self._entries.get(r)
+            if e is not None:
+                e.last_used = t
+                self._entries.move_to_end(r)
+
+    def admit(self, ref, nbytes: int, owner=None, payload=None,
+              now: Optional[float] = None, prefetch: bool = False) -> bool:
+        """Stage one block; returns False when it cannot fit (eviction
+        could not free enough unpinned bytes).  Re-admitting a resident
+        ref refreshes recency (and payload, if one is supplied)."""
+        t = self._now(now)
+        e = self._entries.get(ref)
+        if e is not None:
+            e.last_used = t
+            if payload is not None:
+                e.payload = payload
+            if owner is not None:
+                self._reown(e, owner)
+            self._entries.move_to_end(ref)
+            return True
+        nbytes = int(nbytes)
+        if nbytes > self.capacity_bytes or nbytes <= 0:
+            self.rejected_bytes += max(nbytes, 0)
+            return False
+        if self.used_bytes + nbytes > self.capacity_bytes and \
+                not self._evict(self.used_bytes + nbytes -
+                                self.capacity_bytes, t):
+            self.rejected_bytes += nbytes
+            return False
+        e = TierEntry(ref=ref, nbytes=nbytes, owner=owner, payload=payload,
+                      last_used=t, prefetched=prefetch)
+        self._entries[ref] = e
+        self.used_bytes += nbytes
+        if owner is not None:
+            self._by_owner.setdefault(owner, set()).add(ref)
+        if prefetch:
+            self.prefetch_bytes += nbytes
+        return True
+
+    def _reown(self, e: TierEntry, owner) -> None:
+        if e.owner == owner:
+            return
+        if e.owner is not None:
+            self._by_owner.get(e.owner, set()).discard(e.ref)
+        e.owner = owner
+        self._by_owner.setdefault(owner, set()).add(e.ref)
+
+    def _evict(self, need_bytes: float, now: float) -> bool:
+        """Free at least ``need_bytes`` of *unpinned* entries, in policy
+        order.  Returns False if the tier cannot free enough."""
+        freed = 0.0
+        victims: List[TierEntry] = []
+        for e in self.policy.victims(self, now):
+            if freed >= need_bytes:
+                break
+            if e.pins > 0 or e.ref not in self._entries:
+                continue
+            victims.append(e)
+            freed += e.nbytes
+        if freed < need_bytes:
+            return False
+        for e in victims:
+            self._drop(e)
+        return True
+
+    def _drop(self, e: TierEntry) -> None:
+        self._entries.pop(e.ref, None)
+        self.used_bytes -= e.nbytes
+        self.evicted_bytes += e.nbytes
+        self.evictions += 1
+        if e.owner is not None:
+            held = self._by_owner.get(e.owner)
+            if held is not None:
+                held.discard(e.ref)
+                if not held and e.owner in self._done_owners:
+                    self._forget_owner(e.owner)   # last dead block gone
+
+    def evict_bytes(self, nbytes: float, now: Optional[float] = None) -> bool:
+        """External pressure hook (tests / capacity rebalancing)."""
+        return self._evict(nbytes, self._now(now))
+
+    # ------------------------------------------------------------------
+    # accounting-only serving (the simulator's path)
+    # ------------------------------------------------------------------
+    def serve(self, refs: Sequence, now: Optional[float] = None) -> int:
+        """Mark ``refs`` (all resident) as served from DRAM; returns the
+        byte count.  The simulator calls this for the resident prefix it
+        charged to the ``*_tier`` plan leg."""
+        t = self._now(now)
+        served = 0
+        for r in refs:
+            e = self._entries[r]
+            e.last_used = t
+            self._entries.move_to_end(r)
+            served += e.nbytes
+            self.hits += 1
+        self.dram_hit_bytes += served
+        return served
+
+    # ------------------------------------------------------------------
+    # payload serving (KVStore duck-type for engines / serving)
+    # ------------------------------------------------------------------
+    @property
+    def layout(self):
+        return self.backing.layout
+
+    def alloc_ref(self) -> int:
+        return self.backing.alloc_ref()
+
+    def read_block(self, ref, owner=None, now: Optional[float] = None):
+        e = self._entries.get(ref)
+        if e is not None and e.payload is not None:
+            t = self._now(now)
+            e.last_used = t
+            self._entries.move_to_end(ref)
+            self.hits += 1
+            self.dram_hit_bytes += e.nbytes
+            return e.payload
+        block = self.backing.read_block(ref)       # SNIC read-through
+        nbytes = self.backing.layout.full_block_bytes
+        self.misses += 1
+        self.miss_bytes += nbytes
+        self.admit(ref, nbytes, owner=owner, payload=block, now=now)
+        return block
+
+    def read_blocks(self, refs: Sequence, owner=None,
+                    now: Optional[float] = None) -> List:
+        return [self.read_block(r, owner=owner, now=now) for r in refs]
+
+    def write_block(self, ref, block, owner=None,
+                    now: Optional[float] = None) -> None:
+        """Write-through + tier warm-up: the block just materialised in
+        this node's DRAM buffer on its way to storage, so admit it."""
+        self.backing.write_block(ref, block)
+        self.admit(ref, self.backing.layout.full_block_bytes, owner=owner,
+                   payload=block, now=now)
+
+    def prefetch_block(self, ref, owner=None,
+                       now: Optional[float] = None) -> int:
+        """Stage one block from the backing store ahead of demand;
+        returns the bytes moved (0 if already resident or inadmissible).
+        The admissibility check runs BEFORE the backing read: a full or
+        heavily-pinned tier must not burn the very SNIC bandwidth the
+        prefetch exists to save on data it would immediately drop."""
+        if ref in self._entries:
+            self.touch([ref], now)
+            return 0
+        nbytes = self.backing.layout.full_block_bytes
+        if not self.can_admit(nbytes):
+            return 0
+        block = self.backing.read_block(ref)
+        if self.admit(ref, nbytes, owner=owner, payload=block, now=now,
+                      prefetch=True):
+            return nbytes
+        return 0
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return dict(
+            used_bytes=self.used_bytes,
+            capacity_bytes=self.capacity_bytes,
+            entries=len(self._entries),
+            dram_hit_bytes=self.dram_hit_bytes,
+            miss_bytes=self.miss_bytes,
+            prefetch_bytes=self.prefetch_bytes,
+            evicted_bytes=self.evicted_bytes,
+            rejected_bytes=self.rejected_bytes,
+            hits=self.hits, misses=self.misses, evictions=self.evictions,
+        )
+
+
+class ThinkTimePrefetcher:
+    """Plans which predicted next-round hit blocks to stage during the
+    inter-round think gap.
+
+    Between rounds an agent thinks (tool calls, environment latency) and
+    the storage NICs sit idle; this window is free bandwidth.  The
+    predicted hit for the next round is the trajectory's current context
+    — exactly the blocks the trie would match — so the plan is simply
+    the non-resident ones, chunked so that a round starting mid-prefetch
+    still finds a useful resident *prefix* (chunks are staged in order).
+    """
+
+    def __init__(self, chunk_blocks: int = 32):
+        self.chunk_blocks = max(int(chunk_blocks), 1)
+        self.rounds_planned = 0
+        self.blocks_planned = 0
+
+    def plan(self, tier: DramTier, refs: Sequence) -> List[List]:
+        """Missing refs, in order, grouped into stage-order chunks."""
+        missing = [r for r in refs if not tier.contains(r)]
+        self.rounds_planned += 1
+        self.blocks_planned += len(missing)
+        return [missing[i:i + self.chunk_blocks]
+                for i in range(0, len(missing), self.chunk_blocks)]

@@ -35,7 +35,7 @@ from repro.configs.base import ARCH_IDS, ModelConfig, ShapeSpec
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models import abstract_params, decode_step, forward, init_decode_state
 from repro.models.sharding import param_partition_specs, use_mesh
-from repro.roofline.hlo import parse_hlo_metrics
+from repro.roofline.hlo import parse_hlo_metrics, xla_cost_analysis
 from repro.training.train import make_train_step
 
 MOE_IMPL = "ep"
@@ -309,7 +309,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)   # list-vs-dict across JAX versions
     hlo = compiled.as_text()
     if hlo_dir:
         import gzip

@@ -49,6 +49,18 @@ _SKIP_OPS = {
 _TRIP = re.compile(r"known_trip_count[^0-9]*(\d+)")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalise ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a bare dict; newer JAX (>= 0.4.3x) returns a
+    one-element list of per-device dicts (and an empty list when the
+    analysis is unavailable).  Callers always want a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 def _shape_info(text: str) -> Tuple[int, List[int]]:
     """(total bytes over all shapes, dims of the first shape)."""
     total, first_dims = 0, None

@@ -31,6 +31,7 @@ from repro.engines import kvio
 from repro.engines.runtime import (DecodeEngine, EngineRequest,
                                    PrefillEngine, uses_state_blob)
 from repro.kvcache.store import MemoryKVStore, StateBlobStore
+from repro.kvcache.tiers import DramTier, ThinkTimePrefetcher
 from repro.kvcache.trie import BlockTrie
 from repro.sim.traces import Trajectory
 
@@ -53,7 +54,9 @@ class ServingSystem:
                  n_de: int = 1, mode: str = "dualpath",
                  block_tokens: int = 16, max_seq: int = 512,
                  de_slots: int = 8, quota_s: float = 0.3, seed: int = 0,
-                 split_reads: bool = False, layerwise: bool = True):
+                 split_reads: bool = False, layerwise: bool = True,
+                 dram_tier_bytes: float = 0, tier_policy: str = "lru",
+                 tier_ttl_s: Optional[float] = None, prefetch: bool = False):
         assert mode in ("dualpath", "basic")
         self.cfg = cfg
         self.mode = mode
@@ -64,6 +67,21 @@ class ServingSystem:
         self.trie = BlockTrie(block_tokens)
         self.sched = Scheduler(alpha=1 << 30, beta=1 << 30,
                                split_reads=split_reads)
+        # node-local DRAM tiers over the remote store (kvcache/tiers.py):
+        # reads served from a tier never reach the store (= the SNIC).
+        # NOTE: serving has no wall clock — the tier's internal tick
+        # counter supplies "time", so an agentic-ttl ``tier_ttl_s`` is
+        # measured in tier operations here (the simulator, which has a
+        # clock, passes real seconds).
+        self.tiers: Dict[int, DramTier] = {}
+        if dram_tier_bytes:
+            for node in range(n_pe + n_de):
+                self.tiers[node] = DramTier(dram_tier_bytes,
+                                            policy=tier_policy,
+                                            ttl_s=tier_ttl_s,
+                                            backing=self.store)
+        self.prefetcher = ThinkTimePrefetcher() \
+            if (prefetch and self.tiers) else None
         self.pes: Dict[Tuple[int, int], PrefillEngine] = {}
         self.des: Dict[Tuple[int, int], DecodeEngine] = {}
         for i in range(n_pe):
@@ -76,7 +94,10 @@ class ServingSystem:
             eid = (n_pe + j, 0)
             st = self.sched.register_engine(eid, node=n_pe + j, kind="de",
                                             group=1000)
-            de = DecodeEngine(eid, cfg, params, self.store, self.trie,
+            # the DE persists through its node tier (write-through + tier
+            # warm-up) when one is configured
+            de_store = self.tiers.get(n_pe + j, self.store)
+            de = DecodeEngine(eid, cfg, params, de_store, self.trie,
                               self.layout, max_seq, n_slots=de_slots,
                               blob_store=self.blob_store)
             st.free_hbm_tokens = de_slots * max_seq
@@ -86,6 +107,7 @@ class ServingSystem:
         self._inflight: Dict[int, EngineRequest] = {}
         self.rng = np.random.default_rng(seed)
         self.read_bytes_by_side = {"pe": 0, "de": 0}
+        self.dram_bytes_by_side = {"pe": 0, "de": 0}
         self.n_split_reads = 0
 
     # ------------------------------------------------------------------
@@ -108,9 +130,12 @@ class ServingSystem:
                            append_tokens=prompt[hit:], hit_refs=refs)
         er._blob = blob
         er._session = sess
+        er._tier_pinned = None
         sess.current = er
         sess.next_round += 1
         self._inflight[req.rid] = er
+        for tier in self.tiers.values():
+            tier.note_alive(sess.traj.tid)
         self.sched.submit(req)
 
     # ------------------------------------------------------------------
@@ -137,7 +162,26 @@ class ServingSystem:
                 req.read_path = "pe"
                 self.sched.engines[req.pe].read_q += req.cached_tokens
             else:
-                self.sched.choose_read_path(req)
+                tier_tokens = None
+                if self.tiers and er.hit_refs:
+                    bt = self.layout.block_tokens
+                    tier_tokens = {
+                        "pe": self.tiers[req.pe[0]]
+                              .resident_prefix(er.hit_refs) * bt,
+                        "de": self.tiers[req.de[0]]
+                              .resident_prefix(er.hit_refs) * bt,
+                    }
+                self.sched.choose_read_path(req, tier_tokens=tier_tokens)
+                if req.dram_tokens:
+                    # pin the tier-resident prefix NOW: reads of other
+                    # ready requests admit blocks (and may evict) before
+                    # this one's turn — pinned blocks cannot disappear
+                    # between the path decision and the read
+                    bt = self.layout.block_tokens
+                    node = (req.pe if req.dram_side == "pe" else req.de)[0]
+                    prefix = er.hit_refs[:req.dram_tokens // bt]
+                    self.tiers[node].pin(prefix)
+                    er._tier_pinned = (node, prefix)
             ready.append(er)
         for er in ready:
             self._do_read(er)
@@ -173,17 +217,52 @@ class ServingSystem:
             self._release_read_q(req)
             return
         n = len(er.hit_refs)
-        k = int(round(req.pe_read_frac * n))       # PE share, whole pages
-        if 0 < k < n:
+        tid = er._session.traj.tid
+        # ---- source segments: (kind, side, refs, lo) --------------------
+        # The DRAM-tier prefix (when any) is served by the tier side's
+        # node without touching the store; the cold remainder is read
+        # from storage, PE side first then DE side (page order).  The
+        # block partition comes from the request itself (the same one
+        # the simulator's admission sets use).
+        part = req.hit_blocks_by_side(n)
+        k_tier, k_pe = part["tier"], part["pe"]
+        segs = [("tier", req.dram_side, er.hit_refs[:k_tier], 0),
+                ("snic", "pe", er.hit_refs[k_tier:k_tier + k_pe], k_tier),
+                ("snic", "de", er.hit_refs[k_tier + k_pe:], k_tier + k_pe)]
+        # a split read means both storage NICs served this request (PR 1
+        # semantics) — tier-served segments don't count
+        if part["pe"] and part["de"]:
             self.n_split_reads += 1
         payload: List = [None] * n
-        for side, refs, lo in (("pe", er.hit_refs[:k], 0),
-                               ("de", er.hit_refs[k:], k)):
+        for kind, side, refs, lo in segs:
             if not refs:
                 continue
-            blocks = self.store.read_blocks(refs)
+            node = (req.pe if side == "pe" else req.de)[0]
+            # read_bytes_by_side stays per-side *storage* (SNIC) traffic,
+            # matching the sim's snic accounting; DRAM-served bytes are
+            # tracked separately in dram_bytes_by_side
+            if kind == "tier":
+                tier = self.tiers[node]
+                # pinned since the path decision — every ref is resident,
+                # so none of these reads reaches the backing store
+                blocks = tier.read_blocks(refs, owner=tid)
+                self.dram_bytes_by_side[side] += sum(b.nbytes
+                                                     for b in blocks)
+            elif node in self.tiers:
+                # read through the node tier: misses hit the store (the
+                # SNIC) and are admitted, warming the tier for the next
+                # round on this node; stray resident blocks (outside the
+                # probed prefix) still serve from DRAM
+                tier = self.tiers[node]
+                m0, h0 = tier.miss_bytes, tier.dram_hit_bytes
+                blocks = tier.read_blocks(refs, owner=tid)
+                self.read_bytes_by_side[side] += tier.miss_bytes - m0
+                self.dram_bytes_by_side[side] += tier.dram_hit_bytes - h0
+            else:
+                blocks = self.store.read_blocks(refs)
+                self.read_bytes_by_side[side] += sum(b.nbytes
+                                                     for b in blocks)
             nbytes = sum(b.nbytes for b in blocks)
-            self.read_bytes_by_side[side] += nbytes
             tm = pe.tm if side == "pe" else de_tm
             tm.submit(lambda blocks=blocks, lo=lo:
                       payload.__setitem__(slice(lo, lo + len(blocks)),
@@ -194,6 +273,10 @@ class ServingSystem:
                 # DE buffer -> PE over the compute network (layerwise)
                 pe.tm.submit(lambda: None, nbytes, TrafficClass.KV_TRANSFER)
                 pe.tm.drain()
+        if er._tier_pinned is not None:
+            node, prefix = er._tier_pinned
+            self.tiers[node].unpin(prefix)
+            er._tier_pinned = None
         pe.install_hit_kv(er, [b for b in payload if b is not None])
         self._release_read_q(req)
 
@@ -245,8 +328,49 @@ class ServingSystem:
                 sess.rounds_done += 1
                 sess.current = None
                 del self._inflight[er.req.rid]
+                if self.tiers:
+                    self._round_finished_tier(sess, er.req.de[0])
                 if sess.next_round < sess.traj.n_rounds:
                     self._submit_round(sess)
+
+    # ------------------------------------------------------------------
+    def _round_finished_tier(self, sess: AgentSession, de_node: int):
+        """Inter-round tier maintenance (think-time window).
+
+        1. Warm the decode node's tier with the round's full context —
+           every one of those blocks just staged through that node's
+           DRAM (decode_start H2D + block persists), so admission moves
+           no new storage bytes (``store.peek``).
+        2. Think-time prefetch: the next round's predicted hit is
+           exactly the trie match of the current context; stage any
+           blocks capacity pressure evicted back into the tier ahead of
+           the round start.  Reads go through the backing store (real
+           SNIC traffic, paid during the idle gap).  Serving has no wall
+           clock, so "during the gap" degenerates to right-after-warm-up
+           here — it repairs evictions other sessions inflicted earlier
+           in the step; the simulator, which has a clock, additionally
+           models the late-window timing (Sim._schedule_prefetch).
+        """
+        tid = sess.traj.tid
+        tier = self.tiers[de_node]
+        if uses_state_blob(self.cfg):
+            return
+        if sess.next_round >= sess.traj.n_rounds:
+            # finished trajectory: never hit again (§A.4) — warming the
+            # tier with it would only evict live sessions' prefixes
+            for t in self.tiers.values():
+                t.note_done(tid)
+            return
+        _, refs = self.trie.match(sess.context)
+        # tail-first: keeps the leading blocks most recent, so LRU
+        # eviction trims the tail and the servable prefix survives
+        for r in reversed(refs):
+            tier.admit(r, self.layout.full_block_bytes, owner=tid,
+                       payload=self.store.peek(r))
+        if self.prefetcher is not None:
+            for chunk in self.prefetcher.plan(tier, refs):
+                for r in chunk:
+                    tier.prefetch_block(r, owner=tid)
 
     # ------------------------------------------------------------------
     def run_offline(self, trajectories: List[Trajectory],
@@ -266,6 +390,7 @@ class ServingSystem:
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
+        tiers = list(self.tiers.values())
         return dict(
             store_reads=self.store.bytes_read,
             store_writes=self.store.bytes_written,
@@ -275,4 +400,11 @@ class ServingSystem:
             trie_blocks=self.trie.n_blocks,
             prefill_tokens=sum(p.prefill_tokens for p in self.pes.values()),
             decode_steps=sum(d.decode_steps for d in self.des.values()),
+            # --- DRAM tier (zeros when disabled) -----------------------
+            dram_hit_bytes=sum(t.dram_hit_bytes for t in tiers),
+            dram_bytes_pe_side=self.dram_bytes_by_side["pe"],
+            dram_bytes_de_side=self.dram_bytes_by_side["de"],
+            tier_miss_bytes=sum(t.miss_bytes for t in tiers),
+            tier_prefetch_bytes=sum(t.prefetch_bytes for t in tiers),
+            tier_evicted_bytes=sum(t.evicted_bytes for t in tiers),
         )

@@ -41,6 +41,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.intra import AttnTimeModel, PrefillWork, QuotaPacker, attn_flops
 from repro.core.loading import Leg, PLANS, plan_for
 from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
+from repro.kvcache.tiers import DramTier, ThinkTimePrefetcher
 from repro.sim.spec import ModelSimSpec, NodeSpec
 from repro.sim.traces import Trajectory
 
@@ -143,6 +144,12 @@ class SimConfig:
     kv_dtype_bytes: int = 1           # fp8 KV (paper default)
     online: bool = False
     seed: int = 0
+    # --- node-local DRAM KV tier (kvcache/tiers.py; 0 = off) ------------
+    dram_tier_bytes: float = 0.0      # per-node tier capacity [bytes]
+    tier_policy: str = "lru"          # lru | agentic-ttl
+    tier_ttl_s: float = 120.0         # agentic-ttl idle threshold
+    prefetch: bool = False            # think-time prefetcher
+    prefetch_chunk_blocks: int = 32   # blocks per staged prefetch chunk
 
 
 class _EngineSim:
@@ -168,7 +175,7 @@ class RoundSim:
     __slots__ = ("req", "traj", "round_idx", "agent", "submit_t", "read_done_t",
                  "prefill_done_t", "first_decode_t", "done_t", "transfer_done",
                  "prefill_left", "gen_left", "ctx", "h2d_done", "tokens_out",
-                 "second_token_t", "charged", "read_legs")
+                 "second_token_t", "charged", "read_legs", "tier_pinned")
 
     def __init__(self, req: Request, traj: Trajectory, round_idx: int, agent):
         self.req = req
@@ -194,6 +201,9 @@ class RoundSim:
         # reads have one entry per side, letting tests assert both NICs
         # served this request's load phase concurrently
         self.read_legs: List[list] = []
+        # (node, refs) of DRAM-tier blocks pinned while this round is in
+        # flight — unpinned at round completion
+        self.tier_pinned = None
 
     def charge(self, leg: Leg):
         for r in leg.resources:
@@ -201,13 +211,16 @@ class RoundSim:
 
 
 class AgentSim:
-    __slots__ = ("traj", "next_round", "start_t", "end_t")
+    __slots__ = ("traj", "next_round", "start_t", "end_t", "prefetch_pinned")
 
     def __init__(self, traj: Trajectory):
         self.traj = traj
         self.next_round = 0
         self.start_t = -1.0
         self.end_t = -1.0
+        # (node, refs) leased by the think-time prefetcher until the next
+        # round is submitted (staged blocks must survive to round start)
+        self.prefetch_pinned = None
 
 
 class Sim:
@@ -232,6 +245,19 @@ class Sim:
             for r in range(g):
                 self.cnic_rd[(n, r)] = PSResource(f"cr{n}.{r}", cfg.node.cnic_bw)
                 self.cnic_wr[(n, r)] = PSResource(f"cw{n}.{r}", cfg.node.cnic_bw)
+
+        # --- node-local DRAM KV tier (capacity model; kvcache/tiers.py) ---
+        # Refs are (trajectory id, block index); block bytes follow the
+        # whole-block hit granularity the trie imposes.
+        self.block_bytes = cfg.block_tokens * self.kv_per_token
+        self.tiers: Dict[int, DramTier] = {}
+        if cfg.dram_tier_bytes > 0 and self.block_bytes > 0:
+            for n in range(n_nodes):
+                self.tiers[n] = DramTier(cfg.dram_tier_bytes,
+                                         policy=cfg.tier_policy,
+                                         ttl_s=cfg.tier_ttl_s)
+        self.prefetcher = ThinkTimePrefetcher(cfg.prefetch_chunk_blocks) \
+            if (cfg.prefetch and self.tiers) else None
 
         # --- engines / groups ----------------------------------------------
         npg = cfg.nodes_per_pe_group or cfg.P
@@ -295,6 +321,7 @@ class Sim:
         self.tps_samples: List[Tuple[float, int, int]] = []     # (t, prompt, gen)
         self.prompt_tokens_done = 0
         self.gen_tokens_done = 0
+        self.snic_hit_read_bytes = 0   # demand hit bytes that paid a SNIC
 
     # ------------------------------------------------------------------
     # PS rate management
@@ -350,6 +377,12 @@ class Sim:
         self._submit_round(agent)
 
     def _submit_round(self, agent: AgentSim):
+        if agent.prefetch_pinned is not None:
+            # the prefetcher's lease ends at submission: the round's own
+            # in-flight pin (taken at read start) protects what it uses
+            node, refs = agent.prefetch_pinned
+            self.tiers[node].unpin(refs)
+            agent.prefetch_pinned = None
         i = agent.next_round
         traj = agent.traj
         if i >= traj.n_rounds:
@@ -368,6 +401,8 @@ class Sim:
         rs.submit_t = self.loop.now
         self.rounds.append(rs)
         rs.req._sim_round = rs          # backref
+        for tier in self.tiers.values():
+            tier.note_alive(traj.tid, now=self.loop.now)
         self.sched.submit(req)
         self._kick_scheduler()
 
@@ -412,22 +447,55 @@ class Sim:
             req.read_path = "pe"
             self._read_done(rs)
             return
+        bt = self.cfg.block_tokens
+        hit_refs = [(rs.traj.tid, b) for b in range(req.cached_tokens // bt)]
         if self.cfg.mode == "basic":
             req.read_path = "pe"
             self.sched.engines[req.pe].read_q += req.cached_tokens
         else:
-            self.sched.choose_read_path(req)
+            tier_tokens = None
+            if self.tiers and hit_refs:
+                tier_tokens = {
+                    "pe": self.tiers[req.pe[0]].resident_prefix(hit_refs) * bt,
+                    "de": self.tiers[req.de[0]].resident_prefix(hit_refs) * bt,
+                }
+            self.sched.choose_read_path(req, tier_tokens=tier_tokens)
+            if req.dram_tokens:
+                # serve the resident prefix from the tier side's DRAM and
+                # pin it for the round (in-flight blocks never evicted)
+                node = (req.pe if req.dram_side == "pe" else req.de)[0]
+                prefix = hit_refs[:req.dram_tokens // bt]
+                self.tiers[node].serve(prefix, now=self.loop.now)
+                self.tiers[node].pin(prefix)
+                rs.tier_pinned = (node, prefix)
         load_legs = [l for l in self._request_legs(req)
                      if l.phase == "load" and l.nbytes > 0]
+        # tier-hit legs move no new bytes (the data already sits in that
+        # node's DRAM buffer): charge the accounting resource and drop
+        # them from the SNIC work list
+        snic_legs = []
+        for leg in load_legs:
+            if leg.name.endswith("_tier_hit"):
+                rs.charge(leg)
+            else:
+                snic_legs.append(leg)
+        # block-granular admission sets per side: the SNIC-read blocks
+        # warm the reading node's tier when one is configured
+        admit_refs = {"pe": [], "de": []}
+        tokens = req.read_tokens_by_side()
+        if self.tiers and hit_refs:
+            part = req.hit_blocks_by_side(len(hit_refs))
+            lo = part["tier"]
+            admit_refs["pe"] = hit_refs[lo:lo + part["pe"]]
+            admit_refs["de"] = hit_refs[lo + part["pe"]:]
         # an SSM/hybrid state blob is one opaque snapshot — it cannot be
         # partitioned, so it rides the majority side's storage NIC
         extra = self.model.ssm_state_bytes
         major = "pe" if req.pe_read_frac >= 0.5 else "de"
-        tokens = req.read_tokens_by_side()
-        if not load_legs:
-            # no per-token KV to read (e.g. pure-SSM models): release the
-            # read_q charge on both sides, then complete (after the blob
-            # read, if any)
+        if not snic_legs:
+            # no SNIC bytes to read (pure-SSM models, or the whole hit
+            # was served from the DRAM tier): release the read_q charge
+            # on both sides, then complete (after the blob read, if any)
             def finish(rs=rs):
                 for side, engine in (("pe", req.pe), ("de", req.de)):
                     if tokens[side]:
@@ -440,21 +508,42 @@ class Sim:
                 return
             finish()
             return
-        pending = [len(load_legs)]
-        for leg in load_legs:
+        leg_sides = {("pe" if "pe_snic" in l.resources else "de")
+                     for l in snic_legs}
+        # the blob rides the majority side's SNIC; when the tier served
+        # that side's whole hit there is no leg to piggyback on, so it
+        # gets its own FIFO entry (its bytes must never vanish)
+        blob_alone = extra > 0 and major not in leg_sides
+        pending = [len(snic_legs) + (1 if blob_alone else 0)]
+
+        def one_done():
+            pending[0] -= 1
+            if pending[0] == 0:
+                self._read_done(rs)
+
+        if blob_alone:
+            node = (req.pe if major == "pe" else req.de)[0]
+            self.snic[node].enqueue(extra, one_done)
+        for leg in snic_legs:
             side = "pe" if "pe_snic" in leg.resources else "de"
             engine = req.pe if side == "pe" else req.de
-            nbytes = leg.nbytes + (extra if side == major else 0)
+            nbytes = leg.nbytes + \
+                (extra if side == major and not blob_alone else 0)
             rs.charge(leg)
+            self.snic_hit_read_bytes += leg.nbytes
             entry = [side, nbytes, -1.0, -1.0]
             rs.read_legs.append(entry)
 
             def leg_done(side=side, engine=engine, entry=entry):
                 entry[3] = self.loop.now
                 self.sched.on_read_done(engine, tokens[side])
-                pending[0] -= 1
-                if pending[0] == 0:
-                    self._read_done(rs)
+                tier = self.tiers.get(engine[0])
+                if tier is not None:
+                    now = self.loop.now
+                    for ref in admit_refs[side]:
+                        tier.admit(ref, self.block_bytes,
+                                   owner=rs.traj.tid, now=now)
+                one_done()
 
             self.snic[engine[0]].enqueue(
                 nbytes, leg_done, read=True,
@@ -487,7 +576,8 @@ class Sim:
         miss = req.new_tokens * self.kv_per_token
         if self.cfg.mode == "basic":
             return PLANS["basic"](hit, miss, 0)
-        return plan_for(req.read_path, req.read_split, hit, miss, 0)
+        return plan_for(req.read_path, req.read_split, hit, miss, 0,
+                        tier=req.hit_bytes_partition(self.kv_per_token))
 
     def _resmap(self, req: Request):
         (pn, pr), (dn, dr) = req.pe, req.de
@@ -701,8 +791,7 @@ class Sim:
                 e.resident_tokens -= r.req.hbm_tokens
                 self.sched.on_request_done(r.req.de, r.req)
                 r.done_t = self.loop.now
-                r.agent.next_round += 1
-                self._submit_round(r.agent)
+                self._round_finished(r, e.node)
         if self.cfg.mode != "oracle":
             for node, nb in persist_bytes.items():
                 # miss-token KV persists ride along with generated blocks
@@ -710,6 +799,115 @@ class Sim:
         self._de_stepping[gid] = False
         self._wake_de_group(gid)
         self._kick_scheduler()
+
+    def _round_finished(self, rs: RoundSim, de_node: int):
+        """Round completion: release tier pins, warm the DE node's tier
+        with the round's full context (every one of those blocks staged
+        through DE DRAM on its way to HBM / storage), then enter the
+        agent's think-time window — the idle gap the prefetcher uses to
+        stage the *next* round's predicted hit — before submitting the
+        next round."""
+        agent, traj = rs.agent, rs.traj
+        tid = traj.tid
+        now = self.loop.now
+        if rs.tier_pinned is not None:
+            node, refs = rs.tier_pinned
+            self.tiers[node].unpin(refs)
+            rs.tier_pinned = None
+        agent.next_round += 1
+        i = agent.next_round
+        if i >= traj.n_rounds:
+            # finished trajectory: its blocks will never be hit again
+            # (§A.4) — no warm-up (it would only evict live agents'
+            # prefixes), just release the owner for eager reclamation
+            for t in self.tiers.values():
+                t.note_done(tid)
+            self._submit_round(agent)     # records end_t
+            return
+        tier = self.tiers.get(de_node)
+        if tier is not None:
+            bt = self.cfg.block_tokens
+            ctx = rs.req.prompt_tokens + rs.req.gen_tokens
+            # tail-first admission: the LEADING blocks end up most
+            # recent, so LRU pressure evicts the context tail first and
+            # the resident-prefix (the only thing a round can serve)
+            # survives — head-first order would evict block 0 first and
+            # collapse the prefix to zero under any pressure
+            for b in reversed(range(ctx // bt)):
+                tier.admit((tid, b), self.block_bytes, owner=tid, now=now)
+        think = traj.rounds[i].think
+        if think > 0:
+            if self.prefetcher is not None:
+                self._schedule_prefetch(agent, de_node, think)
+            self.loop.after(think, lambda a=agent: self._submit_round(a))
+        else:
+            self._submit_round(agent)
+
+    def _schedule_prefetch(self, agent: AgentSim, node: int, think: float):
+        """Think-time prefetch: stage the next round's predicted hit
+        blocks (the trajectory's current context — exactly what the trie
+        will match) into the previous decode node's DRAM tier.
+
+        Fired *late* in the think window — just early enough to restage
+        the whole hit at SNIC bandwidth (with slack) — so it repairs the
+        evictions other trajectories inflicted during the gap instead of
+        re-admitting what the round-end warm-up already left resident.
+        Staged and already-resident predicted blocks are pinned (a
+        lease) until the round submits, so a prefetch cannot itself be
+        evicted before it pays off."""
+        tier = self.tiers.get(node)
+        if tier is None:
+            return
+        traj = agent.traj
+        tid = traj.tid
+        i = agent.next_round
+        cached = traj.context_before(i)
+        n_refs = cached // self.cfg.block_tokens
+        if n_refs == 0:
+            return
+        stage_s = n_refs * self.block_bytes / self.cfg.node.snic_bw
+        delay = max(0.0, min(think - 1.25 * stage_s, 0.9 * think))
+
+        def issue(agent=agent, tier=tier, node=node, tid=tid, i=i):
+            if agent.next_round != i or agent.prefetch_pinned is not None:
+                return                       # stale wake-up
+            refs = [(tid, b) for b in range(n_refs)]
+            pinned: List = []
+            resident = refs[:tier.resident_prefix(refs)]
+            # extend the lease over blocks already resident...
+            tier.pin(resident)
+            pinned.extend(resident)
+            agent.prefetch_pinned = (node, pinned)
+            # ...and stage the missing ones in order, chunk by chunk,
+            # bounded by what the tier could actually hold (free +
+            # evictable bytes) — staging reads the tier must drop would
+            # burn exactly the SNIC bandwidth prefetch exists to save
+            budget = int((tier.capacity_bytes - tier.pinned_bytes()) //
+                         max(self.block_bytes, 1))
+            for chunk in self.prefetcher.plan(tier, refs):
+                chunk = chunk[:budget]
+                if not chunk:
+                    break
+                budget -= len(chunk)
+                nbytes = len(chunk) * self.block_bytes
+
+                def staged(chunk=chunk):
+                    now = self.loop.now
+                    # lease still open? (a chunk can drain from the FIFO
+                    # after the round already submitted — still admit,
+                    # but don't pin past the lease)
+                    lease = agent.prefetch_pinned is not None and \
+                        agent.prefetch_pinned[1] is pinned
+                    for ref in chunk:
+                        if tier.admit(ref, self.block_bytes, owner=tid,
+                                      now=now, prefetch=True) and lease:
+                            tier.pin([ref])
+                            pinned.append(ref)
+
+                self.snic[node].enqueue(nbytes, staged, read=True,
+                                        prefetch=True)
+
+        self.loop.after(delay, issue)
 
     # ------------------------------------------------------------------
     # metrics
@@ -725,6 +923,9 @@ class Sim:
         import numpy as np
         pct = lambda xs, q: float(np.percentile(xs, q)) if xs else float("nan")
         mean = lambda xs: float(np.mean(xs)) if xs else float("nan")
+        tiers = list(self.tiers.values())
+        dram_hit = sum(t.dram_hit_bytes for t in tiers)
+        denom = dram_hit + self.snic_hit_read_bytes
         return dict(
             finished_agents=len(jcts),
             finished_rounds=len(done_rounds),
@@ -735,6 +936,13 @@ class Sim:
             sim_time=self.loop.now,
             prompt_tokens=self.prompt_tokens_done,
             gen_tokens=self.gen_tokens_done,
+            # --- DRAM tier (kvcache/tiers.py; zeros when disabled) -----
+            dram_hit_bytes=dram_hit,
+            snic_hit_read_bytes=self.snic_hit_read_bytes,
+            dram_hit_ratio=(dram_hit / denom) if denom else 0.0,
+            tier_prefetch_bytes=sum(t.prefetch_bytes for t in tiers),
+            tier_evicted_bytes=sum(t.evicted_bytes for t in tiers),
+            tier_evictions=sum(t.evictions for t in tiers),
         )
 
 
@@ -756,6 +964,7 @@ class _FifoNic:
         self.total_bytes = 0
         self.read_bytes = 0
         self.write_bytes = 0
+        self.prefetch_bytes = 0
         self.samples: List[Tuple[float, float]] = []   # (t_done, bytes)
 
     def queue_tokens(self, kv_per_token: float) -> int:
@@ -763,8 +972,9 @@ class _FifoNic:
             return 0
         return int(self.queued_bytes / kv_per_token)
 
-    def enqueue(self, nbytes: float, on_done, read=True, on_start=None):
-        self.queue.append((nbytes, on_done, read, on_start))
+    def enqueue(self, nbytes: float, on_done, read=True, on_start=None,
+                prefetch=False):
+        self.queue.append((nbytes, on_done, read, on_start, prefetch))
         self.queued_bytes += nbytes
         if not self.busy:
             self._serve()
@@ -774,7 +984,7 @@ class _FifoNic:
             self.busy = False
             return
         self.busy = True
-        nbytes, cb, read, on_start = self.queue.popleft()
+        nbytes, cb, read, on_start, prefetch = self.queue.popleft()
         if on_start is not None:
             on_start(self.sim.loop.now)
         dt = nbytes / self.bw
@@ -782,7 +992,11 @@ class _FifoNic:
         def done():
             self.queued_bytes -= nbytes
             self.total_bytes += nbytes
-            if read:
+            if prefetch:
+                # think-time staging reads — separated from demand reads
+                # so round-start SNIC traffic stays directly observable
+                self.prefetch_bytes += nbytes
+            elif read:
                 self.read_bytes += nbytes
             else:
                 self.write_bytes += nbytes

@@ -143,14 +143,16 @@ def test_sim_charges_match_loading_plans_to_the_byte():
     """The sim executes exactly the plan legs: per-round charged bytes
     per symbolic resource equal core/loading's plan sums (which are in
     turn pinned to the §4.2 Eq. 1–8 coefficients in test_loading.py) —
-    byte-exact, for pure and split reads alike."""
+    byte-exact, for pure, split and DRAM-tiered reads alike."""
     from repro.core.loading import resource_bytes
     trajs = generate_dataset(6, 32768, seed=2)
-    for split in (False, True):
+    for split, tier in ((False, 0.0), (True, 0.0), (False, 2e9),
+                        (True, 2e9)):
         cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
-                        mode="dualpath", split_reads=split)
+                        mode="dualpath", split_reads=split,
+                        dram_tier_bytes=tier)
         sim = Sim(cfg, trajs).run()
-        checked = 0
+        checked = tiered = 0
         for rs in sim.rounds:
             if rs.done_t < 0 or rs.req.read_path is None:
                 continue
@@ -158,6 +160,77 @@ def test_sim_charges_match_loading_plans_to_the_byte():
                     if l.phase != "decode"]     # persists aggregate per block
             exp = {k: v for k, v in resource_bytes(legs).items() if v}
             got = {k: v for k, v in rs.charged.items() if v}
-            assert got == exp, (split, rs.req.rid, got, exp)
+            assert got == exp, (split, tier, rs.req.rid, got, exp)
+            checked += 1
+            tiered += bool(rs.req.dram_tokens)
+        assert checked > 0
+        if tier:
+            assert tiered > 0, "tier arm never served a DRAM hit"
+
+
+# ---------------------------------------------------------------------------
+# tiered KV-cache (kvcache/tiers.py) in the simulator
+# ---------------------------------------------------------------------------
+
+
+def test_tiered_sim_conserves_bytes_and_saves_snic_reads():
+    """ISSUE acceptance on the Table-2 32K workload: the prefetch arm
+    reports a nonzero DRAM-tier hit ratio and strictly fewer SNIC
+    hit-read bytes than the off arm, while per-request conservation
+    (dram-served + snic-served == hit bytes) holds exactly."""
+    trajs = generate_dataset(16, 32768, seed=0, think_mean_s=2.0)
+    res = {}
+    for label, tier, pf in (("off", 0.0, False), ("lru", 1.5e9, False),
+                            ("lru+pf", 1.5e9, True)):
+        cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
+                        mode="dualpath", dram_tier_bytes=tier, prefetch=pf)
+        sim = Sim(cfg, trajs).run()
+        r = sim.results()
+        assert r["finished_agents"] == 16, (label, r)
+        checked = 0
+        for rs in sim.rounds:
+            if rs.done_t < 0 or rs.req.read_path is None:
+                continue
+            c = rs.charged
+            served = (c.get("pe_snic", 0) + c.get("de_snic", 0) +
+                      c.get("pe_tier", 0) + c.get("de_tier", 0))
+            assert served == rs.req.cached_tokens * sim.kv_per_token, \
+                (label, rs.req.rid)
             checked += 1
         assert checked > 0
+        res[label] = r
+    assert res["off"]["dram_hit_ratio"] == 0.0
+    for arm in ("lru", "lru+pf"):
+        assert res[arm]["dram_hit_ratio"] > 0.0, arm
+        assert res[arm]["snic_hit_read_bytes"] < \
+            res["off"]["snic_hit_read_bytes"], arm
+    # think-time prefetch staged bytes and did not lower the hit ratio
+    assert res["lru+pf"]["tier_prefetch_bytes"] > 0
+    assert res["lru+pf"]["dram_hit_ratio"] >= res["lru"]["dram_hit_ratio"]
+
+
+def test_tiered_sim_pins_never_exceed_capacity_and_policies_run():
+    for policy in ("lru", "agentic-ttl"):
+        trajs = generate_dataset(8, 32768, seed=3, think_mean_s=1.0)
+        cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
+                        mode="dualpath", dram_tier_bytes=1e9,
+                        tier_policy=policy, prefetch=True)
+        sim = Sim(cfg, trajs).run()
+        assert sim.results()["finished_agents"] == 8
+        for tier in sim.tiers.values():
+            assert tier.used_bytes <= tier.capacity_bytes
+            # every in-flight pin was released at round end
+            assert tier.pinned_bytes() == 0, policy
+
+
+def test_think_time_delays_next_round_submission():
+    """A round's think gap separates the previous completion from the
+    next submission — the idle window the prefetcher uses."""
+    from repro.sim.traces import Round, Trajectory
+    traj = Trajectory(0, [Round(256, 8), Round(64, 8, think=5.0)])
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
+                    mode="dualpath")
+    sim = Sim(cfg, [traj]).run()
+    assert sim.results()["finished_agents"] == 1
+    r0, r1 = sim.rounds[0], sim.rounds[1]
+    assert r1.submit_t - r0.done_t >= 5.0 - 1e-9

@@ -1,0 +1,324 @@
+"""Tiered KV-cache (kvcache/tiers.py): pinning, eviction, conservation.
+
+The two load-bearing invariants (ISSUE acceptance):
+
+* **pinned blocks survive arbitrary eviction pressure** — ref-counted
+  pins make in-flight / trie-held blocks ineligible victims, no matter
+  how much admission pressure the tier sees;
+* **byte accounting conserves exactly** — a tiered loading plan's
+  DRAM-served + SNIC-served load bytes equal the hit bytes, and the
+  plan's non-storage resources are byte-identical to the equivalent
+  split plan (the tier only changes *where* hit bytes come from, never
+  how many move downstream).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocks import BlockLayout
+from repro.core.loading import (de_read_plan, pe_read_plan, plan_for,
+                                resource_bytes, split_read_plan,
+                                tiered_read_plan)
+from repro.core.scheduler import Request, Scheduler
+from repro.kvcache.store import MemoryKVStore
+from repro.kvcache.tiers import (AgenticTTLPolicy, DramTier, LRUPolicy,
+                                 ThinkTimePrefetcher, make_policy)
+
+BLOCK = 100          # bytes per block in the accounting-only tests
+
+
+# ---------------------------------------------------------------------------
+# pinning under pressure (property)
+# ---------------------------------------------------------------------------
+
+
+@given(cap_blocks=st.integers(2, 40),
+       n_pinned=st.integers(1, 10),
+       pressure=st.integers(0, 300),
+       policy=st.sampled_from(["lru", "agentic-ttl"]))
+@settings(max_examples=60, deadline=None)
+def test_pinned_blocks_survive_arbitrary_eviction_pressure(
+        cap_blocks, n_pinned, pressure, policy):
+    tier = DramTier(cap_blocks * BLOCK, policy=policy)
+    n_pinned = min(n_pinned, cap_blocks)
+    pinned = [("pin", i) for i in range(n_pinned)]
+    for ref in pinned:
+        assert tier.admit(ref, BLOCK, owner="infl")
+    tier.pin(pinned)
+    # arbitrary admission pressure from other owners
+    for i in range(pressure):
+        tier.admit(("flood", i), BLOCK, owner=f"o{i % 7}")
+        tier.note_done(f"o{i % 3}")     # some trajectories die mid-flood
+    for ref in pinned:
+        assert tier.contains(ref), f"pinned block {ref} was evicted"
+    assert tier.used_bytes <= tier.capacity_bytes
+    # after unpinning, the same pressure CAN evict them
+    tier.unpin(pinned)
+    for i in range(cap_blocks + n_pinned):
+        tier.admit(("flood2", i), BLOCK, owner="o-new")
+    if pressure >= cap_blocks:          # tier was genuinely full
+        assert not all(tier.contains(r) for r in pinned)
+
+
+def test_fully_pinned_tier_rejects_rather_than_evicts():
+    tier = DramTier(3 * BLOCK)
+    refs = ["a", "b", "c"]
+    for r in refs:
+        tier.admit(r, BLOCK)
+    tier.pin(refs)
+    assert not tier.admit("d", BLOCK)
+    assert tier.rejected_bytes == BLOCK
+    assert all(tier.contains(r) for r in refs)
+    tier.unpin(["a"])
+    assert tier.admit("d", BLOCK)       # now "a" is a legal victim
+    assert not tier.contains("a")
+
+
+# ---------------------------------------------------------------------------
+# byte conservation (property)
+# ---------------------------------------------------------------------------
+
+
+@given(hit=st.integers(0, 10 ** 9), miss=st.integers(0, 10 ** 7),
+       gen=st.integers(0, 10 ** 7), data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_tiered_plan_conserves_and_matches_split_plan(hit, miss, gen, data):
+    """dram-served + snic-served == hit bytes exactly, and every
+    non-storage resource moves the same bytes as the pure split plan
+    with the same per-side totals."""
+    a = data.draw(st.integers(0, hit)) if hit else 0
+    b = data.draw(st.integers(0, hit - a)) if hit - a else 0
+    c = data.draw(st.integers(0, hit - a - b)) if hit - a - b else 0
+    pe_snic, de_snic, pe_tier, de_tier = a, b, c, hit - a - b - c
+    plan = tiered_read_plan(hit, miss, gen, pe_snic, de_snic,
+                            pe_tier, de_tier)
+    rb = resource_bytes(plan)
+    # load-phase conservation, byte-exact (the de_snic resource also
+    # carries decode-phase persists, so restrict to load legs)
+    load = resource_bytes([l for l in plan if l.phase == "load"])
+    storage = {k: v for k, v in load.items()
+               if k in ("pe_snic", "de_snic", "pe_tier", "de_tier")}
+    assert sum(storage.values()) == hit
+    assert load.get("pe_snic", 0) == pe_snic
+    assert load.get("de_snic", 0) == de_snic
+    assert load.get("pe_tier", 0) == pe_tier
+    assert load.get("de_tier", 0) == de_tier
+    # non-storage resources identical to the split plan at the same
+    # per-side totals — minus the side's DRAM staging write the SNIC
+    # leg would have performed (tier bytes are already in DRAM)
+    rb_split = resource_bytes(split_read_plan(hit, miss, gen,
+                                              pe_snic + pe_tier))
+    for k in set(rb) | set(rb_split):
+        if k.endswith("_tier"):
+            continue
+        if k == "pe_snic":
+            assert rb_split.get(k, 0) - rb.get(k, 0) == pe_tier
+            continue
+        if k == "de_snic":
+            # split plan's de_snic carries the de hit share + persists;
+            # the tiered plan omits the tier-served share
+            assert rb_split.get(k, 0) - rb.get(k, 0) == de_tier
+            continue
+        if k == "pe_dram":
+            assert rb_split.get(k, 0) - rb.get(k, 0) == pe_tier
+            continue
+        if k == "de_dram":
+            assert rb_split.get(k, 0) - rb.get(k, 0) == de_tier
+            continue
+        assert rb.get(k, 0) == rb_split.get(k, 0), k
+
+
+def test_tiered_plan_zero_tier_equals_split_plan():
+    for pe_b in (0, 37, 500, 1000):
+        assert tiered_read_plan(1000, 10, 5, pe_b, 1000 - pe_b, 0, 0) == \
+            split_read_plan(1000, 10, 5, pe_b)
+
+
+def test_plan_for_tier_dispatch():
+    """plan_for(tier=...) is the single dispatch the sim shares with the
+    tests — identical to calling tiered_read_plan directly."""
+    part = (300, 200, 400, 100)
+    assert plan_for("pe", 0.7, 1000, 10, 5, tier=part) == \
+        tiered_read_plan(1000, 10, 5, *part)
+
+
+@given(cap_blocks=st.integers(1, 30), n_reads=st.integers(0, 60))
+@settings(max_examples=40, deadline=None)
+def test_backing_tier_read_accounting_conserves(cap_blocks, n_reads):
+    """Every byte requested through the tier is either a DRAM hit or a
+    backing (SNIC) read: dram_hit + miss == total requested."""
+    layout = BlockLayout(n_layers=2, block_tokens=4, bytes_per_token_layer=8)
+    store = MemoryKVStore(layout)
+    refs = []
+    for _ in range(12):
+        r = store.alloc_ref()
+        store.write_block(r, np.zeros(layout.full_block_shape(), np.uint8))
+        refs.append(r)
+    tier = DramTier(cap_blocks * layout.full_block_bytes, backing=store)
+    base_reads = store.bytes_read
+    rng = np.random.default_rng(0)
+    requested = 0
+    for _ in range(n_reads):
+        ref = refs[int(rng.integers(0, len(refs)))]
+        blk = tier.read_block(ref)
+        assert blk.shape == layout.full_block_shape()
+        requested += layout.full_block_bytes
+    assert tier.dram_hit_bytes + tier.miss_bytes == requested
+    assert store.bytes_read - base_reads == tier.miss_bytes
+    assert tier.used_bytes <= tier.capacity_bytes
+
+
+# ---------------------------------------------------------------------------
+# eviction policies
+# ---------------------------------------------------------------------------
+
+
+def test_lru_evicts_least_recently_used_first():
+    tier = DramTier(3 * BLOCK, policy="lru")
+    for r in ("a", "b", "c"):
+        tier.admit(r, BLOCK)
+    tier.touch(["a"])                  # a is now the most recent
+    tier.admit("d", BLOCK)             # evicts b (oldest untouched)
+    assert tier.contains("a") and not tier.contains("b")
+    tier.admit("e", BLOCK)             # evicts c
+    assert not tier.contains("c")
+    assert tier.contains("a")
+
+
+def test_agentic_ttl_evicts_dead_trajectories_before_live_ones():
+    tier = DramTier(4 * BLOCK, policy="agentic-ttl", ttl_s=100.0)
+    tier.admit("live1", BLOCK, owner="t_live", now=0.0)
+    tier.admit("dead1", BLOCK, owner="t_dead", now=1.0)
+    tier.admit("dead2", BLOCK, owner="t_dead", now=2.0)
+    tier.admit("live2", BLOCK, owner="t_live", now=3.0)
+    tier.note_alive("t_live", now=3.0)
+    tier.note_done("t_dead")
+    # dead blocks are MORE recent than live1, yet they go first
+    tier.admit("new1", BLOCK, owner="t_live", now=4.0)
+    tier.admit("new2", BLOCK, owner="t_live", now=4.0)
+    assert not tier.contains("dead1") and not tier.contains("dead2")
+    assert tier.contains("live1") and tier.contains("live2")
+
+
+def test_agentic_ttl_expires_idle_trajectories():
+    tier = DramTier(2 * BLOCK, policy="agentic-ttl", ttl_s=10.0)
+    tier.admit("idle", BLOCK, owner="t_idle", now=0.0)
+    tier.note_alive("t_idle", now=0.0)
+    tier.admit("act", BLOCK, owner="t_act", now=50.0)
+    tier.note_alive("t_act", now=50.0)
+    # t_idle has been idle for 50s > ttl: evicted before the LRU choice
+    tier.admit("new", BLOCK, owner="t_act", now=51.0)
+    assert not tier.contains("idle")
+    assert tier.contains("act")
+
+
+def test_make_policy():
+    assert isinstance(make_policy("lru"), LRUPolicy)
+    assert isinstance(make_policy("agentic-ttl"), AgenticTTLPolicy)
+    assert make_policy("agentic-ttl", ttl_s=5.0).ttl_s == 5.0
+    with pytest.raises(ValueError):
+        make_policy("fifo")
+
+
+# ---------------------------------------------------------------------------
+# resident prefix + prefetch planning
+# ---------------------------------------------------------------------------
+
+
+def test_resident_prefix_counts_only_leading_blocks():
+    tier = DramTier(10 * BLOCK)
+    refs = [("t", i) for i in range(5)]
+    for r in (refs[0], refs[1], refs[3]):   # hole at index 2
+        tier.admit(r, BLOCK)
+    assert tier.resident_prefix(refs) == 2
+    tier.admit(refs[2], BLOCK)
+    assert tier.resident_prefix(refs) == 4
+
+
+def test_prefetcher_plans_missing_blocks_in_chunked_order():
+    tier = DramTier(100 * BLOCK)
+    refs = [("t", i) for i in range(10)]
+    for r in refs[:3]:
+        tier.admit(r, BLOCK)
+    pf = ThinkTimePrefetcher(chunk_blocks=4)
+    chunks = pf.plan(tier, refs)
+    assert [r for ch in chunks for r in ch] == refs[3:]
+    assert all(len(ch) <= 4 for ch in chunks)
+    assert pf.blocks_planned == 7
+    # fully resident -> nothing to stage
+    for r in refs:
+        tier.admit(r, BLOCK)
+    assert pf.plan(tier, refs) == []
+
+
+# ---------------------------------------------------------------------------
+# tier-aware read-path selection (scheduler integration)
+# ---------------------------------------------------------------------------
+
+
+def _sched(**kw):
+    s = Scheduler(alpha=1 << 30, beta=1 << 30, **kw)
+    s.register_engine((0, 0), node=0, kind="pe", group=0)
+    st_ = s.register_engine((1, 0), node=1, kind="de", group=1000)
+    st_.free_hbm_tokens = 1 << 30
+    return s
+
+
+def test_scheduler_prefers_side_whose_dram_holds_the_hit():
+    s = _sched()
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (1, 0)
+    s.engines[(0, 0)].read_q = 0        # PE queue shorter...
+    s.engines[(1, 0)].read_q = 50
+    path = s.choose_read_path(r, tier_tokens={"pe": 0, "de": 60})
+    assert path == "de"                 # ...but the DE tier holds the hit
+    assert r.dram_side == "de" and r.dram_tokens == 60
+    # the cold remainder is routed by queue depth (PE is idle), and only
+    # SNIC tokens charge the disk reading queues
+    assert r.read_tokens_by_side() == {"pe": 40, "de": 0}
+    assert s.engines[(0, 0)].read_q == 40
+    assert s.engines[(1, 0)].read_q == 50
+    # partition sums to the full hit in bytes, tier side carries the hit
+    assert r.hit_bytes_partition(7) == (40 * 7, 0, 0, 60 * 7)
+    assert r.pe_read_frac == pytest.approx(0.4)
+    # block-granular realisation agrees: 6 tier blocks, then 4 PE blocks
+    assert r.hit_blocks_by_side(10) == {"tier": 6, "pe": 4, "de": 0}
+
+
+def test_scheduler_tiny_tier_prefix_cannot_hijack_the_cold_remainder():
+    """A 1-block warm prefix must not drag a 10k-token cold read onto a
+    backlogged NIC: the remainder goes to the shorter queue, exactly as
+    a tier-less read would."""
+    s = _sched()
+    r = Request(rid=0, cached_tokens=10016, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (1, 0)
+    s.engines[(0, 0)].read_q = 100_000      # PE badly backlogged
+    s.engines[(1, 0)].read_q = 0
+    s.choose_read_path(r, tier_tokens={"pe": 16, "de": 0})
+    assert r.dram_side == "pe" and r.dram_tokens == 16
+    assert r.read_tokens_by_side() == {"pe": 0, "de": 10000}
+    assert s.engines[(0, 0)].read_q == 100_000      # untouched
+    assert s.engines[(1, 0)].read_q == 10000
+
+
+def test_scheduler_tier_with_split_reads_water_fills_remainder():
+    s = _sched(split_reads=True)
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (1, 0)
+    path = s.choose_read_path(r, tier_tokens={"pe": 40, "de": 0})
+    assert r.dram_side == "pe" and r.dram_tokens == 40
+    tok = r.read_tokens_by_side()
+    assert tok["pe"] + tok["de"] == 60          # remainder water-filled
+    pe_s, de_s, pe_t, de_t = r.hit_bytes_partition(1)
+    assert pe_s + de_s + pe_t + de_t == 100
+    assert pe_t == 40 and de_t == 0
+
+
+def test_scheduler_without_tier_tokens_behaves_as_before():
+    s = _sched()
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (1, 0)
+    s.choose_read_path(r)
+    assert r.dram_tokens == 0 and r.snic_tokens is None
+    assert r.hit_bytes_partition(7) is None
+    assert sum(r.read_tokens_by_side().values()) == 100
