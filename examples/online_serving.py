@@ -1,18 +1,21 @@
 """Online serving under Poisson arrivals (§7.4): sweep the agent arrival
 rate and report TTFT/TTST/TPOT against the paper's SLO (TTFT ≤ 4 s,
-TPOT ≤ 50 ms) for Basic vs DualPath.
+TPOT ≤ 50 ms) for Basic vs DualPath — first on the discrete-event
+simulator at paper scale, then on the *real-bytes* event-driven runtime
+(serving/system.py) at small scale, blocking vs pipelined.
 
     PYTHONPATH=src python examples/online_serving.py
 """
 import numpy as np
 
 from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
-from repro.sim.traces import generate_dataset
+from repro.sim.traces import Round, Trajectory, generate_dataset
 
 SLO_TTFT, SLO_TPOT = 4.0, 0.050
 
 
-def main():
+def sim_sweep():
+    print("=== discrete-event simulator (DS-660B, paper scale) ===")
     print(f"{'mode':10s} {'APS':>5s} {'TTFT p99':>9s} {'TTST':>7s} "
           f"{'TPOT':>8s}  SLO")
     for mode in ("basic", "dualpath"):
@@ -28,6 +31,51 @@ def main():
             print(f"{mode:10s} {aps:5.1f} {r['ttft_p99']:8.2f}s "
                   f"{r['ttst_mean']:6.2f}s {r['tpot_mean'] * 1e3:6.1f}ms  "
                   f"{'OK' if ok else 'VIOLATED'}")
+
+
+def real_bytes_sweep():
+    """The same experiment, functional: real tokens, real KV bytes, the
+    event-driven runtime's modelled wall clock — reusing the benchmark's
+    operating point (system topology, workload, scaled NodeSpec and SLO
+    thresholds) so this table and fig_online_serving measure one
+    regime."""
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    import jax
+
+    from benchmarks.fig_online_serving import (SLO_TPOT_S, SLO_TTFT_S,
+                                               _system, _workload)
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    print("\n=== real-bytes runtime (reduced qwen-0.5b, scaled node; "
+          f"SLO ttft<={SLO_TTFT_S}s tpot<={SLO_TPOT_S * 1e3:.0f}ms) ===")
+    print(f"{'runtime':10s} {'APS':>5s} {'TTFT p99':>9s} {'TTST':>7s} "
+          f"{'TPOT':>8s} {'attain':>7s}")
+    for pipelined in (False, True):
+        label = "pipelined" if pipelined else "blocking"
+        for aps in (2.0, 8.0):
+            trajs = _workload(6, think_s=0.2)
+            rng = np.random.default_rng(7)
+            arrivals = list(np.cumsum(rng.exponential(1 / aps,
+                                                      size=len(trajs))))
+            sys_ = _system(cfg, params, pipelined=pipelined)
+            sys_.run_online(trajs, arrivals)
+            st = sys_.stats()
+            att = sys_.slo_attainment(SLO_TTFT_S, SLO_TPOT_S)
+            print(f"{label:10s} {aps:5.1f} {st['ttft_p99']:8.3f}s "
+                  f"{st['ttst_mean']:6.3f}s "
+                  f"{st['tpot_mean'] * 1e3:6.2f}ms {att:7.2f}")
+
+
+def main():
+    sim_sweep()
+    real_bytes_sweep()
 
 
 if __name__ == "__main__":

@@ -175,6 +175,9 @@ class Scheduler:
         self.beta = beta
         self.z_factor = z_factor
         self.split_reads = split_reads
+        # read-path tie-breaker state (see _shorter_queue_side): False so
+        # the first tie goes to the PE side
+        self._tie_toggle = False
         self.engines: Dict[EngineId, EngineState] = {}
         self.pe_queue: Deque[Request] = deque()
         self.de_global_queue: Deque[Request] = deque()
@@ -308,7 +311,7 @@ class Scheduler:
             # ties are frequent between queue build-ups; a fixed
             # preference systematically overloads one side (measured
             # Max/Avg 1.71 vs 1.49 RR) — alternate instead
-            self._tie_toggle = not getattr(self, "_tie_toggle", False)
+            self._tie_toggle = not self._tie_toggle
             return "pe" if self._tie_toggle else "de"
         return "pe" if pe_q < de_q else "de"
 

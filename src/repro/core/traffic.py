@@ -21,9 +21,10 @@ from __future__ import annotations
 
 import heapq
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from enum import IntEnum
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 
 class TrafficClass(IntEnum):
@@ -127,17 +128,32 @@ class _QueuedTransfer:
     nbytes: int = field(compare=False, default=0)
     tclass: TrafficClass = field(compare=False,
                                  default=TrafficClass.KV_TRANSFER)
+    cb: Optional[Callable[[], None]] = field(compare=False, default=None)
 
 
 class TrafficManager:
     """Per-engine transfer orderer.
 
-    Engines enqueue transfer thunks with a traffic class; ``drain``
-    executes them in VL-arbiter order (strict priority, FIFO within a
-    class) and batches KV transfers per doorbell (``batch`` size).  On
-    real hardware the thunks would be RDMA WR posts; on CPU they are the
-    actual numpy/jax copies, so the ordering/batching logic is exercised
-    end-to-end by the integration tests.
+    Engines enqueue transfer thunks with a traffic class.  The lifecycle
+    has two halves, mirroring an RDMA send queue:
+
+    * ``flush()`` — the *issue* half: every queued WR is posted to the
+      in-flight ring in VL-arbiter order (strict priority, FIFO within a
+      class) and the doorbells are rung — KV WRs are batched per
+      doorbell (``doorbell_batch``), which is where the §5.2 submission
+      cost is charged.  Non-blocking: no thunk runs here.
+    * ``poll()`` — the *completion* half: in-flight thunks execute in
+      posted order and per-flush completion callbacks fire once every
+      transfer of that flush has landed.
+
+    ``drain()`` (= flush + poll until idle) is the blocking legacy API;
+    the lock-step serving runtime still uses it, the pipelined runtime
+    flushes at issue points and polls once per event-loop tick so
+    storage reads and compute-network transfers stay in flight across
+    engine ``step()`` compute.  On real hardware the thunks would be
+    RDMA WR posts; on CPU they are the actual numpy/jax copies, so the
+    ordering/batching logic is exercised end-to-end by the integration
+    tests.
     """
 
     def __init__(self, cost: SubmitCostModel = SubmitCostModel(),
@@ -145,8 +161,10 @@ class TrafficManager:
         self.cost = cost
         self.doorbell_batch = doorbell_batch
         self._q: List[_QueuedTransfer] = []
+        self._inflight: Deque[_QueuedTransfer] = deque()
         self._seq = itertools.count()
         self.submitted_seconds = 0.0     # modelled submission overhead
+        self.doorbells = 0
         self.stats = {c: 0 for c in TrafficClass}
         self.bytes = {c: 0 for c in TrafficClass}
 
@@ -158,24 +176,79 @@ class TrafficManager:
         self.stats[tclass] += 1
         self.bytes[tclass] += nbytes
 
-    def drain(self) -> int:
-        """Execute all queued transfers in arbiter order; returns count.
-        KV transfers are grouped into doorbell batches for the modelled
-        submission cost."""
-        n = 0
-        kv_batch = 0
+    # -- issue half --------------------------------------------------------
+    def flush(self, on_complete: Optional[Callable[[], None]] = None) -> int:
+        """Post every queued WR (arbiter order) to the in-flight ring and
+        ring the doorbells.  Non-blocking — thunks execute at ``poll``.
+        ``on_complete`` fires once every transfer posted by THIS flush
+        has executed (immediately when nothing was queued)."""
+        batch: List[_QueuedTransfer] = []
         while self._q:
-            t = heapq.heappop(self._q)
-            t.fn()
-            n += 1
+            batch.append(heapq.heappop(self._q))
+        if not batch:
+            if on_complete is not None:
+                on_complete()
+            return 0
+        kv_batch = 0
+        for t in batch:
             if t.tclass == TrafficClass.MODEL_COLLECTIVE:
                 self.submitted_seconds += self.cost.rdma_batch_seconds(1)
+                self.doorbells += 1
             else:
                 kv_batch += 1
                 if kv_batch == self.doorbell_batch:
                     self.submitted_seconds += \
                         self.cost.rdma_batch_seconds(kv_batch)
+                    self.doorbells += 1
                     kv_batch = 0
         if kv_batch:
             self.submitted_seconds += self.cost.rdma_batch_seconds(kv_batch)
+            self.doorbells += 1
+        if on_complete is not None:
+            pending = [len(batch)]
+
+            def countdown():
+                pending[0] -= 1
+                if pending[0] == 0:
+                    on_complete()
+
+            for t in batch:
+                t.cb = countdown
+        self._inflight.extend(batch)
+        return len(batch)
+
+    # -- completion half ---------------------------------------------------
+    def poll(self, max_n: Optional[int] = None) -> int:
+        """Execute up to ``max_n`` in-flight transfers (all if None) in
+        posted order, firing completion callbacks; returns the count.
+        Pop-based, so a callback that re-enters drain/poll cannot
+        double-execute a transfer."""
+        n = 0
+        while self._inflight and (max_n is None or n < max_n):
+            t = self._inflight.popleft()
+            t.fn()
+            if t.cb is not None:
+                t.cb()
+            n += 1
+        return n
+
+    @property
+    def queued(self) -> int:
+        return len(self._q)
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._inflight)
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._q or self._inflight)
+
+    def drain(self) -> int:
+        """Blocking issue+complete: flush and poll until idle; returns
+        the number of transfers executed."""
+        n = 0
+        while self._q or self._inflight:
+            self.flush()
+            n += self.poll()
         return n

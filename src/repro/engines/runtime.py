@@ -78,6 +78,9 @@ class PrefillEngine:
                                   quota_s=quota_s)
         self.fifo: List[Tuple[PrefillWork, EngineRequest]] = []
         self.prefill_tokens = 0
+        # (cached, bsz) items of the batch the last step() executed — the
+        # serving clock's compute-duration input (events.ServingTimeModel)
+        self.last_step_items: List[Tuple[int, int]] = []
 
     # -- loading ---------------------------------------------------------
     def install_hit_kv(self, er: EngineRequest, payload):
@@ -114,6 +117,7 @@ class PrefillEngine:
     def step(self) -> List[EngineRequest]:
         """Run one quota-packed forward batch; returns requests whose
         prefill completed this step."""
+        self.last_step_items = []
         if not self.fifo:
             return []
         works = [w for w, _ in self.fifo]
@@ -129,6 +133,7 @@ class PrefillEngine:
             if w.remaining == 0:
                 works.pop(0)
         self.fifo = [(w, byrid[w.rid]) for w in works]
+        self.last_step_items = [(bi.cached, bi.bsz) for bi in batch]
         done = []
         for bi in batch:
             er = byrid[bi.rid]
@@ -166,6 +171,16 @@ class DecodeEngine:
         self.lengths = np.zeros(n_slots, np.int32)
         self.next_token = np.zeros(n_slots, np.int32)
         self.decode_steps = 0
+        # context lengths the last step() decoded over (serving clock)
+        self.last_step_ctxs: List[int] = []
+        # pipelined persistence (serving/events.py lifecycle PERSIST):
+        # with defer_persist the block writes are *submitted* to the tm
+        # but not drained, and (request, finalize) pairs park here until
+        # the system flushes the tm — finalize inserts the trie entries
+        # once the write completions have landed
+        self.defer_persist = False
+        self.pending_persist: List[Tuple[EngineRequest,
+                                         Optional[callable]]] = []
 
     @property
     def free_slots(self) -> int:
@@ -183,6 +198,9 @@ class DecodeEngine:
 
     def step(self) -> List[EngineRequest]:
         """One decode step over all active slots; returns finished."""
+        self.last_step_ctxs = [int(self.lengths[s])
+                               for s, er in enumerate(self.slots)
+                               if er is not None]
         if all(s is None for s in self.slots):
             return []
         toks = jnp.asarray(self.next_token, jnp.int32)
@@ -208,6 +226,14 @@ class DecodeEngine:
 
     # -- persistence (per full block, as in the paper) --------------------
     def _persist(self, slot: int, er: EngineRequest):
+        """Serialise the slot's new state and submit the storage writes.
+
+        The state snapshot (serialize_kv / pickle) is taken NOW — the
+        slot may be re-admitted before deferred writes land — but the
+        write execution and the trie insert are the *completion* half:
+        with ``defer_persist`` they wait parked in ``pending_persist``
+        for the system's flush; otherwise they drain inline (the
+        blocking runtime's behaviour)."""
         full_tokens = er.context_tokens + er.append_tokens + er.generated
         bt = self.layout.block_tokens
         n_blocks = len(full_tokens) // bt
@@ -219,9 +245,14 @@ class DecodeEngine:
                 lambda b=blob, k=tuple(full_tokens), n=int(self.lengths[slot]):
                 self.blob_store.put(k, b, n),
                 len(blob), TrafficClass.KV_TRANSFER)
-            self.tm.drain()
+            if self.defer_persist:
+                self.pending_persist.append((er, None))
+            else:
+                self.tm.drain()
             return
         if n_blocks <= start_block:
+            if self.defer_persist:
+                self.pending_persist.append((er, None))
             return
         kv_bytes = kvio.serialize_kv(self.cfg, self.state, slot,
                                      start_block * bt, n_blocks * bt)
@@ -231,6 +262,10 @@ class DecodeEngine:
             blk = np.ascontiguousarray(kv_bytes[:, i * bt:(i + 1) * bt])
             self.tm.submit(lambda r=ref, b=blk: self.store.write_block(r, b),
                            blk.nbytes, TrafficClass.KV_TRANSFER)
-        self.tm.drain()
-        self.trie.insert(full_tokens[:n_blocks * bt],
-                         new_refs)
+        finalize = lambda toks=full_tokens[:n_blocks * bt], refs=new_refs: \
+            self.trie.insert(toks, refs)
+        if self.defer_persist:
+            self.pending_persist.append((er, finalize))
+        else:
+            self.tm.drain()
+            finalize()

@@ -1,1 +1,4 @@
+from repro.serving.events import (EventLoop, ReqState, RoundMetrics,
+                                  ServingTimeModel, VirtualClock,
+                                  latency_summary, slo_attainment)
 from repro.serving.system import AgentSession, ServingSystem

@@ -1,0 +1,267 @@
+"""Event-driven serving runtime scaffolding.
+
+The real-bytes :class:`~repro.serving.system.ServingSystem` is driven by
+the pieces here, replacing the old blocking ``_schedule()`` /
+``_step_engines()`` lock-step with a per-request lifecycle state machine
+and an event loop, so storage reads and compute-network transfers
+genuinely overlap engine ``step()`` compute (the simulator's legs, made
+functional):
+
+* :class:`ReqState` — the request lifecycle
+  ``SCHEDULED → READING → PREFILL → PD_TRANSFER → DECODE → PERSIST →
+  DONE``; transitions happen at TrafficManager flush-completion
+  callbacks and engine step boundaries.
+* :class:`VirtualClock` / :class:`EventLoop` — the runtime's wall
+  clock.  Serving runs real token generation and real KV bytes but on
+  CPU hardware whose NICs we cannot measure, so the clock advances by
+  *modelled* seconds (:class:`ServingTimeModel`): per tick the
+  pipelined runtime charges ``max(transfer, compute)`` where the
+  blocking runtime charges ``transfer + compute`` — the overlap the
+  paper's online claim rests on, made observable and deterministic.
+  Timed events (online arrivals, inter-round think gaps) live on the
+  loop's heap and the clock jumps over idle gaps instead of sleeping.
+  The same clock supplies real seconds to DRAM-tier TTLs and the
+  think-time prefetcher (kvcache/tiers.py), which in offline serving
+  degenerate to tick counts.
+* :class:`RoundMetrics` + :func:`latency_summary` /
+  :func:`slo_attainment` — per-round TTFT/TTST/TPOT accounting
+  mirroring ``Sim.results()`` so the real-bytes runtime reports the
+  same SLO columns the simulator does.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from collections import defaultdict
+from dataclasses import dataclass
+from enum import Enum
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.intra import attn_flops
+from repro.sim.spec import HOPPER_NODE, ModelSimSpec, NodeSpec
+
+
+class ReqState(Enum):
+    """Lifecycle of one round (request) through the serving runtime."""
+
+    SCHEDULED = "scheduled"      # submitted, awaiting (PE, DE) + read path
+    READING = "reading"          # storage/tier read legs in flight
+    PREFILL = "prefill"          # hit KV installed, in the PE's fifo
+    PD_TRANSFER = "pd_transfer"  # prompt state PE→DE on the compute net
+    DECODE = "decode"            # slot-batched decode on the DE
+    PERSIST = "persist"          # new FullBlocks persisting to storage
+    DONE = "done"
+
+
+@dataclass
+class RoundMetrics:
+    """Timestamps of one round on the runtime's wall clock (mirrors the
+    simulator's RoundSim timing fields; -1 = not reached yet).
+    Milestones are stamped at the END of the tick they occur in — after
+    the clock charges that tick's modelled seconds — so a latency never
+    excludes the work that produced it; ``submit_t`` is the submission
+    event's own time (an arrival/think event or the start of the tick
+    whose persist completion triggered it)."""
+
+    rid: int
+    gen_tokens: int
+    submit_t: float
+    read_done_t: float = -1.0
+    prefill_done_t: float = -1.0     # first token ready (TTFT)
+    first_decode_t: float = -1.0
+    second_token_t: float = -1.0     # TTST
+    done_t: float = -1.0
+
+    @property
+    def finished(self) -> bool:
+        return self.done_t >= 0
+
+    @property
+    def ttft(self) -> float:
+        return self.prefill_done_t - self.submit_t
+
+    @property
+    def ttst(self) -> Optional[float]:
+        if self.second_token_t < 0:
+            return None
+        return self.second_token_t - self.submit_t
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token over the decode phase (gen > 1 only)."""
+        if self.gen_tokens <= 1 or self.first_decode_t < 0:
+            return None
+        return (self.done_t - self.first_decode_t) / (self.gen_tokens - 1)
+
+
+def latency_summary(metrics: Iterable[RoundMetrics]) -> dict:
+    """TTFT/TTST/TPOT summary over finished rounds — the same keys (and
+    the same definitions) as ``Sim.results()``."""
+    done = [m for m in metrics if m.finished]
+    ttfts = [m.ttft for m in done]
+    ttsts = [m.ttst for m in done if m.ttst is not None]
+    tpots = [m.tpot for m in done if m.tpot is not None]
+    pct = lambda xs, q: float(np.percentile(xs, q)) if xs else float("nan")
+    mean = lambda xs: float(np.mean(xs)) if xs else float("nan")
+    return dict(
+        finished_rounds=len(done),
+        ttft_mean=mean(ttfts), ttft_p99=pct(ttfts, 99),
+        ttst_mean=mean(ttsts),
+        tpot_mean=mean(tpots), tpot_p99=pct(tpots, 99),
+    )
+
+
+def slo_attainment(metrics: Iterable[RoundMetrics], ttft_slo_s: float,
+                   tpot_slo_s: float) -> float:
+    """Fraction of finished rounds meeting BOTH the TTFT and TPOT SLOs
+    (rounds with a single output token have no TPOT and are judged on
+    TTFT alone, as in the simulator's accounting)."""
+    done = [m for m in metrics if m.finished]
+    if not done:
+        return float("nan")
+    ok = 0
+    for m in done:
+        if m.ttft > ttft_slo_s:
+            continue
+        t = m.tpot
+        if t is not None and t > tpot_slo_s:
+            continue
+        ok += 1
+    return ok / len(done)
+
+
+# ---------------------------------------------------------------------------
+# wall clock + timed events
+# ---------------------------------------------------------------------------
+
+
+class VirtualClock:
+    """The runtime's wall clock [s].  Monotonic: work advances it by
+    modelled durations, idle periods jump it to the next timed event."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def advance(self, dt: float) -> float:
+        if dt > 0:
+            self.now += dt
+        return self.now
+
+    def jump_to(self, t: float) -> float:
+        if t > self.now:
+            self.now = t
+        return self.now
+
+
+class EventLoop:
+    """Timed-event heap over a :class:`VirtualClock` (arrivals and
+    think-gap round submissions in online serving)."""
+
+    def __init__(self, clock: VirtualClock):
+        self.clock = clock
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    def at(self, t: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t, next(self._seq), fn))
+
+    def after(self, dt: float, fn: Callable[[], None]) -> None:
+        self.at(self.clock.now + max(dt, 0.0), fn)
+
+    @property
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def next_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def fire_due(self) -> int:
+        """Run every event scheduled at or before ``clock.now``."""
+        n = 0
+        while self._heap and self._heap[0][0] <= self.clock.now:
+            _, _, fn = heapq.heappop(self._heap)
+            fn()
+            n += 1
+        return n
+
+
+# ---------------------------------------------------------------------------
+# modelled durations (the clock's time source)
+# ---------------------------------------------------------------------------
+
+
+class TickIo:
+    """Per-tick transfer-seconds ledger, bucketed by physical resource
+    (``("snic", node)``, ``("cn", node)``, ``("dram", node)``).  Distinct
+    buckets are independent NICs/links, so the pipelined runtime charges
+    their *max* (they drain concurrently) while the blocking runtime —
+    whose inline ``drain()`` serialises every transfer — charges the
+    *sum*."""
+
+    def __init__(self):
+        self.buckets: Dict[tuple, float] = defaultdict(float)
+
+    def add(self, bucket: tuple, seconds: float) -> None:
+        if seconds > 0:
+            self.buckets[bucket] += seconds
+
+    def parallel_seconds(self) -> float:
+        return max(self.buckets.values(), default=0.0)
+
+    def serial_seconds(self) -> float:
+        return sum(self.buckets.values())
+
+
+@dataclass
+class ServingTimeModel:
+    """Modelled durations for the serving runtime's clock.
+
+    Transfers use the node's NIC/DRAM bandwidths; compute uses the same
+    analytic forms the simulator uses (attention+linear FLOPs for PE
+    batches, HBM-bandwidth-vs-FLOPs roofline for DE steps).  Only
+    *relative* magnitudes matter to the blocking-vs-pipelined
+    comparison, and both arms share this model; the layerwise install
+    gathers are identical inline work in both arms and are deliberately
+    left unmodelled."""
+
+    cfg: ModelConfig
+    node: NodeSpec
+    spec: ModelSimSpec
+
+    @classmethod
+    def for_model(cls, cfg: ModelConfig,
+                  node: Optional[NodeSpec] = None) -> "ServingTimeModel":
+        return cls(cfg=cfg, node=node or HOPPER_NODE,
+                   spec=ModelSimSpec.from_config(cfg))
+
+    # -- transfers ---------------------------------------------------------
+    def snic_seconds(self, nbytes: float) -> float:
+        return nbytes / self.node.snic_bw
+
+    def cn_seconds(self, nbytes: float) -> float:
+        return nbytes / self.node.cnic_bw
+
+    def dram_seconds(self, nbytes: float) -> float:
+        return nbytes / self.node.dram_bw
+
+    # -- compute -----------------------------------------------------------
+    def pe_step_seconds(self, items: Sequence[Tuple[int, int]]) -> float:
+        """One PE forward batch over ``(cached, bsz)`` items."""
+        if not items:
+            return 0.0
+        a = attn_flops(self.cfg, items)
+        lin = self.spec.linear_flops_per_token() * sum(b for _, b in items)
+        return (a + lin) / (self.node.gpu.flops * self.node.gpu.mfu_prefill)
+
+    def de_step_seconds(self, ctxs: Sequence[int]) -> float:
+        """One slot-batched decode step over active context lengths."""
+        if not ctxs:
+            return 0.0
+        kv = sum(self.spec.decode_step_bytes(c) for c in ctxs)
+        w = self.spec.active_param_bytes_resident(1)
+        fl = sum(self.spec.decode_step_flops(c) for c in ctxs)
+        return max((kv + w) / (self.node.gpu.hbm_bw * self.node.gpu.mbu_decode),
+                   fl / (self.node.gpu.flops * self.node.gpu.mfu_prefill))

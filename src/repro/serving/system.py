@@ -3,36 +3,68 @@
 Single-process orchestration of the full request lifecycle with *real*
 token generation and *real* KV bytes moving along the dual-path legs —
 the functional counterpart of the discrete-event simulator (which owns
-the timing claims).  Used by the examples and integration tests.
+the cluster-scale timing claims).  Used by the examples, the online
+benchmark and the integration tests.
 
-Per round (paper Fig. 4):
- 1. client computes the trie hit for ``context ‖ append`` (§A.4),
- 2. scheduler assigns (PE, DE) + read path (§6.1 / Alg. 1),
- 3. the chosen side's TrafficManager carries the FullBlock reads
-    (storage→PE directly, or storage→DE→compute-network→PE),
- 4. PE runs quota-packed chunked prefill (§6.2) over the append chunk,
- 5. prompt state transfers PE→DE; DE decodes ``gen`` tokens greedily and
-    persists newly-filled FullBlocks + trie entries (§A.5).
+Per round (paper Fig. 4), as a lifecycle state machine
+(serving/events.py)::
+
+  SCHEDULED    client computes the trie hit for ``context ‖ append``
+               (§A.4); scheduler assigns (PE, DE) + read path
+               (§6.1 / Alg. 1) across every registered PE/DE group
+  READING      the chosen side(s)' TrafficManagers carry the FullBlock
+               reads (storage→PE directly, or storage→DE→compute
+               network→PE; DRAM-tier prefixes skip the SNIC)
+  PREFILL      PE runs quota-packed chunked prefill (§6.2) over the
+               append chunk, hit KV installed layerwise double-buffered
+  PD_TRANSFER  prompt state PE→DE, one submission per attention layer,
+               batched per doorbell
+  DECODE       DE decodes ``gen`` tokens greedily, slot-batched
+  PERSIST      newly-filled FullBlocks + trie entries persist (§A.5)
+
+Two runtimes share every one of those mechanisms:
+
+* **pipelined** (default) — an event-driven tick loop: reads are issued
+  non-blocking (``TrafficManager.flush``) and stay in flight while the
+  engines ``step()``, completing at the tick's ``poll``; PD transfers
+  and persists likewise.  The runtime's wall clock advances by modelled
+  seconds, ``max(transfer, compute)`` per tick — transfers overlap
+  compute, the paper's online claim.
+* **blocking** (``pipelined=False``) — the legacy lock-step loop: every
+  submission is drained inline, so the clock charges
+  ``transfer + compute``.  Kept as the reference arm; generation and
+  byte accounting are bit-identical between the two (pinned by
+  tests/test_serving_runtime.py).
+
+``run_offline`` drives all sessions from t=0; ``run_online(arrivals)``
+adds online arrivals and inter-round think gaps on the wall clock
+(which also gives DRAM-tier TTLs and the think-time prefetcher real
+seconds instead of tick counts) and records per-round TTFT/TTST/TPOT
+into ``stats()``, mirroring ``Sim.results()``.
 """
 from __future__ import annotations
 
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.blocks import BlockLayout, layout_for
 from repro.core.scheduler import Request, Scheduler
-from repro.core.traffic import TrafficClass
+from repro.core.traffic import TrafficClass, TrafficManager
 from repro.engines import kvio
 from repro.engines.runtime import (DecodeEngine, EngineRequest,
                                    PrefillEngine, uses_state_blob)
 from repro.kvcache.store import MemoryKVStore, StateBlobStore
 from repro.kvcache.tiers import DramTier, ThinkTimePrefetcher
 from repro.kvcache.trie import BlockTrie
+from repro.serving import events
+from repro.serving.events import (EventLoop, ReqState, RoundMetrics,
+                                  ServingTimeModel, TickIo, VirtualClock)
+from repro.sim.spec import NodeSpec
 from repro.sim.traces import Trajectory
 
 
@@ -56,44 +88,62 @@ class ServingSystem:
                  de_slots: int = 8, quota_s: float = 0.3, seed: int = 0,
                  split_reads: bool = False, layerwise: bool = True,
                  dram_tier_bytes: float = 0, tier_policy: str = "lru",
-                 tier_ttl_s: Optional[float] = None, prefetch: bool = False):
+                 tier_ttl_s: Optional[float] = None, prefetch: bool = False,
+                 pe_group_size: Optional[int] = None,
+                 de_group_size: Optional[int] = None,
+                 pipelined: bool = True, node: Optional[NodeSpec] = None):
         assert mode in ("dualpath", "basic")
         self.cfg = cfg
         self.mode = mode
         self.max_seq = max_seq
+        self.pipelined = pipelined
         self.layout = layout_for(cfg, block_tokens)
         self.store = MemoryKVStore(self.layout)
         self.blob_store = StateBlobStore()
         self.trie = BlockTrie(block_tokens)
         self.sched = Scheduler(alpha=1 << 30, beta=1 << 30,
                                split_reads=split_reads)
+        # the runtime's wall clock (serving/events.py): modelled seconds,
+        # advanced per tick, jumped over idle gaps in online mode
+        self.time_model = ServingTimeModel.for_model(cfg, node)
+        self.clock = VirtualClock()
+        self.loop = EventLoop(self.clock)
+        self.metrics: Dict[int, RoundMetrics] = {}
+        self._online = False
         # node-local DRAM tiers over the remote store (kvcache/tiers.py):
         # reads served from a tier never reach the store (= the SNIC).
-        # NOTE: serving has no wall clock — the tier's internal tick
-        # counter supplies "time", so an agentic-ttl ``tier_ttl_s`` is
-        # measured in tier operations here (the simulator, which has a
-        # clock, passes real seconds).
+        # NOTE: offline serving passes no timestamps — the tier's internal
+        # tick counter supplies "time", so an agentic-ttl ``tier_ttl_s``
+        # is measured in tier operations there; online serving passes the
+        # wall clock's real seconds (as the simulator does).
         self.tiers: Dict[int, DramTier] = {}
         if dram_tier_bytes:
-            for node in range(n_pe + n_de):
-                self.tiers[node] = DramTier(dram_tier_bytes,
-                                            policy=tier_policy,
-                                            ttl_s=tier_ttl_s,
-                                            backing=self.store)
+            for node_id in range(n_pe + n_de):
+                self.tiers[node_id] = DramTier(dram_tier_bytes,
+                                               policy=tier_policy,
+                                               ttl_s=tier_ttl_s,
+                                               backing=self.store)
         self.prefetcher = ThinkTimePrefetcher() \
             if (prefetch and self.tiers) else None
+        # engine groups: ``*_group_size`` engines per scheduler group
+        # (default: one group spanning all engines of that kind); the
+        # fetch loop visits every group, so DE phase-1 balancing across
+        # groups runs end-to-end with ≥ 2 DE groups
         self.pes: Dict[Tuple[int, int], PrefillEngine] = {}
         self.des: Dict[Tuple[int, int], DecodeEngine] = {}
+        pe_gsz = max(int(pe_group_size or n_pe), 1)
+        de_gsz = max(int(de_group_size or n_de), 1)
         for i in range(n_pe):
             eid = (i, 0)
-            self.sched.register_engine(eid, node=i, kind="pe", group=0)
+            self.sched.register_engine(eid, node=i, kind="pe",
+                                       group=i // pe_gsz)
             self.pes[eid] = PrefillEngine(eid, cfg, params, self.store,
                                           self.layout, max_seq, quota_s,
                                           layerwise=layerwise)
         for j in range(n_de):
             eid = (n_pe + j, 0)
             st = self.sched.register_engine(eid, node=n_pe + j, kind="de",
-                                            group=1000)
+                                            group=1000 + j // de_gsz)
             # the DE persists through its node tier (write-through + tier
             # warm-up) when one is configured
             de_store = self.tiers.get(n_pe + j, self.store)
@@ -101,14 +151,39 @@ class ServingSystem:
                               self.layout, max_seq, n_slots=de_slots,
                               blob_store=self.blob_store)
             st.free_hbm_tokens = de_slots * max_seq
+            de.defer_persist = pipelined
             self.des[eid] = de
         self._rid = itertools.count()
         self._pending_admit: deque = deque()
         self._inflight: Dict[int, EngineRequest] = {}
+        self._install_ready: List[EngineRequest] = []
+        self._pd_queue: List[EngineRequest] = []
+        # milestone timestamps are stamped AFTER the tick's clock advance
+        # (a milestone reached during tick t happened by the END of t, and
+        # the tick's modelled seconds must count against it) — deferred
+        # here until then
+        self._pending_stamps: List[Tuple[RoundMetrics, str]] = []
+        self._tick_io = TickIo()
+        self._tick_compute = 0.0
+        self._submit_seconds_seen = 0.0
         self.rng = np.random.default_rng(seed)
         self.read_bytes_by_side = {"pe": 0, "de": 0}
         self.dram_bytes_by_side = {"pe": 0, "de": 0}
         self.n_split_reads = 0
+        self.gen_tokens_done = 0
+
+    # ------------------------------------------------------------------
+    def _all_tms(self) -> Iterator[TrafficManager]:
+        for pe in self.pes.values():
+            yield pe.tm
+        for de in self.des.values():
+            yield de.tm
+
+    def _tier_now(self) -> Optional[float]:
+        """Tier timestamps: wall-clock seconds online, None (the tier's
+        own tick counter) offline — keeping offline runs bit-compatible
+        with the pre-clock behaviour."""
+        return self.clock.now if self._online else None
 
     # ------------------------------------------------------------------
     def _submit_round(self, sess: AgentSession):
@@ -125,32 +200,50 @@ class ServingSystem:
             blob = None
         new_tokens = len(prompt) - hit
         req = Request(rid=next(self._rid), cached_tokens=hit,
-                      new_tokens=new_tokens, gen_tokens=rnd.gen)
+                      new_tokens=new_tokens, gen_tokens=rnd.gen,
+                      arrival=self.clock.now)
         er = EngineRequest(req=req, context_tokens=prompt[:hit],
                            append_tokens=prompt[hit:], hit_refs=refs)
         er._blob = blob
         er._session = sess
         er._tier_pinned = None
+        er._pd_ready = False
+        er.lifecycle = ReqState.SCHEDULED
         sess.current = er
         sess.next_round += 1
         self._inflight[req.rid] = er
+        self.metrics[req.rid] = RoundMetrics(rid=req.rid,
+                                             gen_tokens=rnd.gen,
+                                             submit_t=self.clock.now)
         for tier in self.tiers.values():
-            tier.note_alive(sess.traj.tid)
+            tier.note_alive(sess.traj.tid, now=self._tier_now())
         self.sched.submit(req)
 
     # ------------------------------------------------------------------
-    def _schedule(self):
-        de_reports = {eid: (sum(s is not None for s in de.slots),
-                            sum(int(l) for l in de.lengths),
-                            0, de.free_slots * self.max_seq)
-                      for eid, de in self.des.items()}
-        for asg in self.sched.on_de_fetch(1000, de_reports):
-            pass
-        pe_reports = {eid: (len(pe.fifo),
-                            sum(w.remaining for w, _ in pe.fifo), 0)
-                      for eid, pe in self.pes.items()}
-        for asg in self.sched.on_pe_fetch(0, pe_reports):
-            pass
+    # scheduling: group fetches + read-path decisions (tick phase 1)
+    # ------------------------------------------------------------------
+    def _fetch_groups(self):
+        """Leader fetch for every registered group — DE groups first
+        (HBM reservation), then PE groups, as in the simulator.  With
+        ≥ 2 DE groups the fetch exercises ``Scheduler.de_phase1``'s
+        cross-group balancing on the global queue."""
+        for gid, members in self.sched.groups("de").items():
+            reports = {eid: (sum(s is not None for s in self.des[eid].slots),
+                             sum(int(l) for l in self.des[eid].lengths),
+                             0, self.des[eid].free_slots * self.max_seq)
+                       for eid in members}
+            for asg in self.sched.on_de_fetch(gid, reports):
+                pass
+        for gid, members in self.sched.groups("pe").items():
+            reports = {eid: (len(self.pes[eid].fifo),
+                             sum(w.remaining for w, _ in self.pes[eid].fifo),
+                             0)
+                       for eid in members}
+            for asg in self.sched.on_pe_fetch(gid, reports):
+                pass
+
+    def _schedule_tick(self) -> int:
+        self._fetch_groups()
         # decide paths for every ready request first (read queues build up
         # across the batch of decisions, as on a live cluster), then read
         ready = []
@@ -184,10 +277,22 @@ class ServingSystem:
                     er._tier_pinned = (node, prefix)
             ready.append(er)
         for er in ready:
-            self._do_read(er)
+            er.lifecycle = ReqState.READING
+            if self.pipelined:
+                self._issue_read(er)
+            else:
+                self._do_read(er)
+        return len(ready)
 
-    def _do_read(self, er: EngineRequest):
-        """Execute the storage read and deliver the payload to the PE.
+    # ------------------------------------------------------------------
+    # the read, split into issue/complete halves
+    # ------------------------------------------------------------------
+    def _read_transfers(self, er: EngineRequest
+                        ) -> List[Tuple[TrafficManager, callable, int]]:
+        """Issue half of a read: perform the store/tier accesses and the
+        byte accounting NOW and return ``(tm, thunk, nbytes)`` transfer
+        descriptors whose execution (the completion half) models the
+        bytes landing in the PE's buffers.
 
         Pure reads ride one side's TrafficManager (storage→PE directly,
         or storage→DE→compute-network→PE).  Split reads (scheduler
@@ -195,27 +300,30 @@ class ServingSystem:
         FullBlocks at page granularity: the PE side reads the leading
         pages while the DE side reads the trailing ones concurrently,
         and only the DE share crosses the compute network — the engine
-        realisation of core/loading.split_read_plan."""
+        realisation of core/loading.split_read_plan.  Transfer seconds
+        are charged to the tick's io ledger per physical resource."""
         req = er.req
         pe = self.pes[req.pe]
         de_tm = self.des[req.de].tm
+        pe_node, de_node = req.pe[0], req.de[0]
+        tmod = self.time_model
+        out: List[Tuple[TrafficManager, callable, int]] = []
         if uses_state_blob(self.cfg):
             # one opaque state snapshot: unsplittable, rides the chosen side
             side = req.read_path
             payload = er._blob
             nbytes = len(payload) if payload else 0
             self.read_bytes_by_side[side] += nbytes
-            tm = pe.tm if side == "pe" else de_tm
-            box = {}
-            tm.submit(lambda: box.update(p=payload), nbytes,
-                      TrafficClass.KV_TRANSFER)
-            tm.drain()
+            er._read_box = {}
+            node = pe_node if side == "pe" else de_node
+            self._tick_io.add(("snic", node), tmod.snic_seconds(nbytes))
+            out.append((pe.tm if side == "pe" else de_tm,
+                        lambda p=payload, box=er._read_box: box.update(p=p),
+                        nbytes))
             if side == "de":
-                pe.tm.submit(lambda: None, nbytes, TrafficClass.KV_TRANSFER)
-                pe.tm.drain()
-            pe.install_hit_kv(er, box.get("p"))
-            self._release_read_q(req)
-            return
+                self._tick_io.add(("cn", pe_node), tmod.cn_seconds(nbytes))
+                out.append((pe.tm, lambda: None, nbytes))
+            return out
         n = len(er.hit_refs)
         tid = er._session.traj.tid
         # ---- source segments: (kind, side, refs, lo) --------------------
@@ -233,11 +341,12 @@ class ServingSystem:
         # semantics) — tier-served segments don't count
         if part["pe"] and part["de"]:
             self.n_split_reads += 1
-        payload: List = [None] * n
+        er._read_payload = [None] * n
+        payload = er._read_payload
         for kind, side, refs, lo in segs:
             if not refs:
                 continue
-            node = (req.pe if side == "pe" else req.de)[0]
+            node = pe_node if side == "pe" else de_node
             # read_bytes_by_side stays per-side *storage* (SNIC) traffic,
             # matching the sim's snic accounting; DRAM-served bytes are
             # tracked separately in dram_bytes_by_side
@@ -245,9 +354,11 @@ class ServingSystem:
                 tier = self.tiers[node]
                 # pinned since the path decision — every ref is resident,
                 # so none of these reads reaches the backing store
-                blocks = tier.read_blocks(refs, owner=tid)
-                self.dram_bytes_by_side[side] += sum(b.nbytes
-                                                     for b in blocks)
+                blocks = tier.read_blocks(refs, owner=tid,
+                                          now=self._tier_now())
+                hit_b = sum(b.nbytes for b in blocks)
+                self.dram_bytes_by_side[side] += hit_b
+                self._tick_io.add(("dram", node), tmod.dram_seconds(hit_b))
             elif node in self.tiers:
                 # read through the node tier: misses hit the store (the
                 # SNIC) and are admitted, warming the tier for the next
@@ -255,30 +366,84 @@ class ServingSystem:
                 # probed prefix) still serve from DRAM
                 tier = self.tiers[node]
                 m0, h0 = tier.miss_bytes, tier.dram_hit_bytes
-                blocks = tier.read_blocks(refs, owner=tid)
-                self.read_bytes_by_side[side] += tier.miss_bytes - m0
-                self.dram_bytes_by_side[side] += tier.dram_hit_bytes - h0
+                blocks = tier.read_blocks(refs, owner=tid,
+                                          now=self._tier_now())
+                miss_b = tier.miss_bytes - m0
+                hit_b = tier.dram_hit_bytes - h0
+                self.read_bytes_by_side[side] += miss_b
+                self.dram_bytes_by_side[side] += hit_b
+                self._tick_io.add(("snic", node), tmod.snic_seconds(miss_b))
+                self._tick_io.add(("dram", node), tmod.dram_seconds(hit_b))
             else:
                 blocks = self.store.read_blocks(refs)
-                self.read_bytes_by_side[side] += sum(b.nbytes
-                                                     for b in blocks)
+                nb = sum(b.nbytes for b in blocks)
+                self.read_bytes_by_side[side] += nb
+                self._tick_io.add(("snic", node), tmod.snic_seconds(nb))
             nbytes = sum(b.nbytes for b in blocks)
-            tm = pe.tm if side == "pe" else de_tm
-            tm.submit(lambda blocks=blocks, lo=lo:
-                      payload.__setitem__(slice(lo, lo + len(blocks)),
-                                          blocks),
-                      nbytes, TrafficClass.KV_TRANSFER)
-            tm.drain()
+            out.append((pe.tm if side == "pe" else de_tm,
+                        lambda blocks=blocks, lo=lo:
+                        payload.__setitem__(slice(lo, lo + len(blocks)),
+                                            blocks),
+                        nbytes))
             if side == "de":
                 # DE buffer -> PE over the compute network (layerwise)
-                pe.tm.submit(lambda: None, nbytes, TrafficClass.KV_TRANSFER)
-                pe.tm.drain()
+                self._tick_io.add(("cn", pe_node), tmod.cn_seconds(nbytes))
+                out.append((pe.tm, lambda: None, nbytes))
         if er._tier_pinned is not None:
+            # the tier segment is read (copied out) — the pin taken at
+            # the path decision has done its job
             node, prefix = er._tier_pinned
             self.tiers[node].unpin(prefix)
             er._tier_pinned = None
-        pe.install_hit_kv(er, [b for b in payload if b is not None])
+        return out
+
+    def _do_read(self, er: EngineRequest):
+        """Blocking read: every transfer drains inline (one degenerate
+        single-item doorbell each) before the hit KV installs."""
+        for tm, fn, nbytes in self._read_transfers(er):
+            tm.submit(fn, nbytes, TrafficClass.KV_TRANSFER)
+            tm.drain()
+        self._read_complete(er)
+
+    def _issue_read(self, er: EngineRequest) -> int:
+        """Pipelined read: submit every transfer and flush each involved
+        TrafficManager once (multi-WR doorbell batches) — the transfers
+        stay in flight across this tick's engine compute and land at the
+        tick's poll, which marks the request install-ready."""
+        transfers = self._read_transfers(er)
+        by_tm: Dict[int, Tuple[TrafficManager, list]] = {}
+        for tm, fn, nbytes in transfers:
+            by_tm.setdefault(id(tm), (tm, []))[1].append((fn, nbytes))
+        if not by_tm:
+            self._install_ready.append(er)
+            return 0
+        pending = [len(by_tm)]
+
+        def tm_done():
+            pending[0] -= 1
+            if pending[0] == 0:
+                self._install_ready.append(er)
+
+        for tm, items in by_tm.values():
+            for fn, nbytes in items:
+                tm.submit(fn, nbytes, TrafficClass.KV_TRANSFER)
+            tm.flush(on_complete=tm_done)
+        return len(transfers)
+
+    def _read_complete(self, er: EngineRequest):
+        """Completion half: release the read-queue charge, record the
+        timestamp and install the hit KV on the PE (layerwise
+        double-buffered through kvio.layer_stream)."""
+        req = er.req
         self._release_read_q(req)
+        self._stamp(req.rid, "read_done_t")
+        er.lifecycle = ReqState.PREFILL
+        pe = self.pes[req.pe]
+        if uses_state_blob(self.cfg):
+            pe.install_hit_kv(er, er._read_box.get("p"))
+        else:
+            pe.install_hit_kv(er, [b for b in er._read_payload
+                                   if b is not None])
 
     def _release_read_q(self, req: Request):
         """Release exactly what choose_read_path charged — with
@@ -290,48 +455,146 @@ class ServingSystem:
                     req.pe if side == "pe" else req.de, tokens[side])
 
     # ------------------------------------------------------------------
-    def _step_engines(self):
+    # engine phases
+    # ------------------------------------------------------------------
+    def _step_pes(self) -> int:
+        act = 0
+        pe_max = 0.0
         for pe in self.pes.values():
-            for er in pe.step():
+            before = pe.prefill_tokens
+            done = pe.step()
+            pe_max = max(pe_max,
+                         self.time_model.pe_step_seconds(pe.last_step_items))
+            act += (pe.prefill_tokens - before) + len(done)
+            for er in done:
                 self.sched.on_request_done(er.req.pe, er.req)
-                # PE -> DE prompt-state transfer (compute network), one
-                # submission per attention layer: the DE-side doorbell
-                # batching sees the same LayerBlock granularity the
-                # layerwise install used on the PE side
-                n_l = max(kvio.n_attn_layers(self.cfg), 1)
-                nbytes = er.req.prompt_tokens * self.cfg.kv_bytes_per_token()
-                de_tm = self.des[er.req.de].tm
-                per_layer, rem = divmod(nbytes, n_l)
-                for li in range(n_l):
-                    # last layer carries the remainder: byte totals stay
-                    # exact across the per-layer submissions
-                    de_tm.submit(lambda: None,
-                                 per_layer + (rem if li == n_l - 1 else 0),
-                                 TrafficClass.KV_TRANSFER)
-                de_tm.drain()
+                self._stamp(er.req.rid, "prefill_done_t")
+                er.lifecycle = ReqState.PD_TRANSFER
+                self._queue_pd_transfer(er)
+        self._tick_compute += pe_max
+        return act
+
+    def _queue_pd_transfer(self, er: EngineRequest):
+        # PE -> DE prompt-state transfer (compute network), one
+        # submission per attention layer: the DE-side doorbell batching
+        # sees the same LayerBlock granularity the layerwise install
+        # used on the PE side
+        n_l = max(kvio.n_attn_layers(self.cfg), 1)
+        nbytes = er.req.prompt_tokens * self.cfg.kv_bytes_per_token()
+        de_tm = self.des[er.req.de].tm
+        per_layer, rem = divmod(nbytes, n_l)
+        for li in range(n_l):
+            # last layer carries the remainder: byte totals stay
+            # exact across the per-layer submissions
+            de_tm.submit(lambda: None,
+                         per_layer + (rem if li == n_l - 1 else 0),
+                         TrafficClass.KV_TRANSFER)
+        self._tick_io.add(("cn", er.req.de[0]),
+                          self.time_model.cn_seconds(nbytes))
+        if self.pipelined:
+            self._pd_queue.append(er)
+            de_tm.flush(on_complete=lambda er=er:
+                        setattr(er, "_pd_ready", True))
+        else:
+            de_tm.drain()
+            self._pending_admit.append(er)
+
+    def _collect_pd(self) -> int:
+        """Move PD-complete requests to the admission queue, preserving
+        the order their prefills finished (= the blocking runtime's
+        admission order)."""
+        still: List[EngineRequest] = []
+        n = 0
+        for er in self._pd_queue:
+            if er._pd_ready:
+                er._pd_ready = False
                 self._pending_admit.append(er)
+                n += 1
+            else:
+                still.append(er)
+        self._pd_queue = still
+        return n
+
+    def _admit_pending(self) -> int:
+        n = 0
         still = deque()
         while self._pending_admit:
             er = self._pending_admit.popleft()
             de = self.des[er.req.de]
             if de.free_slots:
+                er.lifecycle = ReqState.DECODE
                 de.admit(er)
+                n += 1
             else:
                 still.append(er)
         self._pending_admit = still
+        return n
+
+    def _step_des(self) -> int:
+        act = 0
+        de_max = 0.0
         for de in self.des.values():
-            for er in de.step():
+            de_node = de.eid[0]
+            active_before = [er for er in de.slots if er is not None]
+            steps0 = de.decode_steps
+            b0 = de.tm.bytes[TrafficClass.KV_TRANSFER]
+            finished = de.step()
+            de_max = max(de_max,
+                         self.time_model.de_step_seconds(de.last_step_ctxs))
+            act += (de.decode_steps - steps0) + len(finished)
+            persist_b = de.tm.bytes[TrafficClass.KV_TRANSFER] - b0
+            self._tick_io.add(("snic", de_node),
+                              self.time_model.snic_seconds(persist_b))
+            for er in active_before:
+                m = self.metrics.get(er.req.rid)
+                if m is None:
+                    continue
+                if m.first_decode_t < 0:
+                    self._stamp(er.req.rid, "first_decode_t")
+                if len(er.generated) >= 2 and m.second_token_t < 0:
+                    self._stamp(er.req.rid, "second_token_t")
+            for er in finished:
                 self.sched.on_request_done(er.req.de, er.req)
-                sess = er._session
-                sess.context = (er.context_tokens + er.append_tokens +
-                                er.generated)
-                sess.rounds_done += 1
-                sess.current = None
-                del self._inflight[er.req.rid]
-                if self.tiers:
-                    self._round_finished_tier(sess, er.req.de[0])
-                if sess.next_round < sess.traj.n_rounds:
-                    self._submit_round(sess)
+                self._stamp(er.req.rid, "done_t")
+            if self.pipelined:
+                pend, de.pending_persist = de.pending_persist, []
+                if pend:
+                    for er, _ in pend:
+                        er.lifecycle = ReqState.PERSIST
+
+                    def persists_done(pend=pend):
+                        for er, fin in pend:
+                            if fin is not None:
+                                fin()
+                            self._finish_round(er)
+
+                    de.tm.flush(on_complete=persists_done)
+            else:
+                for er in finished:
+                    self._finish_round(er)
+        self._tick_compute += de_max
+        return act
+
+    def _finish_round(self, er: EngineRequest):
+        """Round completion (after the persist landed): session context
+        rolls forward, tier warm-up/prefetch runs, and the next round
+        submits — immediately offline, after the think gap online."""
+        sess = er._session
+        sess.context = (er.context_tokens + er.append_tokens +
+                        er.generated)
+        sess.rounds_done += 1
+        sess.current = None
+        er.lifecycle = ReqState.DONE
+        self.gen_tokens_done += len(er.generated)
+        del self._inflight[er.req.rid]
+        if self.tiers:
+            self._round_finished_tier(sess, er.req.de[0])
+        if sess.next_round < sess.traj.n_rounds:
+            think = sess.traj.rounds[sess.next_round].think
+            if self._online and think > 0:
+                self.loop.after(think, lambda s=sess: self._submit_round(s))
+            else:
+                self._submit_round(sess)
 
     # ------------------------------------------------------------------
     def _round_finished_tier(self, sess: AgentSession, de_node: int):
@@ -345,14 +608,15 @@ class ServingSystem:
            exactly the trie match of the current context; stage any
            blocks capacity pressure evicted back into the tier ahead of
            the round start.  Reads go through the backing store (real
-           SNIC traffic, paid during the idle gap).  Serving has no wall
-           clock, so "during the gap" degenerates to right-after-warm-up
-           here — it repairs evictions other sessions inflicted earlier
-           in the step; the simulator, which has a clock, additionally
-           models the late-window timing (Sim._schedule_prefetch).
+           SNIC traffic, paid during the idle gap).  The prefetch fires
+           right after warm-up — in online mode that is the start of
+           the think gap, whose seconds also age the TTL policy; the
+           simulator additionally models the late-window issue timing
+           (Sim._schedule_prefetch).
         """
         tid = sess.traj.tid
         tier = self.tiers[de_node]
+        now = self._tier_now()
         if uses_state_blob(self.cfg):
             return
         if sess.next_round >= sess.traj.n_rounds:
@@ -366,26 +630,139 @@ class ServingSystem:
         # eviction trims the tail and the servable prefix survives
         for r in reversed(refs):
             tier.admit(r, self.layout.full_block_bytes, owner=tid,
-                       payload=self.store.peek(r))
+                       payload=self.store.peek(r), now=now)
         if self.prefetcher is not None:
             for chunk in self.prefetcher.plan(tier, refs):
                 for r in chunk:
-                    tier.prefetch_block(r, owner=tid)
+                    tier.prefetch_block(r, owner=tid, now=now)
 
+    # ------------------------------------------------------------------
+    # the event loop tick
+    # ------------------------------------------------------------------
+    def _poll_all(self) -> int:
+        """Complete every in-flight transfer (tick phase 4): completion
+        callbacks mark requests install-ready / PD-ready and run persist
+        finalisation + next-round submission."""
+        n = 0
+        progress = True
+        while progress:
+            progress = False
+            for tm in self._all_tms():
+                if tm.queued:
+                    tm.flush()
+                k = tm.poll()
+                if k:
+                    progress = True
+                    n += k
+        return n
+
+    def _run_installs(self) -> int:
+        """Install the hit KV of read-complete requests, in decision
+        (rid) order — the blocking runtime's install order."""
+        ready, self._install_ready = self._install_ready, []
+        ready.sort(key=lambda er: er.req.rid)
+        for er in ready:
+            self._read_complete(er)
+        return len(ready)
+
+    def _stamp(self, rid: int, field_name: str):
+        """Defer a milestone timestamp to the end of the current tick
+        (after the clock charges the tick's modelled seconds) — stamping
+        with the pre-advance time would make every latency metric
+        exclude the tick its milestone occurred in."""
+        m = self.metrics.get(rid)
+        if m is not None:
+            self._pending_stamps.append((m, field_name))
+
+    def _flush_stamps(self):
+        for m, fld in self._pending_stamps:
+            if getattr(m, fld) < 0:
+                setattr(m, fld, self.clock.now)
+        self._pending_stamps = []
+
+    def _submit_overhead_delta(self) -> float:
+        tot = sum(tm.submitted_seconds for tm in self._all_tms())
+        d = tot - self._submit_seconds_seen
+        self._submit_seconds_seen = tot
+        return d
+
+    def _tick(self) -> int:
+        """One event-loop tick; returns an activity count (0 = idle).
+
+        Pipelined: reads issued in phase 1 and PD/persist transfers
+        flushed in phases 2–3 stay in flight across the engine compute
+        and land at phase 4's poll, so the clock charges
+        ``max(transfer, compute)``.  Blocking: the same phases with
+        inline drains — the clock charges ``transfer + compute``.
+        """
+        self._tick_io = TickIo()
+        self._tick_compute = 0.0
+        act = 0
+        if self.pipelined:
+            act += self._schedule_tick()     # 1. decide + issue reads
+            act += self._step_pes()          # 2. prefill compute
+            act += self._step_des()          # 3. decode compute
+            act += self._poll_all()          # 4. transfer completions
+            act += self._run_installs()      # 5. hit-KV installs
+            self._collect_pd()
+            act += self._admit_pending()     # 6. DE admissions
+            dt = max(self._tick_io.parallel_seconds(), self._tick_compute)
+        else:
+            act += self._schedule_tick()
+            act += self._step_pes()
+            act += self._admit_pending()
+            act += self._step_des()
+            dt = self._tick_io.serial_seconds() + self._tick_compute
+        self.clock.advance(dt + self._submit_overhead_delta())
+        self._flush_stamps()
+        return act
+
+    # ------------------------------------------------------------------
+    # drivers
     # ------------------------------------------------------------------
     def run_offline(self, trajectories: List[Trajectory],
                     max_iters: int = 100000) -> List[AgentSession]:
         sessions = [AgentSession(t, np.random.default_rng(1000 + t.tid))
                     for t in trajectories]
+        self._online = False
         for s in sessions:
             self._submit_round(s)
         for _ in range(max_iters):
             if all(s.done() for s in sessions):
                 break
-            self._schedule()
-            self._step_engines()
+            self._tick()
         else:
             raise RuntimeError("serving system did not converge")
+        return sessions
+
+    def run_online(self, trajectories: List[Trajectory],
+                   arrivals: List[float],
+                   max_iters: int = 1000000) -> List[AgentSession]:
+        """Online serving: trajectory i starts at ``arrivals[i]`` seconds
+        on the runtime's wall clock; inter-round think gaps
+        (``Round.think``) are honoured.  The clock jumps over idle gaps
+        instead of sleeping, so a low-rate sweep costs no real time."""
+        assert len(arrivals) == len(trajectories), "one arrival per trajectory"
+        sessions = [AgentSession(t, np.random.default_rng(1000 + t.tid))
+                    for t in trajectories]
+        self._online = True
+        try:
+            for s, t0 in zip(sessions, arrivals):
+                self.loop.at(float(t0), lambda s=s: self._submit_round(s))
+            for _ in range(max_iters):
+                self.loop.fire_due()
+                if all(s.done() for s in sessions) and not self.loop.pending:
+                    break
+                if self._tick() == 0:
+                    nt = self.loop.next_time()
+                    if nt is None:
+                        raise RuntimeError(
+                            "serving runtime stalled with no pending events")
+                    self.clock.jump_to(nt)
+            else:
+                raise RuntimeError("serving system did not converge")
+        finally:
+            self._online = False
         return sessions
 
     # ------------------------------------------------------------------
@@ -400,6 +777,14 @@ class ServingSystem:
             trie_blocks=self.trie.n_blocks,
             prefill_tokens=sum(p.prefill_tokens for p in self.pes.values()),
             decode_steps=sum(d.decode_steps for d in self.des.values()),
+            gen_tokens=self.gen_tokens_done,
+            # --- wall clock / submission overhead ----------------------
+            wall_s=self.clock.now,
+            doorbells=sum(tm.doorbells for tm in self._all_tms()),
+            submitted_seconds=sum(tm.submitted_seconds
+                                  for tm in self._all_tms()),
+            # --- per-round latency (mirrors Sim.results()) -------------
+            **events.latency_summary(self.metrics.values()),
             # --- DRAM tier (zeros when disabled) -----------------------
             dram_hit_bytes=sum(t.dram_hit_bytes for t in tiers),
             dram_bytes_pe_side=self.dram_bytes_by_side["pe"],
@@ -408,3 +793,10 @@ class ServingSystem:
             tier_prefetch_bytes=sum(t.prefetch_bytes for t in tiers),
             tier_evicted_bytes=sum(t.evicted_bytes for t in tiers),
         )
+
+    def slo_attainment(self, ttft_slo_s: float = 4.0,
+                       tpot_slo_s: float = 0.050) -> float:
+        """Fraction of finished rounds meeting both SLOs (paper §7.4
+        defaults: TTFT ≤ 4 s, TPOT ≤ 50 ms)."""
+        return events.slo_attainment(self.metrics.values(),
+                                     ttft_slo_s, tpot_slo_s)

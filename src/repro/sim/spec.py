@@ -49,6 +49,15 @@ HOPPER_NODE = NodeSpec(g=8, cnic_bw=50e9, snic_bw=50e9, dram_bw=500e9,
 TPU_V5E_HOST = NodeSpec(g=4, cnic_bw=45e9, snic_bw=25e9, dram_bw=200e9,
                         gpu=TPU_V5E)
 
+# A node scaled down to the `reduced()` test models: storage reads cost
+# modelled seconds comparable to their compute, reproducing the paper's
+# bandwidth-bound regime at CI scale.  The serving-runtime benchmark,
+# tests and example all share this profile so the regime they measure
+# stays a single definition.
+REDUCED_TEST_NODE = NodeSpec(
+    g=1, cnic_bw=2e6, snic_bw=1e6, dram_bw=20e6,
+    gpu=GPUSpec(flops=50e9, hbm_bw=5e9, hbm_bytes=1e9))
+
 
 @dataclass(frozen=True)
 class ModelSimSpec:

@@ -80,3 +80,85 @@ def test_high_fraction_from_paper_config():
     arb = VLArbiterConfig()
     hf = arb.high_fraction()
     assert 0.94 <= hf <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# non-blocking issue/complete halves (flush/poll) — the pipelined serving
+# runtime's transfer API
+# ---------------------------------------------------------------------------
+
+
+def test_flush_is_nonblocking_and_poll_completes():
+    tm = TrafficManager(doorbell_batch=4)
+    out = []
+    for i in range(3):
+        tm.submit(lambda i=i: out.append(i), 10, TrafficClass.KV_TRANSFER)
+    fired = []
+    n = tm.flush(on_complete=lambda: fired.append(True))
+    # issue half: WRs posted, doorbell rung, NOTHING executed yet
+    assert n == 3 and out == [] and tm.in_flight == 3 and not fired
+    assert tm.queued == 0 and tm.busy
+    assert tm.poll(max_n=2) == 2 and out == [0, 1] and not fired
+    assert tm.poll() == 1 and out == [0, 1, 2]
+    assert fired == [True]          # batch callback after the LAST transfer
+    assert not tm.busy
+
+
+def test_flush_preserves_arbiter_priority():
+    tm = TrafficManager()
+    order = []
+    tm.submit(lambda: order.append("kv1"), 10, TrafficClass.KV_TRANSFER)
+    tm.submit(lambda: order.append("coll"), 10,
+              TrafficClass.MODEL_COLLECTIVE)
+    tm.submit(lambda: order.append("kv2"), 10, TrafficClass.KV_TRANSFER)
+    tm.flush()
+    tm.poll()
+    assert order == ["coll", "kv1", "kv2"]
+
+
+def test_flush_doorbell_batching_vs_degenerate_drains():
+    """One flush of n KV WRs rings ceil(n/batch) doorbells; the blocking
+    pattern (submit+drain per transfer) rings one per transfer — the
+    submission overhead the pipelined runtime amortises."""
+    tm = TrafficManager(doorbell_batch=4)
+    for _ in range(10):
+        tm.submit(lambda: None, 1, TrafficClass.KV_TRANSFER)
+    tm.flush()
+    assert tm.doorbells == 3
+    expect = 10 * tm.cost.rdma_wr_s + 3 * tm.cost.rdma_doorbell_s
+    assert abs(tm.submitted_seconds - expect) < 1e-12
+    tm.poll()
+    tm2 = TrafficManager(doorbell_batch=4)
+    for _ in range(10):
+        tm2.submit(lambda: None, 1, TrafficClass.KV_TRANSFER)
+        tm2.drain()
+    assert tm2.doorbells == 10
+    assert tm2.submitted_seconds > tm.submitted_seconds
+
+
+def test_empty_flush_fires_callback_immediately():
+    tm = TrafficManager()
+    fired = []
+    assert tm.flush(on_complete=lambda: fired.append(True)) == 0
+    assert fired == [True]
+
+
+def test_interleaved_flushes_complete_independently():
+    tm = TrafficManager()
+    done = []
+    tm.submit(lambda: None, 1, TrafficClass.KV_TRANSFER)
+    tm.flush(on_complete=lambda: done.append("a"))
+    tm.submit(lambda: None, 1, TrafficClass.KV_TRANSFER)
+    tm.submit(lambda: None, 1, TrafficClass.KV_TRANSFER)
+    tm.flush(on_complete=lambda: done.append("b"))
+    assert tm.poll(max_n=2) == 2 and done == ["a"]
+    assert tm.poll() == 1 and done == ["a", "b"]
+
+
+def test_drain_equals_flush_plus_poll():
+    tm = TrafficManager(doorbell_batch=4)
+    out = []
+    for i in range(5):
+        tm.submit(lambda i=i: out.append(i), 1, TrafficClass.KV_TRANSFER)
+    assert tm.drain() == 5
+    assert out == list(range(5)) and not tm.busy
