@@ -1,0 +1,181 @@
+"""Interference avoidance on a finite compute network (§5.1, made
+quantitative): weighted-VL arbitration vs naive FIFO sharing.
+
+The paper claims the storage-to-decode path "avoids interference with
+latency-critical model execution communications"; with the finite,
+priority-arbitrated network model (repro.network) that claim becomes a
+measurement.  The sweep raises background KV/PD transfer load on the
+shared PE<->DE link (other tenants' dual-path reads, PD rebalancing —
+``SimConfig.net_bg_load``) while per-layer model collectives ride the
+same link, and compares two arbitration arms:
+
+* ``vl``   — the paper's two-arbiter WRR: collectives own ~99 % of a
+  contended link, KV keeps a starvation floor;
+* ``fifo`` — class-blind processor sharing: every backlogged transfer
+  dilutes the collectives' share.
+
+Acceptance signals, asserted in ``--smoke`` mode (CI):
+
+* with the VL arbiter, collective stall time ≈ 0 at EVERY swept load
+  and SLO attainment ≥ the FIFO arm at every load;
+* at the top load the FIFO arm shows real interference: collective
+  stall well above the VL arm and strictly lower SLO attainment;
+* the serving runtime preserves blocking-vs-pipelined token identity
+  (PR 3) under the finite network (collectives on, both arbiters), and
+  its contention-aware clock charges the FIFO arm at least the VL arm's
+  collective stall.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):       # direct `python benchmarks/<file>.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit, header, timed
+
+# operating point: the link is a 200 Gb/s PD interconnect; the
+# collective slice crossing it is sized so that, uncontended, every
+# group step's collectives fit under its compute (~30 % of prefill
+# compute) — the provisioning any sane deployment starts from.  The
+# sweep then shows that FIFO sharing destroys that fit while the VL
+# arbiter preserves it.
+NET_BW = 25e9
+COLL_BYTES_PER_TOKEN = 0.4e6
+SLO_TTFT_S = 1.0
+SLO_TPOT_S = 0.020
+
+
+def _sim_arm(arbiter: str, load: float, n_agents: int):
+    from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig, \
+        generate_dataset
+    trajs = generate_dataset(n_agents, 32768, seed=0)
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
+                    mode="dualpath", net_bw=NET_BW, net_arbiter=arbiter,
+                    collective_bytes_per_token=COLL_BYTES_PER_TOKEN,
+                    net_bg_load=load)
+    sim = Sim(cfg, trajs).run()
+    r = sim.results()
+    r["slo"] = sim.slo_attainment(SLO_TTFT_S, SLO_TPOT_S)
+    return r
+
+
+def _serving_identity(arbiter: str):
+    """Blocking vs pipelined on the real-bytes runtime with collectives
+    on the finite network: tokens must stay bit-identical (the PR 3
+    invariant) and the contention-aware clock must account stalls."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import ServingSystem
+    from repro.sim.spec import REDUCED_TEST_NODE
+    from repro.sim.traces import Round, Trajectory
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    out = {}
+    for arm in ("blocking", "pipelined"):
+        # heterogeneous sessions desynchronise the phases, so reads and
+        # PD transfers genuinely share ticks with stepping engines —
+        # the co-occurrence the contention model resolves
+        trajs = [Trajectory(i, [Round(24 + 8 * i, 4 + 2 * i),
+                                Round(16 + 4 * i, 4), Round(8, 4)])
+                 for i in range(4)]
+        sys_ = ServingSystem(cfg, params, n_pe=1, n_de=2, block_tokens=16,
+                             max_seq=200, de_slots=2, seed=0,
+                             split_reads=True,
+                             pipelined=(arm == "pipelined"),
+                             node=REDUCED_TEST_NODE, net_arbiter=arbiter,
+                             collective_group_size=8)
+        sessions = sys_.run_offline(trajs)
+        out[arm] = dict(tokens=[s.context for s in sessions],
+                        st=sys_.stats())
+    return out
+
+
+def run(quick: bool = False, smoke: bool = False):
+    # the FIFO arm's backlog (and its collective dilution) builds over
+    # the run, so the workload must be long enough for the interference
+    # to develop — 16 agents is the smallest size where the top-load
+    # FIFO stall is unambiguous
+    n_agents = 16
+    loads = (0.0, 0.9) if smoke else (0.0, 0.5, 0.9)
+
+    res = {}
+    for arbiter in ("vl", "fifo"):
+        for load in loads:
+            with timed(f"fig_interference/{arbiter}/load{load:g}") as box:
+                r = _sim_arm(arbiter, load, n_agents)
+                res[(arbiter, load)] = r
+                box["derived"] = (
+                    f"stall={r['collective_stall_s']:.3f}s "
+                    f"backlog={r['transfer_backlog_s']:.1f}s "
+                    f"ttft={r['ttft_mean']:.3f}s "
+                    f"tpot={r['tpot_mean'] * 1e3:.2f}ms "
+                    f"slo={r['slo']:.3f}")
+
+    # ---- serving runtime under the finite network -----------------------
+    ident = {}
+    for arbiter in ("vl", "fifo"):
+        with timed(f"fig_interference/serving/{arbiter}") as box:
+            ident[arbiter] = _serving_identity(arbiter)
+            st_p = ident[arbiter]["pipelined"]["st"]
+            box["derived"] = (
+                f"stall={st_p['collective_stall_s']:.4f}s "
+                f"backlog={st_p['transfer_backlog_s']:.4f}s "
+                f"congestion={st_p['net_congestion']:.2f}")
+
+    # ---- acceptance ------------------------------------------------------
+    top = max(loads)
+    for load in loads:
+        vl, fifo = res[("vl", load)], res[("fifo", load)]
+        assert vl["finished_agents"] == n_agents
+        assert fifo["finished_agents"] == n_agents
+        # the claim: with the VL arbiter model execution never stalls on
+        # cache movement — at ANY transfer load
+        assert vl["collective_stall_s"] <= 0.01 * vl["sim_time"], \
+            (load, vl["collective_stall_s"], vl["sim_time"])
+        assert vl["slo"] >= fifo["slo"] - 1e-9, (load, vl["slo"],
+                                                 fifo["slo"])
+    # the ablation: FIFO sharing lets transfer load starve collectives
+    vl_top, fifo_top = res[("vl", top)], res[("fifo", top)]
+    assert fifo_top["collective_stall_s"] > \
+        max(10 * vl_top["collective_stall_s"], 5.0), \
+        (fifo_top["collective_stall_s"], vl_top["collective_stall_s"])
+    assert fifo_top["slo"] < vl_top["slo"], (fifo_top["slo"], vl_top["slo"])
+    # token identity (PR 3) survives the finite network, both arbiters
+    for arbiter, arms in ident.items():
+        assert arms["pipelined"]["tokens"] == arms["blocking"]["tokens"], \
+            f"{arbiter}: pipelined generation diverged from blocking"
+    # the serving clock sees real contention and charges FIFO more
+    for arm in ("blocking", "pipelined"):
+        vl_st = ident["vl"][arm]["st"]["collective_stall_s"]
+        fifo_st = ident["fifo"][arm]["st"]["collective_stall_s"]
+        assert fifo_st > 0 and fifo_st > vl_st, (arm, vl_st, fifo_st)
+
+    emit("fig_interference/acceptance", 0.0,
+         f"ok: vl stall {vl_top['collective_stall_s']:.3f}s ~ 0; "
+         f"slo@load{top:g} vl {vl_top['slo']:.3f} >= fifo "
+         f"{fifo_top['slo']:.3f}; fifo stall "
+         f"{fifo_top['collective_stall_s']:.1f}s; tokens identical")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run that asserts the acceptance "
+                         "criteria and exits nonzero on violation")
+    args = ap.parse_args(argv)
+    header()
+    run(quick=args.quick, smoke=args.smoke)
+    if args.smoke:
+        print("fig_interference smoke: PASS", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,9 +24,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (fig7_offline, fig8_pd_ratio, fig9_append_gen,
                             fig10_online, fig12_ablation, fig13_balance,
-                            fig_online_serving, fig_tiered_prefetch,
-                            kernel_bench, micro_submit, roofline,
-                            table1_cache_compute, table3_scale)
+                            fig_interference, fig_online_serving,
+                            fig_tiered_prefetch, kernel_bench, micro_submit,
+                            roofline, table1_cache_compute, table3_scale)
     from benchmarks.common import header
 
     suite = {
@@ -41,6 +41,7 @@ def main(argv=None) -> None:
         "fig13": fig13_balance.run,
         "fig_tiered": fig_tiered_prefetch.run,
         "fig_online_serving": fig_online_serving.run,
+        "fig_interference": fig_interference.run,
         "table3": table3_scale.run,
         "roofline": roofline.run,
     }

@@ -315,8 +315,37 @@ class Scheduler:
             return "pe" if self._tie_toggle else "de"
         return "pe" if pe_q < de_q else "de"
 
+    def _finalise_partition(self, req: Request, side: str, t: int,
+                            snic: Dict[str, int]) -> str:
+        """Install a tier/SNIC hit partition on the request, derive the
+        (read_path, read_split) majority view plan_for consumes, and
+        charge both sides' disk reading queues their SNIC share.  Shared
+        by the adaptive and round-robin schedulers so the tier-aware
+        accounting cannot diverge between them."""
+        req.dram_side, req.dram_tokens = side, t
+        req.snic_tokens = snic
+        pe_total = snic["pe"] + (t if side == "pe" else 0)
+        de_total = snic["de"] + (t if side == "de" else 0)
+        if pe_total == de_total:
+            req.read_path = side
+        else:
+            req.read_path = "pe" if pe_total > de_total else "de"
+        major = pe_total if req.read_path == "pe" else de_total
+        req.read_split = major / req.cached_tokens
+        self.engines[req.pe].read_q += snic["pe"]
+        self.engines[req.de].read_q += snic["de"]
+        return req.read_path
+
     def choose_read_path(self, req: Request,
-                         tier_tokens: Optional[Dict[str, int]] = None) -> str:
+                         tier_tokens: Optional[Dict[str, int]] = None,
+                         net_congestion: float = 0.0) -> str:
+        """``net_congestion`` ∈ [0, 1] is the compute network's
+        back-pressure signal (repro.network.SharedLink.congestion): only
+        DE-side reads cross the PE<->DE link (Fig. 4b streams
+        storage→DE buffer→network→PE HBM), so a congested link inflates
+        the DE side's effective queue depth by ``congestion · hit`` in
+        the water-fill / shorter-queue comparison, shifting read
+        fractions toward the PE side until the collectives drain."""
         assert req.pe is not None and req.de is not None, req.rid
         pe_q = self.engines[req.pe].read_q
         de_q = self.engines[req.de].read_q
@@ -342,37 +371,29 @@ class Scheduler:
                 # (a fixed preference would bias one side — see
                 # _shorter_queue_side)
                 side, t = self._shorter_queue_side(pe_q, de_q), t_pe
-            req.dram_side, req.dram_tokens = side, t
             rem = req.cached_tokens - t
             snic = {"pe": 0, "de": 0}
             if rem:
+                bias = int(net_congestion * rem)
                 if self.split_reads:
-                    frac_pe = self._water_fill_frac(pe_q, de_q, rem)
+                    frac_pe = self._water_fill_frac(pe_q, de_q + bias, rem)
                     snic["pe"] = int(rem * frac_pe)
                     snic["de"] = rem - snic["pe"]
                 else:
-                    snic[self._shorter_queue_side(pe_q, de_q)] = rem
-            req.snic_tokens = snic
-            pe_total = snic["pe"] + (t if side == "pe" else 0)
-            de_total = snic["de"] + (t if side == "de" else 0)
-            if pe_total == de_total:
-                req.read_path = side
-            else:
-                req.read_path = "pe" if pe_total > de_total else "de"
-            major = pe_total if req.read_path == "pe" else de_total
-            req.read_split = major / req.cached_tokens
-            self.engines[req.pe].read_q += snic["pe"]
-            self.engines[req.de].read_q += snic["de"]
-            return req.read_path
+                    snic[self._shorter_queue_side(pe_q, de_q + bias)] = rem
+            return self._finalise_partition(req, side, t, snic)
         if self.split_reads and req.cached_tokens:
             # Split read (§6.1 future work): partition the hit across
             # both sides' storage NICs in proportion to their disk-queue
             # depths (water-filling, see _water_fill_frac).
-            frac_pe = self._water_fill_frac(pe_q, de_q, req.cached_tokens)
+            bias = int(net_congestion * req.cached_tokens)
+            frac_pe = self._water_fill_frac(pe_q, de_q + bias,
+                                            req.cached_tokens)
             req.read_path = "pe" if frac_pe >= 0.5 else "de"
             req.read_split = max(frac_pe, 1.0 - frac_pe)
         else:
-            req.read_path = self._shorter_queue_side(pe_q, de_q)
+            bias = int(net_congestion * req.cached_tokens)
+            req.read_path = self._shorter_queue_side(pe_q, de_q + bias)
             req.read_split = 1.0
         tokens = req.read_tokens_by_side()
         self.engines[req.pe].read_q += tokens["pe"]
@@ -448,8 +469,35 @@ class RoundRobinScheduler(Scheduler):
             out.append(Assignment(req, de.engine))
         return out
 
-    def choose_read_path(self, req: Request, tier_tokens=None) -> str:
-        # the RR baseline ignores tier residency (like it ignores queues)
+    def choose_read_path(self, req: Request, tier_tokens=None,
+                         net_congestion: float = 0.0) -> str:
+        """Tier-aware like the base class — a DRAM-resident prefix skips
+        the storage NIC regardless of scheduling policy, so ignoring it
+        would make the RR baseline artificially storage-bound on tiered
+        workloads — but the cold remainder keeps the round-robin
+        alternation (no queue depths, no congestion signal), which is
+        the property the Fig. 13 comparison isolates."""
+        if tier_tokens and req.cached_tokens:
+            t_pe = min(tier_tokens.get("pe", 0), req.cached_tokens)
+            t_de = min(tier_tokens.get("de", 0), req.cached_tokens)
+        else:
+            t_pe = t_de = 0
+        if t_pe or t_de:
+            # one draw per request: drawing again for the remainder
+            # would consume two counter values and freeze the parity,
+            # so the "alternation" would never alternate
+            flip = next(self._rr_path) % 2 == 0
+            if t_pe > t_de:
+                side, t = "pe", t_pe
+            elif t_de > t_pe:
+                side, t = "de", t_de
+            else:   # equal prefixes: alternate, like every other RR choice
+                side, t = ("pe" if flip else "de"), t_pe
+            rem = req.cached_tokens - t
+            snic = {"pe": 0, "de": 0}
+            if rem:
+                snic["pe" if flip else "de"] = rem
+            return self._finalise_partition(req, side, t, snic)
         req.read_path = "pe" if next(self._rr_path) % 2 == 0 else "de"
         req.read_split = 1.0
         side = self.engines[req.pe if req.read_path == "pe" else req.de]

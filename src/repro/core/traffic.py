@@ -128,7 +128,11 @@ class _QueuedTransfer:
     nbytes: int = field(compare=False, default=0)
     tclass: TrafficClass = field(compare=False,
                                  default=TrafficClass.KV_TRANSFER)
-    cb: Optional[Callable[[], None]] = field(compare=False, default=None)
+    # completion obligations: one countdown per flush whose batch this
+    # transfer appeared in (a congestion-deferred WR can belong to more
+    # than one flush — each on_complete must still see it land)
+    cbs: Optional[List[Callable[[], None]]] = field(compare=False,
+                                                    default=None)
 
 
 class TrafficManager:
@@ -157,7 +161,7 @@ class TrafficManager:
     """
 
     def __init__(self, cost: SubmitCostModel = SubmitCostModel(),
-                 doorbell_batch: int = 32):
+                 doorbell_batch: int = 32, pace_threshold: float = 0.5):
         self.cost = cost
         self.doorbell_batch = doorbell_batch
         self._q: List[_QueuedTransfer] = []
@@ -167,6 +171,17 @@ class TrafficManager:
         self.doorbells = 0
         self.stats = {c: 0 for c in TrafficClass}
         self.bytes = {c: 0 for c in TrafficClass}
+        # --- compute-network back-pressure (repro.network) --------------
+        # ``net_congestion`` ∈ [0, 1] is set by the runtime from the
+        # shared link's congestion signal; at or above ``pace_threshold``
+        # each flush posts collectives unconditionally but at most ONE
+        # doorbell batch of low-priority WRs, deferring the rest — so a
+        # collective submitted later still overtakes a backlog of KV WRs
+        # and model execution never stalls behind cache movement.
+        self.net_congestion = 0.0
+        self.pace_threshold = pace_threshold
+        self.paced_flushes = 0
+        self.deferred_wrs = 0
 
     def submit(self, fn: Callable[[], None], nbytes: int,
                tclass: TrafficClass):
@@ -180,8 +195,15 @@ class TrafficManager:
     def flush(self, on_complete: Optional[Callable[[], None]] = None) -> int:
         """Post every queued WR (arbiter order) to the in-flight ring and
         ring the doorbells.  Non-blocking — thunks execute at ``poll``.
-        ``on_complete`` fires once every transfer posted by THIS flush
-        has executed (immediately when nothing was queued)."""
+        ``on_complete`` fires once every transfer queued at THIS flush
+        has executed (immediately when nothing was queued) — including
+        WRs the KV pacing defers to a later flush.
+
+        When ``net_congestion >= pace_threshold`` the flush is *paced*:
+        collectives post unconditionally, low-priority WRs post at most
+        one doorbell batch, and the remainder returns to the queue (in
+        order, submission cost uncharged — it is charged when they are
+        actually posted).  Returns the number of WRs posted."""
         batch: List[_QueuedTransfer] = []
         while self._q:
             batch.append(heapq.heappop(self._q))
@@ -189,8 +211,24 @@ class TrafficManager:
             if on_complete is not None:
                 on_complete()
             return 0
+        posted = batch
+        deferred: List[_QueuedTransfer] = []
+        if self.net_congestion >= self.pace_threshold:
+            posted = []
+            kv_budget = self.doorbell_batch
+            for t in batch:
+                if t.tclass == TrafficClass.MODEL_COLLECTIVE:
+                    posted.append(t)
+                elif kv_budget > 0:
+                    posted.append(t)
+                    kv_budget -= 1
+                else:
+                    deferred.append(t)
+            if deferred:
+                self.paced_flushes += 1
+                self.deferred_wrs += len(deferred)
         kv_batch = 0
-        for t in batch:
+        for t in posted:
             if t.tclass == TrafficClass.MODEL_COLLECTIVE:
                 self.submitted_seconds += self.cost.rdma_batch_seconds(1)
                 self.doorbells += 1
@@ -213,23 +251,33 @@ class TrafficManager:
                     on_complete()
 
             for t in batch:
-                t.cb = countdown
-        self._inflight.extend(batch)
-        return len(batch)
+                if t.cbs is None:
+                    t.cbs = []
+                t.cbs.append(countdown)
+        self._inflight.extend(posted)
+        for t in deferred:       # sort_key intact: order is preserved
+            heapq.heappush(self._q, t)
+        return len(posted)
 
     # -- completion half ---------------------------------------------------
     def poll(self, max_n: Optional[int] = None) -> int:
         """Execute up to ``max_n`` in-flight transfers (all if None) in
         posted order, firing completion callbacks; returns the count.
         Pop-based, so a callback that re-enters drain/poll cannot
-        double-execute a transfer."""
+        double-execute a transfer; a payload thunk that faults still
+        completes exactly once (callbacks fire, the error propagates) —
+        the CQE-reports-errors-exactly-once contract the fault-injection
+        tests pin."""
         n = 0
         while self._inflight and (max_n is None or n < max_n):
             t = self._inflight.popleft()
-            t.fn()
-            if t.cb is not None:
-                t.cb()
             n += 1
+            try:
+                t.fn()
+            finally:
+                cbs, t.cbs = t.cbs, None
+                for cb in cbs or ():
+                    cb()
         return n
 
     @property

@@ -1,0 +1,19 @@
+"""Finite compute-network model with priority arbitration (paper §5.1).
+
+``SharedLink`` multiplexes per-layer model collectives against
+PD-transfer / dual-path RDMA traffic under the weighted-VL arbiter (or
+a naive FIFO arm for ablation); ``CollectiveVolumeModel`` supplies the
+collective volumes; ``drain_times`` is the closed-form two-class drain
+the serving runtime's tick-quantised clock uses.
+"""
+from repro.network.collectives import CollectiveVolumeModel
+from repro.network.link import (ARBITERS, SharedLink, drain_times,
+                                kv_share_when_contended)
+
+__all__ = [
+    "ARBITERS",
+    "CollectiveVolumeModel",
+    "SharedLink",
+    "drain_times",
+    "kv_share_when_contended",
+]

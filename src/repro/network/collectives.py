@@ -1,0 +1,90 @@
+"""Per-layer model-collective volumes for the finite compute network.
+
+The interference model needs to know how many bytes of latency-critical
+model-execution traffic (TP all-reduces, EP all-to-alls, PD handoffs)
+one processed token puts on the compute network.  Two sources:
+
+* :meth:`CollectiveVolumeModel.from_hlo_text` — exact, from the
+  compiled program: ``roofline.hlo.parse_hlo_metrics`` already counts
+  result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute (loop-aware), so dividing by the
+  batch's token count gives the measured per-token volume.
+* :meth:`from_config` / :meth:`from_spec` — analytic estimate for
+  models we cannot compile at CI scale (DS 660B and friends): per layer
+  a TP-sharded transformer all-reduces the attention output and the FFN
+  output, each moving ``2·(g−1)/g`` of one hidden activation vector
+  across the link (ring all-reduce), so
+
+      bytes/token ≈ n_layers · 2 · d_model · dtype_bytes · 2(g−1)/g.
+
+  ``ModelSimSpec`` carries no ``d_model``, so ``from_spec`` uses the
+  attention width ``n_heads · qk_head_dim`` as the activation-width
+  proxy (equal for the dense configs, a documented over-estimate for
+  MLA's widened QK heads — conservative in the direction that makes
+  interference *harder* to avoid).
+
+Both constructors produce the same dataclass, so the simulator, the
+serving time model and the interference benchmark consume one
+definition of "collective load".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.roofline.hlo import parse_hlo_metrics
+
+
+@dataclass(frozen=True)
+class CollectiveVolumeModel:
+    """Collective bytes the compute network carries per processed token
+    (prefill and decode alike — the collectives are per forward step and
+    scale with the tokens in it), with the per-layer breakdown the
+    doorbell-granular runtimes submit at."""
+
+    bytes_per_token: float
+    n_layers: int
+
+    @property
+    def bytes_per_token_layer(self) -> float:
+        return self.bytes_per_token / max(self.n_layers, 1)
+
+    def step_bytes(self, tokens: int) -> float:
+        """Collective volume of one forward/decode step over ``tokens``
+        freshly-processed tokens."""
+        return self.bytes_per_token * max(tokens, 0)
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def analytic(cls, n_layers: int, act_width: int, group_size: int,
+                 dtype_bytes: int = 2) -> "CollectiveVolumeModel":
+        g = max(group_size, 1)
+        if g == 1:                     # unsharded: nothing crosses the net
+            return cls(0.0, n_layers)
+        per_layer = 2.0 * act_width * dtype_bytes * 2.0 * (g - 1) / g
+        return cls(per_layer * n_layers, n_layers)
+
+    @classmethod
+    def from_config(cls, cfg, group_size: int,
+                    dtype_bytes: int = 2) -> "CollectiveVolumeModel":
+        """Analytic volume for a real ModelConfig (serving runtime)."""
+        return cls.analytic(cfg.n_layers, cfg.d_model, group_size,
+                            dtype_bytes)
+
+    @classmethod
+    def from_spec(cls, spec, group_size: int,
+                  dtype_bytes: int = 2) -> "CollectiveVolumeModel":
+        """Analytic volume for a ModelSimSpec (simulator)."""
+        return cls.analytic(spec.n_layers,
+                            max(spec.n_heads * spec.qk_head_dim, 1),
+                            group_size, dtype_bytes)
+
+    @classmethod
+    def from_hlo_text(cls, hlo_text: str, n_tokens: int,
+                      n_layers: int = 1) -> "CollectiveVolumeModel":
+        """Measured volume from a compiled program's HLO text: the
+        loop-aware collective byte count divided by the tokens the
+        program processes."""
+        metrics = parse_hlo_metrics(hlo_text)
+        return cls(metrics.get("collective_bytes", 0.0) / max(n_tokens, 1),
+                   n_layers)

@@ -1,0 +1,210 @@
+"""Finite, shared, priority-arbitrated compute-network link.
+
+The paper's interference-avoidance claim (§5.1) is that storage-to-decode
+KV traffic "avoids interference with latency-critical model execution
+communications" because every byte rides the CNIC's virtual-lane
+arbiter, where model collectives own ~99 % of the arbitration weight.
+Until this module the repo *asserted* that claim: the simulator's
+compute network was ``PSResource("net", INF)`` and the VL story lived in
+a docstring (core/traffic.py).  :class:`SharedLink` makes it a model:
+
+* a finite-capacity link multiplexing flows of different
+  :class:`~repro.core.traffic.TrafficClass`;
+* two arbitration arms — ``"vl"`` (the paper's weighted-VL arbiter,
+  rates from :func:`~repro.core.traffic.allocate_bandwidth`) and
+  ``"fifo"`` (naive processor sharing, class-blind) as the ablation the
+  interference benchmark compares against;
+* per-class accounting: bytes served, per-flow queueing delay versus
+  having the link alone (``collective_delay_s`` / ``transfer_backlog_s``)
+  and an instantaneous :meth:`congestion` signal in [0, 1] that the
+  scheduler's read-path choice and the TrafficManager's KV pacing
+  consume.
+
+:func:`drain_times` is the closed-form (fluid) counterpart used by the
+serving runtime's tick-quantised time model: two traffic classes start
+together on one link with fixed contended shares until one empties; the
+link is work-conserving, so the later class always finishes at
+``kv_s + coll_s`` while arbitration decides who finishes *first* — i.e.
+whether model execution stalls on its collectives or the KV backlog
+absorbs the whole delay.
+"""
+from __future__ import annotations
+
+import math
+from collections import Counter
+from typing import Dict, Optional
+
+from repro.core.traffic import (DEFAULT_ARBITER, TrafficClass,
+                                VLArbiterConfig, allocate_bandwidth)
+
+ARBITERS = ("vl", "fifo")
+
+
+class SharedLink:
+    """Class-aware processor-sharing link (PSResource-compatible).
+
+    The simulator's flow engine asks every resource ``rate_of(flow)``
+    at each reshare; a plain PSResource answers ``cap / n_flows``.
+    SharedLink answers per the arbiter: under ``"vl"`` the active
+    classes split capacity by the InfiniBand-style WRR tables (model
+    collectives ≈ 99 % whenever they are backlogged — §A.1's
+    high_fraction() = 0.994 — KV never starved) and flows share equally
+    within a class; under ``"fifo"`` every flow gets an equal share
+    regardless of class — the interference the paper's design exists to
+    prevent.
+
+    An infinite ``cap`` degenerates to the pre-finite-network behaviour
+    (every flow rate-unbounded, no accounting), so the default simulator
+    configuration is unchanged byte-for-byte and event-for-event.
+    """
+
+    __slots__ = ("name", "cap", "arbiter", "arb", "flows",
+                 "bytes_by_class", "collective_delay_s",
+                 "transfer_backlog_s", "contended_joins",
+                 "_counts_cache", "_counts_n", "_alloc_cache")
+
+    def __init__(self, name: str, cap: float, arbiter: str = "vl",
+                 arb: VLArbiterConfig = DEFAULT_ARBITER):
+        if arbiter not in ARBITERS:
+            raise ValueError(f"arbiter {arbiter!r} (valid: {ARBITERS})")
+        self.name = name
+        self.cap = cap
+        self.arbiter = arbiter
+        self.arb = arb
+        self.flows: set = set()
+        self.bytes_by_class: Dict[TrafficClass, float] = {
+            c: 0.0 for c in TrafficClass}
+        # per-flow delay vs having the link alone, split by class — the
+        # simulator surfaces these as collective_stall / transfer_backlog
+        self.collective_delay_s = 0.0
+        self.transfer_backlog_s = 0.0
+        self.contended_joins = 0     # flows that joined a busy link
+        # lazy per-class census + WRR allocation, rebuilt only when the
+        # flow set changes — a reshare sweep asks rate_of once per
+        # affected flow, and without the cache each ask re-walked every
+        # flow on the link (O(flows^2) per sweep under a deep backlog)
+        self._counts_cache: Optional[Counter] = None
+        self._counts_n = -1
+        self._alloc_cache: Optional[Dict[TrafficClass, float]] = None
+
+    # -- rate allocation ---------------------------------------------------
+    def _invalidate(self):
+        self._counts_n = -1
+        self._alloc_cache = None
+
+    def _class_counts(self) -> Counter:
+        if self._counts_cache is None or self._counts_n != len(self.flows):
+            self._counts_cache = Counter(
+                getattr(f, "tclass", TrafficClass.KV_TRANSFER)
+                for f in self.flows)
+            self._counts_n = len(self.flows)
+            self._alloc_cache = None
+        return self._counts_cache
+
+    def rate_of(self, flow) -> float:
+        n = len(self.flows)
+        if n == 0 or not math.isfinite(self.cap):
+            return self.cap
+        tclass = getattr(flow, "tclass", TrafficClass.KV_TRANSFER)
+        if self.arbiter == "fifo":
+            return self.cap / n
+        counts = self._class_counts()
+        if self._alloc_cache is None:
+            self._alloc_cache = allocate_bandwidth(dict(counts), self.cap,
+                                                   self.arb)
+        return self._alloc_cache.get(tclass, 0.0) / \
+            max(counts.get(tclass, 1), 1)
+
+    # -- signals / accounting ---------------------------------------------
+    def congestion(self) -> float:
+        """Instantaneous congestion in [0, 1]: the fraction of in-flight
+        bytes that belong to model collectives.  0 on an idle or
+        infinite link.  High values mean KV traffic on this link is (or
+        is about to be) throttled to the low-priority leak — the signal
+        the read-path water-fill and the KV-pacing flush consume."""
+        if not math.isfinite(self.cap) or not self.flows:
+            return 0.0
+        tot = coll = 0.0
+        for f in self.flows:
+            left = max(getattr(f, "nbytes_left", 0.0), 0.0)
+            tot += left
+            if getattr(f, "tclass", None) == TrafficClass.MODEL_COLLECTIVE:
+                coll += left
+        return (coll / tot) if tot > 0 else 0.0
+
+    def note_enter(self, flow) -> None:
+        self._invalidate()
+        if math.isfinite(self.cap) and self.flows:
+            self.contended_joins += 1
+
+    def note_done(self, flow, now: float) -> None:
+        """Per-flow delay accounting at completion.  ``delay`` compares
+        against the flow having this link alone; a flow bottlenecked
+        elsewhere attributes its extra time here too, which makes the
+        stall numbers conservative (never under-reported)."""
+        self._invalidate()
+        if not math.isfinite(self.cap):
+            return
+        tclass = getattr(flow, "tclass", TrafficClass.KV_TRANSFER)
+        nbytes = getattr(flow, "nbytes_total", 0.0)
+        self.bytes_by_class[tclass] = \
+            self.bytes_by_class.get(tclass, 0.0) + nbytes
+        t_enter = getattr(flow, "t_enter", now)
+        delay = max(0.0, (now - t_enter) - nbytes / self.cap)
+        if tclass == TrafficClass.MODEL_COLLECTIVE:
+            self.collective_delay_s += delay
+        else:
+            self.transfer_backlog_s += delay
+
+
+# ---------------------------------------------------------------------------
+# fluid (closed-form) two-class drain — the serving runtime's model
+# ---------------------------------------------------------------------------
+
+
+def kv_share_when_contended(arbiter: str,
+                            arb: VLArbiterConfig = DEFAULT_ARBITER) -> float:
+    """Share of link bandwidth KV traffic receives while collectives are
+    backlogged: the low-priority leak under the VL arbiter (~0.6 % with
+    the §A.1 tables — 1 − high_fraction() = 0.0059), an equal split
+    under naive FIFO sharing."""
+    if arbiter == "fifo":
+        return 0.5
+    return 1.0 - arb.high_fraction()
+
+
+def drain_times(kv_s: float, coll_s: float, kv_share: float
+                ) -> tuple:
+    """Completion times ``(kv_done, coll_done)`` of two fluid traffic
+    classes that start together on one work-conserving link.
+
+    ``kv_s`` / ``coll_s`` are each class's service time *alone at full
+    bandwidth* (seconds = bytes / link_bw, which is how the serving
+    runtime's TickIo ledger already measures transfers).  While both
+    classes are backlogged they receive fixed shares ``kv_share`` /
+    ``1 - kv_share``; when one empties the other takes the whole link.
+    Work conservation pins the later finisher at exactly
+    ``kv_s + coll_s`` — arbitration only chooses the *first* finisher:
+
+    * VL arm (``kv_share`` ≈ 0.006): collectives finish at ≈ ``coll_s``
+      — model execution never waits — and the KV backlog absorbs the
+      whole contention delay;
+    * FIFO arm (``kv_share`` = 0.5): a large KV backlog doubles the
+      collectives' completion time — the interference the paper's
+      arbiter exists to prevent.
+    """
+    kv_s = max(kv_s, 0.0)
+    coll_s = max(coll_s, 0.0)
+    if kv_s <= 0.0 or coll_s <= 0.0:
+        return kv_s, coll_s
+    kv_share = min(max(kv_share, 0.0), 1.0)
+    coll_share = 1.0 - kv_share
+    if coll_share <= 0.0:
+        return kv_s, kv_s + coll_s
+    if kv_share <= 0.0:
+        return kv_s + coll_s, coll_s
+    t_kv = kv_s / kv_share
+    t_coll = coll_s / coll_share
+    if t_coll <= t_kv:                 # collectives empty first
+        return kv_s + coll_s, t_coll
+    return t_kv, kv_s + coll_s         # KV empties first

@@ -41,6 +41,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.intra import attn_flops
+from repro.network import (CollectiveVolumeModel, drain_times,
+                           kv_share_when_contended)
 from repro.sim.spec import HOPPER_NODE, ModelSimSpec, NodeSpec
 
 
@@ -230,19 +232,51 @@ class ServingTimeModel:
     cfg: ModelConfig
     node: NodeSpec
     spec: ModelSimSpec
+    # --- finite compute network (repro.network) ------------------------
+    # ``collectives`` (None = the legacy infinite-network behaviour)
+    # supplies per-token model-collective volumes; ``net_arbiter``
+    # selects how KV transfers and collectives share a contended CNIC
+    # link: 'vl' (the paper's weighted-VL arbiter) or 'fifo' (naive
+    # class-blind sharing, the interference-ablation arm).
+    net_arbiter: str = "vl"
+    collectives: Optional[CollectiveVolumeModel] = None
 
     @classmethod
     def for_model(cls, cfg: ModelConfig,
-                  node: Optional[NodeSpec] = None) -> "ServingTimeModel":
+                  node: Optional[NodeSpec] = None,
+                  net_arbiter: str = "vl",
+                  collective_group_size: int = 0) -> "ServingTimeModel":
+        coll = CollectiveVolumeModel.from_config(cfg, collective_group_size) \
+            if collective_group_size > 1 else None
         return cls(cfg=cfg, node=node or HOPPER_NODE,
-                   spec=ModelSimSpec.from_config(cfg))
+                   spec=ModelSimSpec.from_config(cfg),
+                   net_arbiter=net_arbiter, collectives=coll)
 
     # -- transfers ---------------------------------------------------------
     def snic_seconds(self, nbytes: float) -> float:
         return nbytes / self.node.snic_bw
 
-    def cn_seconds(self, nbytes: float) -> float:
+    def cn_seconds(self, nbytes: float, coll_bytes: float = 0.0) -> float:
+        """Seconds for ``nbytes`` of KV traffic on the compute network;
+        with ``coll_bytes`` of model collectives contending, the KV
+        completion time under the configured arbiter (via the fluid
+        two-class drain — see repro.network.drain_times)."""
+        kv_s = nbytes / self.node.cnic_bw
+        if coll_bytes <= 0:
+            return kv_s
+        kv_done, _ = drain_times(kv_s, coll_bytes / self.node.cnic_bw,
+                                 kv_share_when_contended(self.net_arbiter))
+        return kv_done
+
+    def collective_seconds(self, nbytes: float) -> float:
+        """Uncontended service time of collective traffic on the link."""
         return nbytes / self.node.cnic_bw
+
+    def cn_drain(self, kv_s: float, coll_s: float) -> Tuple[float, float]:
+        """(kv_done, coll_done) for KV/collective service-time ledgers
+        contending on one CNIC link under the configured arbiter."""
+        return drain_times(kv_s, coll_s,
+                           kv_share_when_contended(self.net_arbiter))
 
     def dram_seconds(self, nbytes: float) -> float:
         return nbytes / self.node.dram_bw

@@ -91,7 +91,8 @@ class ServingSystem:
                  tier_ttl_s: Optional[float] = None, prefetch: bool = False,
                  pe_group_size: Optional[int] = None,
                  de_group_size: Optional[int] = None,
-                 pipelined: bool = True, node: Optional[NodeSpec] = None):
+                 pipelined: bool = True, node: Optional[NodeSpec] = None,
+                 net_arbiter: str = "vl", collective_group_size: int = 0):
         assert mode in ("dualpath", "basic")
         self.cfg = cfg
         self.mode = mode
@@ -104,8 +105,13 @@ class ServingSystem:
         self.sched = Scheduler(alpha=1 << 30, beta=1 << 30,
                                split_reads=split_reads)
         # the runtime's wall clock (serving/events.py): modelled seconds,
-        # advanced per tick, jumped over idle gaps in online mode
-        self.time_model = ServingTimeModel.for_model(cfg, node)
+        # advanced per tick, jumped over idle gaps in online mode.
+        # ``collective_group_size > 1`` puts per-layer model collectives
+        # on the compute network (repro.network) and makes the clock's
+        # cn charges contention-aware under ``net_arbiter``.
+        self.time_model = ServingTimeModel.for_model(
+            cfg, node, net_arbiter=net_arbiter,
+            collective_group_size=collective_group_size)
         self.clock = VirtualClock()
         self.loop = EventLoop(self.clock)
         self.metrics: Dict[int, RoundMetrics] = {}
@@ -165,6 +171,12 @@ class ServingSystem:
         self._pending_stamps: List[Tuple[RoundMetrics, str]] = []
         self._tick_io = TickIo()
         self._tick_compute = 0.0
+        # per-tick collective seconds per node's CNIC link + interference
+        # accounting (repro.network; zeros when collectives are off)
+        self._tick_coll: Dict[int, float] = {}
+        self.collective_stall_s = 0.0
+        self.transfer_backlog_s = 0.0
+        self.net_congestion = 0.0
         self._submit_seconds_seen = 0.0
         self.rng = np.random.default_rng(seed)
         self.read_bytes_by_side = {"pe": 0, "de": 0}
@@ -264,7 +276,9 @@ class ServingSystem:
                         "de": self.tiers[req.de[0]]
                               .resident_prefix(er.hit_refs) * bt,
                     }
-                self.sched.choose_read_path(req, tier_tokens=tier_tokens)
+                self.sched.choose_read_path(
+                    req, tier_tokens=tier_tokens,
+                    net_congestion=self.net_congestion)
                 if req.dram_tokens:
                     # pin the tier-resident prefix NOW: reads of other
                     # ready requests admit blocks (and may evict) before
@@ -457,6 +471,17 @@ class ServingSystem:
     # ------------------------------------------------------------------
     # engine phases
     # ------------------------------------------------------------------
+    def _charge_collectives(self, node: int, tokens: int) -> None:
+        """Per-layer model collectives of a forward/decode step over
+        ``tokens`` land on the stepping node's CNIC link; they contend
+        with that link's KV traffic at the tick's contention resolution
+        (``_apply_net_contention``)."""
+        coll = self.time_model.collectives
+        if coll is None or tokens <= 0:
+            return
+        self._tick_coll[node] = self._tick_coll.get(node, 0.0) + \
+            self.time_model.collective_seconds(coll.step_bytes(tokens))
+
     def _step_pes(self) -> int:
         act = 0
         pe_max = 0.0
@@ -465,6 +490,8 @@ class ServingSystem:
             done = pe.step()
             pe_max = max(pe_max,
                          self.time_model.pe_step_seconds(pe.last_step_items))
+            self._charge_collectives(
+                pe.eid[0], sum(b for _, b in pe.last_step_items))
             act += (pe.prefill_tokens - before) + len(done)
             for er in done:
                 self.sched.on_request_done(er.req.pe, er.req)
@@ -541,6 +568,7 @@ class ServingSystem:
             finished = de.step()
             de_max = max(de_max,
                          self.time_model.de_step_seconds(de.last_step_ctxs))
+            self._charge_collectives(de_node, len(de.last_step_ctxs))
             act += (de.decode_steps - steps0) + len(finished)
             persist_b = de.tm.bytes[TrafficClass.KV_TRANSFER] - b0
             self._tick_io.add(("snic", de_node),
@@ -686,6 +714,37 @@ class ServingSystem:
         self._submit_seconds_seen = tot
         return d
 
+    def _apply_net_contention(self) -> None:
+        """Resolve this tick's KV-vs-collective contention per CNIC link
+        (repro.network.drain_times): each link's KV ledger inflates to
+        the contended completion time (``transfer_backlog_s``) and any
+        time the collectives finish after their uncontended service —
+        model execution stalling on communication — is charged to the
+        tick's compute (``collective_stall_s``): ≈ 0 under the VL
+        arbiter, growing with transfer load under FIFO sharing.  The
+        aggregate collective share of the link becomes the congestion
+        signal next tick's read-path choices and KV pacing consume.
+        No-op (all-zero ledgers) when collectives are off, keeping the
+        legacy clock arithmetic bit-identical."""
+        tot_coll = sum(self._tick_coll.values())
+        tot_kv = 0.0
+        for node, coll_s in self._tick_coll.items():
+            if coll_s <= 0:
+                continue
+            kv_s = self._tick_io.buckets.get(("cn", node), 0.0)
+            tot_kv += kv_s
+            kv_done, coll_done = self.time_model.cn_drain(kv_s, coll_s)
+            if kv_s > 0:
+                self._tick_io.buckets[("cn", node)] = kv_done
+            stall = max(0.0, coll_done - coll_s)
+            self._tick_compute += stall
+            self.collective_stall_s += stall
+            self.transfer_backlog_s += max(0.0, kv_done - kv_s)
+        tot = tot_coll + tot_kv
+        self.net_congestion = (tot_coll / tot) if tot > 0 else 0.0
+        for tm in self._all_tms():
+            tm.net_congestion = self.net_congestion
+
     def _tick(self) -> int:
         """One event-loop tick; returns an activity count (0 = idle).
 
@@ -697,6 +756,7 @@ class ServingSystem:
         """
         self._tick_io = TickIo()
         self._tick_compute = 0.0
+        self._tick_coll = {}
         act = 0
         if self.pipelined:
             act += self._schedule_tick()     # 1. decide + issue reads
@@ -706,12 +766,14 @@ class ServingSystem:
             act += self._run_installs()      # 5. hit-KV installs
             self._collect_pd()
             act += self._admit_pending()     # 6. DE admissions
+            self._apply_net_contention()
             dt = max(self._tick_io.parallel_seconds(), self._tick_compute)
         else:
             act += self._schedule_tick()
             act += self._step_pes()
             act += self._admit_pending()
             act += self._step_des()
+            self._apply_net_contention()
             dt = self._tick_io.serial_seconds() + self._tick_compute
         self.clock.advance(dt + self._submit_overhead_delta())
         self._flush_stamps()
@@ -783,6 +845,12 @@ class ServingSystem:
             doorbells=sum(tm.doorbells for tm in self._all_tms()),
             submitted_seconds=sum(tm.submitted_seconds
                                   for tm in self._all_tms()),
+            # --- finite compute network (zeros when collectives off) ----
+            collective_stall_s=self.collective_stall_s,
+            transfer_backlog_s=self.transfer_backlog_s,
+            net_congestion=self.net_congestion,
+            paced_flushes=sum(tm.paced_flushes for tm in self._all_tms()),
+            deferred_wrs=sum(tm.deferred_wrs for tm in self._all_tms()),
             # --- per-round latency (mirrors Sim.results()) -------------
             **events.latency_summary(self.metrics.values()),
             # --- DRAM tier (zeros when disabled) -----------------------

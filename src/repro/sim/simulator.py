@@ -41,7 +41,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.intra import AttnTimeModel, PrefillWork, QuotaPacker, attn_flops
 from repro.core.loading import Leg, PLANS, plan_for
 from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
+from repro.core.traffic import TrafficClass
 from repro.kvcache.tiers import DramTier, ThinkTimePrefetcher
+from repro.network import CollectiveVolumeModel, SharedLink
 from repro.sim.spec import ModelSimSpec, NodeSpec
 from repro.sim.traces import Trajectory
 
@@ -85,31 +87,49 @@ class PSResource:
         self.cap = cap
         self.flows: set = set()
 
+    def rate_of(self, flow) -> float:
+        """This flow's share: class-blind fair queuing.  SharedLink
+        (repro.network) overrides this with VL-arbitered shares."""
+        return self.cap / max(len(self.flows), 1)
+
 
 class Flow:
     """A transfer leg across one or more PS resources."""
 
     __slots__ = ("sim", "nbytes_left", "resources", "on_done", "rate",
-                 "t_last", "version", "done")
+                 "t_last", "version", "done", "tclass", "t_enter",
+                 "nbytes_total")
 
-    def __init__(self, sim: "Sim", nbytes: float, resources, on_done):
+    def __init__(self, sim: "Sim", nbytes: float, resources, on_done,
+                 tclass: TrafficClass = TrafficClass.KV_TRANSFER):
         self.sim = sim
         self.nbytes_left = float(max(nbytes, 1.0))
+        self.nbytes_total = self.nbytes_left
         self.resources = [r for r in resources if r is not None]
         self.on_done = on_done
+        self.tclass = tclass
         self.rate = 0.0
         self.t_last = sim.loop.now
+        self.t_enter = sim.loop.now
         self.version = 0
         self.done = False
         if not self.resources:
             sim.loop.after(0.0, self._finish)
             return
         for r in self.resources:
+            note = getattr(r, "note_enter", None)
+            if note is not None:
+                note(self)
             r.flows.add(self)
         sim._reshare(self.resources)
 
     def _settle(self, now: float):
-        self.nbytes_left -= self.rate * (now - self.t_last)
+        if math.isinf(self.rate):
+            # unbounded rate: served instantaneously (inf * 0 is nan,
+            # so never enter it into the residual arithmetic)
+            self.nbytes_left = 0.0
+        else:
+            self.nbytes_left -= self.rate * (now - self.t_last)
         self.t_last = now
 
     def _finish(self):
@@ -118,6 +138,9 @@ class Flow:
         self.done = True
         for r in self.resources:
             r.flows.discard(self)
+            note = getattr(r, "note_done", None)
+            if note is not None:
+                note(self, self.sim.loop.now)
         if self.resources:
             self.sim._reshare(self.resources)
         self.on_done()
@@ -150,6 +173,28 @@ class SimConfig:
     tier_ttl_s: float = 120.0         # agentic-ttl idle threshold
     prefetch: bool = False            # think-time prefetcher
     prefetch_chunk_blocks: int = 32   # blocks per staged prefetch chunk
+    # --- finite compute network (repro.network; None = infinite) --------
+    net_bw: Optional[float] = None    # shared PE<->DE link capacity [B/s]
+    net_arbiter: str = "vl"           # 'vl' (paper) | 'fifo' (ablation)
+    # inject per-layer model collectives onto the shared link; default:
+    # on exactly when the network is finite (an infinite link cannot
+    # contend, so the legacy configuration stays event-identical)
+    model_collectives: Optional[bool] = None
+    collective_dtype_bytes: int = 2
+    # override the analytic per-token collective volume [bytes/token]
+    # (None = CollectiveVolumeModel.from_spec).  The analytic estimate
+    # assumes ALL TP collectives cross the modelled link; on real nodes
+    # most ride the intra-node fabric (NVLink/ICI) and only a slice
+    # (EP dispatch, PD handoff) reaches the inter-node network, so
+    # interference studies set the slice explicitly.
+    collective_bytes_per_token: Optional[float] = None
+    # background KV/PD transfer traffic offered on the shared link, as a
+    # fraction of net_bw (other tenants' dual-path reads, PD
+    # rebalancing, tier staging).  The interference benchmark sweeps
+    # this: under FIFO sharing it dilutes the collectives' bandwidth
+    # share; under the VL arbiter it only backlogs itself.
+    net_bg_load: float = 0.0
+    net_bg_chunk_bytes: float = 512e6
 
 
 class _EngineSim:
@@ -237,7 +282,11 @@ class Sim:
         self.dram: Dict[int, PSResource] = {}
         self.cnic_rd: Dict[Tuple[int, int], PSResource] = {}
         self.cnic_wr: Dict[Tuple[int, int], PSResource] = {}
-        self.net = PSResource("net", INF)    # paper: no compute-net congestion
+        # PE<->DE compute network: a finite, priority-arbitrated shared
+        # link when cfg.net_bw is set (repro.network.SharedLink); the
+        # paper's no-congestion assumption (infinite capacity) otherwise
+        self.net = SharedLink("net", cfg.net_bw if cfg.net_bw else INF,
+                              arbiter=cfg.net_arbiter)
         n_nodes = cfg.P + cfg.D
         for n in range(n_nodes):
             self.snic[n] = _FifoNic(self, n, cfg.node.snic_bw)
@@ -305,6 +354,20 @@ class Sim:
         self.pe_group_size = npg * g
         self.de_group_size = ndg * g
 
+        # --- model collectives on the shared link (repro.network) ----------
+        collectives_on = cfg.model_collectives
+        if collectives_on is None:
+            collectives_on = cfg.net_bw is not None
+        self._collectives_on = bool(collectives_on)
+        if cfg.collective_bytes_per_token is not None:
+            self.coll_model = CollectiveVolumeModel(
+                cfg.collective_bytes_per_token, self.model.n_layers)
+        else:
+            self.coll_model = CollectiveVolumeModel.from_spec(
+                self.model, max(self.pe_group_size, self.de_group_size),
+                dtype_bytes=cfg.collective_dtype_bytes)
+        self.collective_stall_s = 0.0     # step time lost waiting on colls
+
         # --- workload --------------------------------------------------------
         self.agents = [AgentSim(t) for t in trajectories]
         self.rounds: List[RoundSim] = []
@@ -322,6 +385,7 @@ class Sim:
         self.prompt_tokens_done = 0
         self.gen_tokens_done = 0
         self.snic_hit_read_bytes = 0   # demand hit bytes that paid a SNIC
+        self.net_bg_bytes = 0          # injected background transfer bytes
 
     # ------------------------------------------------------------------
     # PS rate management
@@ -333,10 +397,13 @@ class Sim:
             affected.update(r.flows)
         for f in affected:
             f._settle(now)
-            new_rate = min((r.cap / len(r.flows)) for r in f.resources)
+            new_rate = min(r.rate_of(f) for r in f.resources)
             f.rate = new_rate
             f.version += 1
-            if f.nbytes_left <= 1.0:          # sub-byte residual: done
+            if f.nbytes_left <= 1.0 or math.isinf(new_rate):
+                # sub-byte residual, or every resource unbounded (a flow
+                # whose only resource is an infinite link — settling at
+                # rate inf would produce inf*0 = nan residuals): done
                 self.loop.after(0.0, f._finish)
             elif new_rate > 0:
                 v = f.version
@@ -345,6 +412,9 @@ class Sim:
 
     def _flow_check(self, f: Flow, version: int):
         if f.done or f.version != version:
+            return
+        if math.isinf(f.rate):
+            f._finish()
             return
         f._settle(self.loop.now)
         if f.nbytes_left <= 1.0:
@@ -366,6 +436,23 @@ class Sim:
         for i, a in enumerate(self.agents):
             t0 = 0.0 if arrivals is None else arrivals[i]
             self.loop.at(t0, lambda a=a: self._agent_start(a))
+        cfg = self.cfg
+        if cfg.net_bg_load > 0 and cfg.net_bw:
+            # background transfer traffic on the shared link (other
+            # tenants' dual-path reads / PD rebalancing): fixed-size KV
+            # chunks offered at net_bg_load x net_bw, self-limiting once
+            # the workload completes
+            chunk = cfg.net_bg_chunk_bytes
+            period = chunk / (cfg.net_bg_load * cfg.net_bw)
+
+            def bg():
+                if all(a.end_t >= 0 for a in self.agents):
+                    return
+                self.net_bg_bytes += chunk
+                Flow(self, chunk, [self.net], lambda: None)
+                self.loop.after(period, bg)
+
+            self.loop.after(period, bg)
         self.loop.run(until)
         return self
 
@@ -459,7 +546,9 @@ class Sim:
                     "pe": self.tiers[req.pe[0]].resident_prefix(hit_refs) * bt,
                     "de": self.tiers[req.de[0]].resident_prefix(hit_refs) * bt,
                 }
-            self.sched.choose_read_path(req, tier_tokens=tier_tokens)
+            self.sched.choose_read_path(
+                req, tier_tokens=tier_tokens,
+                net_congestion=self.net.congestion())
             if req.dram_tokens:
                 # serve the resident prefix from the tier side's DRAM and
                 # pin it for the round (in-flight blocks never evicted)
@@ -611,7 +700,8 @@ class Sim:
 
         for leg in legs:
             rs.charge(leg)
-            Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done)
+            Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done,
+                 tclass=leg.tclass)
 
     # ------------------------------------------------------------------
     # PE group stepping
@@ -667,7 +757,35 @@ class Sim:
         if t_max <= 0:
             self._pe_stepping[gid] = False
             return
-        self.loop.after(t_max, lambda: self._pe_step_done(gid, work))
+        step_tokens = sum(bi.bsz for _, batch in work for bi in batch)
+        self._step_barrier(t_max, self.coll_model.step_bytes(step_tokens),
+                           lambda: self._pe_step_done(gid, work))
+
+    def _step_barrier(self, t_compute: float, coll_bytes: float,
+                      done: Callable):
+        """Complete a group step after BOTH its compute time and its
+        model collectives (a Flow on the shared compute network,
+        MODEL_COLLECTIVE class).  Any time the collectives finish after
+        the compute is interference — the step stalls on communication —
+        and is recorded as ``collective_stall_s``: ≈ 0 under the VL
+        arbiter (collectives own ~99 % of a contended link), nonzero
+        under FIFO sharing once KV transfer load builds up."""
+        if not self._collectives_on or coll_bytes <= 0:
+            self.loop.after(t_compute, done)
+            return
+        t0 = self.loop.now
+        pending = [2]
+
+        def arm():
+            pending[0] -= 1
+            if pending[0] == 0:
+                self.collective_stall_s += max(
+                    0.0, self.loop.now - (t0 + t_compute))
+                done()
+
+        self.loop.after(t_compute, arm)
+        Flow(self, coll_bytes, [self.net], arm,
+             tclass=TrafficClass.MODEL_COLLECTIVE)
 
     def _pe_step_done(self, gid, work):
         for e, batch in work:
@@ -728,7 +846,8 @@ class Sim:
 
         for leg in legs:
             rs.charge(leg)
-            Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done)
+            Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done,
+                 tclass=leg.tclass)
 
     def _h2d_done(self, rs: RoundSim):
         rs.h2d_done = True
@@ -767,7 +886,9 @@ class Sim:
             t_step = max(step_bytes / (gpu.hbm_bw * gpu.mbu_decode),
                          step_flops / (gpu.flops * gpu.mfu_prefill))
             t_max = max(t_max, t_step * block)
-        self.loop.after(t_max, lambda: self._de_step_done(gid, block))
+        step_tokens = block * sum(len(e.active_decode) for e in active)
+        self._step_barrier(t_max, self.coll_model.step_bytes(step_tokens),
+                           lambda: self._de_step_done(gid, block))
 
     def _de_step_done(self, gid: int, block: int):
         members = self.de_groups[gid]
@@ -912,6 +1033,28 @@ class Sim:
     # ------------------------------------------------------------------
     # metrics
     # ------------------------------------------------------------------
+    def round_metrics(self) -> list:
+        """The rounds' timing as serving RoundMetrics, so the serving
+        layer's estimators (latency_summary / slo_attainment) apply to
+        simulator output unchanged — one percentile/SLO definition for
+        both runtimes (pinned by tests/test_metrics_regression.py)."""
+        from repro.serving.events import RoundMetrics
+        return [RoundMetrics(rid=rs.req.rid, gen_tokens=rs.req.gen_tokens,
+                             submit_t=rs.submit_t,
+                             read_done_t=rs.read_done_t,
+                             prefill_done_t=rs.prefill_done_t,
+                             first_decode_t=rs.first_decode_t,
+                             second_token_t=rs.second_token_t,
+                             done_t=rs.done_t)
+                for rs in self.rounds]
+
+    def slo_attainment(self, ttft_slo_s: float = 4.0,
+                       tpot_slo_s: float = 0.050) -> float:
+        """Fraction of finished rounds meeting both SLOs (paper §7.4
+        defaults), via the serving layer's shared estimator."""
+        from repro.serving.events import slo_attainment
+        return slo_attainment(self.round_metrics(), ttft_slo_s, tpot_slo_s)
+
     def results(self) -> dict:
         done_rounds = [r for r in self.rounds if r.done_t >= 0]
         jcts = [a.end_t - a.start_t for a in self.agents if a.end_t >= 0]
@@ -943,6 +1086,16 @@ class Sim:
             tier_prefetch_bytes=sum(t.prefetch_bytes for t in tiers),
             tier_evicted_bytes=sum(t.evicted_bytes for t in tiers),
             tier_evictions=sum(t.evictions for t in tiers),
+            # --- finite compute network (repro.network; zeros when the
+            # link is infinite — the legacy no-congestion configuration)
+            collective_stall_s=self.collective_stall_s,
+            transfer_backlog_s=self.net.transfer_backlog_s,
+            net_collective_delay_s=self.net.collective_delay_s,
+            net_collective_bytes=self.net.bytes_by_class.get(
+                TrafficClass.MODEL_COLLECTIVE, 0.0),
+            net_kv_bytes=self.net.bytes_by_class.get(
+                TrafficClass.KV_TRANSFER, 0.0),
+            net_contended_joins=self.net.contended_joins,
         )
 
 

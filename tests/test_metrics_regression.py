@@ -1,0 +1,112 @@
+"""Fixture-pinned regression tests for the latency estimators.
+
+``latency_summary`` / ``slo_attainment`` (serving/events.py) are the
+single definition of TTFT/TTST/TPOT and SLO attainment for BOTH
+runtimes — ``ServingSystem.stats()`` embeds the summary and
+``Sim.slo_attainment`` routes through the same functions.  The
+contention-aware time model (repro.network) now feeds these estimators,
+so their arithmetic is pinned here against hand-computed values: any
+silent shift in percentile interpolation, TPOT denominators or SLO
+judging breaks a fixture, not a downstream benchmark."""
+import numpy as np
+import pytest
+
+from repro.serving.events import (RoundMetrics, latency_summary,
+                                  slo_attainment)
+
+
+def _round(rid, submit, prefill, first, second, done, gen):
+    return RoundMetrics(rid=rid, gen_tokens=gen, submit_t=submit,
+                        prefill_done_t=prefill, first_decode_t=first,
+                        second_token_t=second, done_t=done)
+
+
+# Five finished rounds with hand-computed latencies
+# (TPOT = (done - first_decode) / (gen - 1)):
+#   rid  submit prefill first second done   gen   TTFT  TTST  TPOT
+#   0    0.0    1.0     1.5   2.0    5.5    9     1.0   2.0   0.5
+#   1    1.0    3.0     3.5   4.0    7.5    5     2.0   3.0   1.0
+#   2    2.0    5.0     5.25  5.5    9.25   17    3.0   3.5   0.25
+#   3    3.0    7.0     7.5   8.0    11.5   11    4.0   5.0   0.4
+#   4    4.0    14.0    15.0  16.0   18.0   2     10.0  12.0  3.0
+FIXTURE = [
+    _round(0, 0.0, 1.0, 1.5, 2.0, 5.5, 9),
+    _round(1, 1.0, 3.0, 3.5, 4.0, 7.5, 5),
+    _round(2, 2.0, 5.0, 5.25, 5.5, 9.25, 17),
+    _round(3, 3.0, 7.0, 7.5, 8.0, 11.5, 11),
+    _round(4, 4.0, 14.0, 15.0, 16.0, 18.0, 2),
+]
+TTFTS = [1.0, 2.0, 3.0, 4.0, 10.0]
+TTSTS = [2.0, 3.0, 3.5, 5.0, 12.0]
+TPOTS = [0.5, 1.0, 0.25, 0.4, 3.0]
+
+
+def test_per_round_latency_definitions():
+    for m, ttft, ttst, tpot in zip(FIXTURE, TTFTS, TTSTS, TPOTS):
+        assert m.finished
+        assert m.ttft == pytest.approx(ttft)
+        assert m.ttst == pytest.approx(ttst)
+        assert m.tpot == pytest.approx(tpot)
+
+
+def test_latency_summary_pinned_values():
+    s = latency_summary(FIXTURE)
+    assert s["finished_rounds"] == 5
+    assert s["ttft_mean"] == pytest.approx(4.0)        # (1+2+3+4+10)/5
+    # numpy's default (linear-interpolation) percentile at q=99 over a
+    # sorted 5-sample vector: x[3] + (4 - 3.96)... rank = 0.99*4 = 3.96
+    # -> 4 + 0.96 * (10 - 4) = 9.76
+    assert s["ttft_p99"] == pytest.approx(9.76)
+    assert s["ttst_mean"] == pytest.approx(np.mean(TTSTS))
+    assert s["tpot_mean"] == pytest.approx(np.mean(TPOTS))
+    # sorted TPOTs: [0.25, 0.4, 0.5, 1.0, 3.0]; rank 3.96 ->
+    # 1.0 + 0.96 * (3.0 - 1.0) = 2.92
+    assert s["tpot_p99"] == pytest.approx(2.92)
+
+
+def test_unfinished_rounds_are_excluded():
+    metrics = FIXTURE + [
+        RoundMetrics(rid=9, gen_tokens=4, submit_t=5.0, prefill_done_t=6.0),
+    ]
+    s = latency_summary(metrics)
+    assert s["finished_rounds"] == 5
+    assert s["ttft_mean"] == pytest.approx(4.0)        # unchanged
+    assert np.isnan(slo_attainment([metrics[-1]], 1.0, 1.0))
+
+
+def test_single_token_round_has_no_tpot():
+    m = _round(0, 0.0, 1.0, 1.5, -1.0, 1.5, 1)
+    assert m.tpot is None
+    s = latency_summary([m])
+    assert s["finished_rounds"] == 1
+    assert np.isnan(s["tpot_mean"])
+
+
+def test_slo_attainment_pinned():
+    """Hand-judged against TTFT<=3.5, TPOT<=0.6:
+    rid 0: ttft 1.0 ok, tpot 0.5 ok    -> pass
+    rid 1: ttft 2.0 ok, tpot 1.0 fail  -> fail
+    rid 2: ttft 3.0 ok, tpot 0.25 ok   -> pass
+    rid 3: ttft 4.0 fail               -> fail
+    rid 4: ttft 10.0 fail              -> fail
+    => 2/5."""
+    assert slo_attainment(FIXTURE, 3.5, 0.6) == pytest.approx(0.4)
+    # all pass / all fail endpoints
+    assert slo_attainment(FIXTURE, 100.0, 100.0) == 1.0
+    assert slo_attainment(FIXTURE, 0.0, 0.0) == 0.0
+
+
+def test_slo_judges_single_token_rounds_on_ttft_alone():
+    single = _round(0, 0.0, 1.0, 1.5, -1.0, 1.5, 1)
+    assert slo_attainment([single], ttft_slo_s=2.0,
+                          tpot_slo_s=1e-9) == 1.0
+    assert slo_attainment([single], ttft_slo_s=0.5,
+                          tpot_slo_s=1e9) == 0.0
+
+
+def test_summary_mirrors_sim_results_estimators():
+    """The serving summary and Sim.results() compute TTFT/TPOT/TTST the
+    same way: means and percentiles over the same per-round values."""
+    ttfts = np.array(TTFTS)
+    assert latency_summary(FIXTURE)["ttft_p99"] == pytest.approx(
+        float(np.percentile(ttfts, 99)))

@@ -1,0 +1,334 @@
+"""Finite compute-network model (repro.network): SharedLink arbitration,
+the fluid two-class drain, collective volumes, and the simulator-level
+interference-avoidance claim (§5.1)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.traffic import DEFAULT_ARBITER, TrafficClass
+from repro.network import (ARBITERS, CollectiveVolumeModel, SharedLink,
+                           drain_times, kv_share_when_contended)
+
+
+class _FakeFlow:
+    def __init__(self, tclass, nbytes=100.0):
+        self.tclass = tclass
+        self.nbytes_left = float(nbytes)
+        self.nbytes_total = float(nbytes)
+        self.t_enter = 0.0
+
+
+def _link(arbiter, cap=100e9):
+    return SharedLink("net", cap, arbiter=arbiter)
+
+
+# ---------------------------------------------------------------------------
+# SharedLink rate allocation
+# ---------------------------------------------------------------------------
+
+
+def test_vl_link_gives_collectives_priority():
+    """One collective vs many KV flows: under 'vl' the collective keeps
+    >= ~94% of the link no matter how deep the KV backlog."""
+    link = _link("vl")
+    coll = _FakeFlow(TrafficClass.MODEL_COLLECTIVE)
+    kvs = [_FakeFlow(TrafficClass.KV_TRANSFER) for _ in range(10)]
+    link.flows.update([coll] + kvs)
+    assert link.rate_of(coll) >= 0.94 * link.cap
+    # KV never starves, and the class share splits fairly within class
+    kv_rate = link.rate_of(kvs[0])
+    assert kv_rate > 0
+    assert kv_rate == pytest.approx(link.rate_of(kvs[5]))
+    # conservation: class shares sum to the capacity
+    total = link.rate_of(coll) + 10 * kv_rate
+    assert total == pytest.approx(link.cap, rel=1e-9)
+
+
+def test_fifo_link_is_class_blind():
+    link = _link("fifo")
+    coll = _FakeFlow(TrafficClass.MODEL_COLLECTIVE)
+    kvs = [_FakeFlow(TrafficClass.KV_TRANSFER) for _ in range(9)]
+    link.flows.update([coll] + kvs)
+    # naive processor sharing: the collective is just one of ten flows
+    assert link.rate_of(coll) == pytest.approx(link.cap / 10)
+    assert link.rate_of(kvs[0]) == pytest.approx(link.cap / 10)
+
+
+def test_kv_gets_full_link_when_no_collectives():
+    for arb in ARBITERS:
+        link = _link(arb)
+        kvs = [_FakeFlow(TrafficClass.KV_TRANSFER) for _ in range(4)]
+        link.flows.update(kvs)
+        assert link.rate_of(kvs[0]) == pytest.approx(link.cap / 4)
+
+
+def test_infinite_link_is_transparent():
+    """cap=inf (the legacy no-congestion configuration): unbounded
+    rates, zero congestion, no delay accounting."""
+    link = _link("vl", cap=float("inf"))
+    f = _FakeFlow(TrafficClass.KV_TRANSFER)
+    link.flows.add(f)
+    assert math.isinf(link.rate_of(f))
+    assert link.congestion() == 0.0
+    link.note_done(f, now=100.0)
+    assert link.transfer_backlog_s == 0.0
+
+
+def test_congestion_signal_tracks_collective_share():
+    link = _link("vl")
+    assert link.congestion() == 0.0           # idle
+    kv = _FakeFlow(TrafficClass.KV_TRANSFER, nbytes=300)
+    link.flows.add(kv)
+    assert link.congestion() == 0.0           # KV only
+    co = _FakeFlow(TrafficClass.MODEL_COLLECTIVE, nbytes=100)
+    link.flows.add(co)
+    assert link.congestion() == pytest.approx(0.25)   # 100 / 400
+    link.flows.discard(kv)
+    assert link.congestion() == pytest.approx(1.0)
+
+
+def test_note_done_attributes_delay_by_class():
+    link = _link("vl", cap=100.0)
+    kv = _FakeFlow(TrafficClass.KV_TRANSFER, nbytes=100)   # 1 s alone
+    kv.t_enter = 0.0
+    link.note_done(kv, now=3.0)                 # took 3 s: 2 s delay
+    assert link.transfer_backlog_s == pytest.approx(2.0)
+    assert link.collective_delay_s == 0.0
+    co = _FakeFlow(TrafficClass.MODEL_COLLECTIVE, nbytes=200)
+    co.t_enter = 1.0
+    link.note_done(co, now=3.0)                 # exactly the alone time
+    assert link.collective_delay_s == pytest.approx(0.0)
+    assert link.bytes_by_class[TrafficClass.MODEL_COLLECTIVE] == 200
+
+
+def test_bad_arbiter_rejected():
+    with pytest.raises(ValueError):
+        SharedLink("net", 1e9, arbiter="strict")
+
+
+# ---------------------------------------------------------------------------
+# fluid two-class drain (the serving runtime's contention model)
+# ---------------------------------------------------------------------------
+
+
+def test_drain_times_vl_collectives_unharmed():
+    """VL shares: collectives finish in ~their alone time; the KV
+    backlog absorbs the whole contention delay (work conservation)."""
+    share = kv_share_when_contended("vl")
+    assert 0.0 < share <= 0.01      # §A.1 tables: leak = 0.0059
+    kv_done, coll_done = drain_times(10.0, 1.0, share)
+    assert coll_done == pytest.approx(1.0 / (1 - share))
+    assert kv_done == pytest.approx(11.0)
+
+
+def test_drain_times_fifo_interference():
+    """FIFO halves: a deep KV backlog doubles the collectives' time."""
+    kv_done, coll_done = drain_times(10.0, 1.0, 0.5)
+    assert coll_done == pytest.approx(2.0)
+    assert kv_done == pytest.approx(11.0)
+    # and symmetrically when the collectives outlast the KV
+    kv_done, coll_done = drain_times(1.0, 10.0, 0.5)
+    assert kv_done == pytest.approx(2.0)
+    assert coll_done == pytest.approx(11.0)
+
+
+def test_drain_times_edges():
+    assert drain_times(0.0, 5.0, 0.5) == (0.0, 5.0)
+    assert drain_times(5.0, 0.0, 0.5) == (5.0, 0.0)
+    assert drain_times(3.0, 4.0, 0.0) == (7.0, 4.0)   # KV fully starved
+    assert drain_times(3.0, 4.0, 1.0) == (3.0, 7.0)
+
+
+@given(kv=st.floats(0.0, 1e4), coll=st.floats(0.0, 1e4),
+       share=st.floats(0.0, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_drain_times_work_conserving(kv, coll, share):
+    kv_done, coll_done = drain_times(kv, coll, share)
+    assert kv_done >= kv - 1e-9 and coll_done >= coll - 1e-9
+    if kv > 0 and coll > 0:
+        # a work-conserving link finishes the later class at kv+coll
+        assert max(kv_done, coll_done) == pytest.approx(kv + coll)
+        assert min(kv_done, coll_done) <= kv + coll + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# collective volumes
+# ---------------------------------------------------------------------------
+
+
+def test_serving_cn_seconds_contended_matches_drain():
+    """ServingTimeModel.cn_seconds(nbytes, coll_bytes=) is the KV
+    completion of the fluid drain under the configured arbiter —
+    consistent with cn_drain, and the uncontended path unchanged."""
+    from repro.configs import get_config
+    from repro.serving.events import ServingTimeModel
+    from repro.sim.spec import REDUCED_TEST_NODE as node
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    for arb in ARBITERS:
+        tm = ServingTimeModel.for_model(cfg, node, net_arbiter=arb,
+                                        collective_group_size=8)
+        assert tm.collectives is not None
+        nbytes, coll = 3e6, 1e6
+        assert tm.cn_seconds(nbytes) == pytest.approx(nbytes / node.cnic_bw)
+        kv_done, coll_done = tm.cn_drain(nbytes / node.cnic_bw,
+                                         coll / node.cnic_bw)
+        assert tm.cn_seconds(nbytes, coll_bytes=coll) == \
+            pytest.approx(kv_done)
+        # work conservation: the KV side never finishes before the
+        # combined service time when it is the later class
+        assert kv_done == pytest.approx((nbytes + coll) / node.cnic_bw)
+        if arb == "vl":
+            assert coll_done == pytest.approx(
+                coll / node.cnic_bw / DEFAULT_ARBITER.high_fraction())
+    # group_size <= 1: collectives off entirely
+    tm0 = ServingTimeModel.for_model(cfg, node)
+    assert tm0.collectives is None
+
+
+def test_shared_link_rate_cache_tracks_flow_changes():
+    """The lazy census must follow joins/leaves (via the note hooks or
+    the length fallback) — rates stay exact as the flow set mutates."""
+    link = _link("vl")
+    kv = _FakeFlow(TrafficClass.KV_TRANSFER)
+    link.note_enter(kv)
+    link.flows.add(kv)
+    assert link.rate_of(kv) == pytest.approx(link.cap)
+    co = _FakeFlow(TrafficClass.MODEL_COLLECTIVE)
+    link.note_enter(co)
+    link.flows.add(co)
+    assert link.rate_of(co) >= 0.94 * link.cap
+    assert link.rate_of(kv) < 0.06 * link.cap
+    link.flows.discard(co)
+    link.note_done(co, now=0.0)
+    assert link.rate_of(kv) == pytest.approx(link.cap)
+
+
+def test_collective_volume_analytic():
+    m1 = CollectiveVolumeModel.analytic(4, 1024, group_size=1)
+    assert m1.bytes_per_token == 0.0          # unsharded: nothing crosses
+    m8 = CollectiveVolumeModel.analytic(4, 1024, group_size=8)
+    m2 = CollectiveVolumeModel.analytic(4, 1024, group_size=2)
+    assert m8.bytes_per_token > m2.bytes_per_token > 0
+    assert m8.step_bytes(10) == pytest.approx(10 * m8.bytes_per_token)
+    assert m8.bytes_per_token_layer == pytest.approx(m8.bytes_per_token / 4)
+
+
+def test_collective_volume_from_spec_and_config():
+    from repro.configs import get_config
+    from repro.sim import DS_660B
+    ms = CollectiveVolumeModel.from_spec(DS_660B, group_size=8)
+    assert ms.bytes_per_token > 0 and ms.n_layers == DS_660B.n_layers
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    mc = CollectiveVolumeModel.from_config(cfg, group_size=8)
+    assert mc.bytes_per_token > 0 and mc.n_layers == cfg.n_layers
+
+
+def test_collective_volume_from_hlo_text():
+    """The measured constructor divides the parser's loop-aware
+    collective bytes by the token count."""
+    hlo = """\
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128] parameter(0)
+  ROOT %ar = f32[16,128] all-reduce(%p0), to_apply=%add
+}
+"""
+    m = CollectiveVolumeModel.from_hlo_text(hlo, n_tokens=16, n_layers=1)
+    assert m.bytes_per_token == pytest.approx(16 * 128 * 4 / 16)
+
+
+# ---------------------------------------------------------------------------
+# simulator integration: the interference-avoidance claim
+# ---------------------------------------------------------------------------
+
+
+def _run_sim(arbiter, load, n_agents=8, **kw):
+    from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig, \
+        generate_dataset
+    trajs = generate_dataset(n_agents, 32768, seed=0)
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
+                    mode="dualpath", net_bw=25e9, net_arbiter=arbiter,
+                    collective_bytes_per_token=0.4e6, net_bg_load=load,
+                    **kw)
+    return Sim(cfg, trajs).run()
+
+
+def test_default_sim_has_no_network_accounting():
+    """net_bw=None (the default) keeps the paper's no-congestion
+    assumption: nothing stalls, nothing backlogs, nothing is counted."""
+    from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig, \
+        generate_dataset
+    trajs = generate_dataset(4, 32768, seed=0)
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
+                    mode="dualpath")
+    r = Sim(cfg, trajs).run().results()
+    assert r["finished_agents"] == 4
+    assert r["collective_stall_s"] == 0.0
+    assert r["transfer_backlog_s"] == 0.0
+    assert r["net_collective_bytes"] == 0.0
+
+
+def test_collectives_on_infinite_link_terminate():
+    """model_collectives=True without net_bw: the collective Flow's
+    only resource is the infinite link — it must complete instantly
+    (rate=inf), not spin the event loop on nan residuals."""
+    from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
+    from repro.sim.traces import Round, Trajectory
+    trajs = [Trajectory(0, [Round(256, 8)])]
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
+                    mode="dualpath", model_collectives=True)
+    r = Sim(cfg, trajs).run().results()
+    assert r["finished_agents"] == 1
+    assert r["collective_stall_s"] == 0.0
+
+
+def test_vl_arbiter_avoids_interference_fifo_does_not():
+    """The paper's central online claim, reproduced: under background
+    transfer load the VL arbiter keeps model-execution stall ~ 0 while
+    naive FIFO sharing lets cache movement starve the collectives."""
+    vl = _run_sim("vl", load=0.9).results()
+    fifo = _run_sim("fifo", load=0.9).results()
+    assert vl["finished_agents"] == fifo["finished_agents"] == 8
+    assert vl["collective_stall_s"] <= 0.01 * vl["sim_time"]
+    assert fifo["collective_stall_s"] > vl["collective_stall_s"]
+    # the KV side pays instead under VL: its backlog exceeds FIFO's
+    assert vl["transfer_backlog_s"] > 0
+    assert vl["net_collective_bytes"] > 0
+    assert vl["net_kv_bytes"] > 0
+
+
+def test_finite_network_preserves_plan_byte_accounting():
+    """The finite link changes WHEN bytes move, never HOW MANY: per
+    round the charged bytes still equal the loading-plan sums."""
+    from repro.core.loading import resource_bytes
+    sim = _run_sim("fifo", load=0.5, n_agents=4)
+    checked = 0
+    for rs in sim.rounds:
+        if rs.done_t < 0 or rs.req.read_path is None:
+            continue
+        legs = [l for l in sim._request_legs(rs.req) if l.phase != "decode"]
+        exp = {k: v for k, v in resource_bytes(legs).items() if v}
+        got = {k: v for k, v in rs.charged.items() if v}
+        assert got == exp, (rs.req.rid, got, exp)
+        checked += 1
+    assert checked > 0
+
+
+def test_sim_slo_attainment_uses_serving_estimator():
+    """Sim.slo_attainment goes through serving's slo_attainment, so the
+    two runtimes share one SLO definition."""
+    from repro.serving.events import slo_attainment
+    sim = _run_sim("vl", load=0.0, n_agents=4)
+    ms = sim.round_metrics()
+    assert len(ms) == len(sim.rounds)
+    att = sim.slo_attainment(4.0, 0.050)
+    assert att == pytest.approx(slo_attainment(ms, 4.0, 0.050))
+    assert 0.0 <= att <= 1.0

@@ -256,6 +256,228 @@ def test_property_de_hbm_never_oversubscribed(n):
         assert u <= cap
 
 
+# ---------------------------------------------------------------------------
+# water-fill / read-token partition properties (fuzzed)
+# ---------------------------------------------------------------------------
+
+
+@given(pe_q=st.integers(0, 1 << 20), de_q=st.integers(0, 1 << 20),
+       h=st.integers(1, 1 << 20))
+@settings(max_examples=100, deadline=None)
+def test_property_water_fill_frac_in_unit_interval(pe_q, de_q, h):
+    s = mk_sched(split_reads=True)
+    x = s._water_fill_frac(pe_q, de_q, h)
+    assert 0.0 <= x <= 1.0
+    # equalisation when neither side clamps: pe_q + xh == de_q + (1-x)h
+    if 0.0 < x < 1.0:
+        assert pe_q + x * h == pytest.approx(de_q + (1 - x) * h)
+
+
+@given(pe_q=st.integers(0, 100_000), h=st.integers(1, 100_000),
+       skews=st.lists(st.integers(0, 50_000), min_size=2, max_size=10))
+@settings(max_examples=50, deadline=None)
+def test_property_water_fill_monotone_in_queue_skew(pe_q, h, skews):
+    """The PE share never decreases as the DE queue grows deeper."""
+    s = mk_sched(split_reads=True)
+    fracs = [s._water_fill_frac(pe_q, pe_q + d, h) for d in sorted(skews)]
+    assert all(b >= a - 1e-12 for a, b in zip(fracs, fracs[1:])), fracs
+
+
+@given(alpha=st.integers(1, 1 << 20), beta=st.integers(1, 1 << 20),
+       pe_q=st.integers(0, 1 << 16), de_q=st.integers(0, 1 << 16),
+       cached=st.integers(0, 1 << 16), split=st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_property_read_tokens_conserve_hit(alpha, beta, pe_q, de_q,
+                                           cached, split):
+    """Whatever alpha/beta/queues/hit sizes the scheduler sees, the
+    per-side read tokens sum to exactly the hit, the fraction stays in
+    [0, 1], and on_read_done restores both queues exactly."""
+    s = mk_sched(alpha=alpha, beta=beta, split_reads=split)
+    s.engines[(0, 0)].read_q = pe_q
+    s.engines[(10, 0)].read_q = de_q
+    r = Request(rid=0, cached_tokens=cached, new_tokens=1, gen_tokens=1)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r)
+    assert 0.0 <= r.pe_read_frac <= 1.0
+    tokens = r.read_tokens_by_side()
+    assert tokens["pe"] >= 0 and tokens["de"] >= 0
+    assert tokens["pe"] + tokens["de"] == cached
+    s.on_read_done((0, 0), tokens["pe"])
+    s.on_read_done((10, 0), tokens["de"])
+    assert s.engines[(0, 0)].read_q == pe_q
+    assert s.engines[(10, 0)].read_q == de_q
+
+
+@given(cached=st.integers(1, 1 << 16), t_pe=st.integers(0, 1 << 16),
+       t_de=st.integers(0, 1 << 16), pe_q=st.integers(0, 1 << 16),
+       de_q=st.integers(0, 1 << 16), split=st.booleans())
+@settings(max_examples=100, deadline=None)
+def test_property_tier_partition_conserves_hit(cached, t_pe, t_de, pe_q,
+                                               de_q, split):
+    """With a DRAM-tier prefix the explicit partition still conserves:
+    dram + snic_pe + snic_de == cached, block partition included."""
+    s = mk_sched(split_reads=split)
+    s.engines[(0, 0)].read_q = pe_q
+    s.engines[(10, 0)].read_q = de_q
+    r = Request(rid=0, cached_tokens=cached, new_tokens=1, gen_tokens=1)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r, tier_tokens={"pe": t_pe, "de": t_de})
+    if r.snic_tokens is not None:
+        assert (r.dram_tokens + r.snic_tokens["pe"] +
+                r.snic_tokens["de"]) == cached
+        assert 0.0 <= r.pe_read_frac <= 1.0
+        n_blocks = cached        # 1 token per block: exact partition
+        part = r.hit_blocks_by_side(n_blocks)
+        assert part["tier"] + part["pe"] + part["de"] == n_blocks
+
+
+# ---------------------------------------------------------------------------
+# compute-network back-pressure (repro.network congestion signal)
+# ---------------------------------------------------------------------------
+
+
+def test_congestion_shifts_split_read_toward_pe():
+    """Only DE-side reads cross the PE<->DE link, so a congested link
+    must shift the water-filled fraction toward the PE side."""
+    s = mk_sched(split_reads=True)
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r, net_congestion=1.0)
+    assert r.pe_read_frac > 0.5
+    tokens = r.read_tokens_by_side()
+    assert tokens["pe"] > tokens["de"]
+    assert tokens["pe"] + tokens["de"] == 100
+
+
+def test_congestion_biases_pure_read_choice():
+    s = mk_sched()
+    s.engines[(0, 0)].read_q = 120      # PE slightly deeper
+    s.engines[(10, 0)].read_q = 100
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    # uncongested: DE wins (shorter queue); congested: PE wins
+    assert s.choose_read_path(r, net_congestion=0.0) == "de"
+    s.on_read_done((10, 0), 100)
+    r2 = Request(rid=1, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r2.pe, r2.de = (0, 0), (10, 0)
+    assert s.choose_read_path(r2, net_congestion=0.5) == "pe"
+
+
+def test_zero_congestion_is_bitwise_legacy():
+    """net_congestion=0 (and omitting it) must reproduce the historical
+    choice exactly — the congestion bias is strictly additive."""
+    a, b = mk_sched(split_reads=True), mk_sched(split_reads=True)
+    for pe_q, de_q, cached in [(0, 0, 101), (7, 19, 33), (500, 2, 64)]:
+        got = []
+        for s, kw in ((a, {}), (b, {"net_congestion": 0.0})):
+            s.engines[(0, 0)].read_q = pe_q
+            s.engines[(10, 0)].read_q = de_q
+            r = Request(rid=0, cached_tokens=cached, new_tokens=1,
+                        gen_tokens=1)
+            r.pe, r.de = (0, 0), (10, 0)
+            s.choose_read_path(r, **kw)
+            got.append((r.read_path, r.read_split,
+                        tuple(sorted(r.read_tokens_by_side().items()))))
+        assert got[0] == got[1], (pe_q, de_q, cached, got)
+
+
+# ---------------------------------------------------------------------------
+# RoundRobinScheduler tier awareness (parity with Scheduler)
+# ---------------------------------------------------------------------------
+
+
+def mk_rr(**kw):
+    s = RoundRobinScheduler(alpha=100, beta=1000, **kw)
+    s.register_engine((0, 0), node=0, kind="pe", group=0)
+    st_ = s.register_engine((10, 0), node=10, kind="de", group=1000)
+    st_.free_hbm_tokens = 10_000
+    return s
+
+
+def test_rr_choose_read_path_uses_tier_tokens():
+    """The RR baseline no longer ignores tier residency: the side whose
+    DRAM holds the hit prefix serves it without charging any read_q."""
+    s = mk_rr()
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r, tier_tokens={"pe": 0, "de": 60})
+    assert r.dram_side == "de" and r.dram_tokens == 60
+    assert r.snic_tokens["pe"] + r.snic_tokens["de"] == 40
+    # tier-served tokens never enter a disk reading queue
+    assert (s.engines[(0, 0)].read_q +
+            s.engines[(10, 0)].read_q) == 40
+
+
+def test_rr_tier_preference_parity_with_scheduler():
+    """On unequal tier prefixes RR picks the same DRAM side and token
+    count as the adaptive scheduler — the tier preference is data
+    locality, not scheduling policy."""
+    cases = [({"pe": 80, "de": 0}, "pe", 80),
+             ({"pe": 16, "de": 48}, "de", 48),
+             ({"pe": 200, "de": 0}, "pe", 100)]   # clamped to the hit
+    for tier, want_side, want_tokens in cases:
+        for mk in (mk_sched, mk_rr):
+            s = mk()
+            r = Request(rid=0, cached_tokens=100, new_tokens=10,
+                        gen_tokens=10)
+            r.pe, r.de = ((0, 0), (10, 0))
+            s.choose_read_path(r, tier_tokens=dict(tier))
+            assert r.dram_side == want_side, (mk.__name__, tier)
+            assert r.dram_tokens == want_tokens, (mk.__name__, tier)
+            assert (r.dram_tokens + r.snic_tokens["pe"] +
+                    r.snic_tokens["de"]) == 100
+
+
+def test_rr_equal_tier_prefixes_actually_alternate():
+    """Equal warm prefixes on both sides: the chosen side must flip
+    across requests (a double counter draw per request would freeze the
+    parity and pin every request to one side)."""
+    s = mk_rr()
+    picks = []
+    for i in range(4):
+        r = Request(rid=i, cached_tokens=100, new_tokens=10, gen_tokens=10)
+        r.pe, r.de = (0, 0), (10, 0)
+        s.choose_read_path(r, tier_tokens={"pe": 40, "de": 40})
+        picks.append((r.dram_side,
+                      "pe" if r.snic_tokens["pe"] else "de"))
+    assert picks == [("pe", "pe"), ("de", "de"),
+                     ("pe", "pe"), ("de", "de")]
+    # the two sides' disk queues are charged symmetrically over a pair
+    assert s.engines[(0, 0)].read_q == s.engines[(10, 0)].read_q == 120
+
+
+def test_rr_cold_remainder_keeps_alternation():
+    """The cold (SNIC) remainder alternates sides across requests —
+    the RR property Fig. 13 isolates — instead of following queues."""
+    s = mk_rr()
+    sides = []
+    for i in range(4):
+        r = Request(rid=i, cached_tokens=100, new_tokens=10, gen_tokens=10)
+        r.pe, r.de = (0, 0), (10, 0)
+        s.choose_read_path(r, tier_tokens={"pe": 20, "de": 0})
+        sides.append("pe" if r.snic_tokens["pe"] else "de")
+    assert sides == ["pe", "de", "pe", "de"]
+
+
+def test_rr_tiered_sim_serves_dram_hits():
+    """End-to-end parity: a tiered simulator run under the RR baseline
+    now reports DRAM-tier hits (it reported none before the fix)."""
+    from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig, \
+        generate_dataset
+    trajs = generate_dataset(6, 32768, seed=0, think_mean_s=1.0)
+    res = {}
+    for scheduler in ("adaptive", "rr"):
+        cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
+                        mode="dualpath", scheduler=scheduler,
+                        dram_tier_bytes=2e9)
+        r = Sim(cfg, trajs).run().results()
+        assert r["finished_agents"] == 6, scheduler
+        res[scheduler] = r
+    assert res["rr"]["dram_hit_ratio"] > 0.0
+    # per-request conservation holds under RR too (charged legs match
+    # the plans, already asserted per round by the sim charge test)
+
+
 def test_round_robin_baseline():
     s = RoundRobinScheduler(alpha=10, beta=10)
     for i in range(2):

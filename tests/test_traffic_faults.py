@@ -1,0 +1,295 @@
+"""Fault injection for TrafficManager's flush/poll halves.
+
+The pipelined serving runtime rides on two contracts:
+
+* completion callbacks fire EXACTLY ONCE per flush, no matter how the
+  poll side is sliced (partial polls, interleaved flush batches,
+  re-entrant callbacks, faulting payload thunks);
+* the per-class byte/WR accounting is exact — a doorbell batch neither
+  loses nor double-counts a WR, including WRs the congestion pacing
+  defers across flushes.
+
+These tests break the manager on purpose along each of those axes."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.traffic import SubmitCostModel, TrafficClass, TrafficManager
+
+
+def _kv(tm, fn=lambda: None, nbytes=1):
+    tm.submit(fn, nbytes, TrafficClass.KV_TRANSFER)
+
+
+# ---------------------------------------------------------------------------
+# partial / out-of-order completion across interleaved flush batches
+# ---------------------------------------------------------------------------
+
+
+def test_partial_polls_fire_each_flush_callback_exactly_once():
+    """Three interleaved flush batches, drained in ragged poll chunks:
+    each on_complete fires exactly once, at its batch's last transfer."""
+    tm = TrafficManager(doorbell_batch=2)
+    fired = []
+    sizes = (3, 1, 4)
+    for i, n in enumerate(sizes):
+        for _ in range(n):
+            _kv(tm, nbytes=10)
+        tm.flush(on_complete=lambda i=i: fired.append(i))
+    # ragged completion: 2 + 1 + 2 + 3 = 8 transfers
+    assert tm.poll(max_n=2) == 2 and fired == []
+    assert tm.poll(max_n=1) == 1 and fired == [0]       # batch 0 done at 3
+    assert tm.poll(max_n=2) == 2 and fired == [0, 1]    # batch 1 done at 4
+    assert tm.poll() == 3 and fired == [0, 1, 2]
+    assert not tm.busy
+    assert tm.bytes[TrafficClass.KV_TRANSFER] == 80
+
+
+def test_zero_then_nonzero_flush_interleaving():
+    tm = TrafficManager()
+    fired = []
+    tm.flush(on_complete=lambda: fired.append("empty"))
+    assert fired == ["empty"]                  # nothing queued: immediate
+    _kv(tm)
+    tm.flush(on_complete=lambda: fired.append("one"))
+    tm.flush(on_complete=lambda: fired.append("empty2"))
+    assert fired == ["empty", "empty2"]        # second flush saw no queue
+    tm.poll()
+    assert fired == ["empty", "empty2", "one"]
+
+
+def test_completion_counts_are_per_flush_not_global():
+    """A later flush's transfers must not satisfy an earlier flush's
+    countdown (and vice versa) even when polls interleave them."""
+    tm = TrafficManager()
+    done = []
+    _kv(tm)
+    _kv(tm)
+    tm.flush(on_complete=lambda: done.append("a"))      # a: 2 transfers
+    _kv(tm)
+    tm.flush(on_complete=lambda: done.append("b"))      # b: 1 transfer
+    assert tm.poll(max_n=1) == 1 and done == []
+    assert tm.poll(max_n=1) == 1 and done == ["a"]
+    assert tm.poll(max_n=1) == 1 and done == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# faulting payload thunks — the CQE-error contract
+# ---------------------------------------------------------------------------
+
+
+def test_faulting_thunk_completes_exactly_once_and_poll_resumes():
+    """A thunk that raises is still a completion (popped, callbacks
+    fired, error propagated) — a retry poll cannot double-execute it,
+    and the rest of the ring drains normally."""
+    tm = TrafficManager()
+    ran = []
+    fired = []
+    _kv(tm, fn=lambda: ran.append("ok1"))
+    _kv(tm, fn=lambda: (_ for _ in ()).throw(RuntimeError("dma fault")))
+    _kv(tm, fn=lambda: ran.append("ok2"))
+    tm.flush(on_complete=lambda: fired.append(True))
+    with pytest.raises(RuntimeError):
+        tm.poll()
+    assert ran == ["ok1"]
+    assert tm.in_flight == 1                   # fault consumed its WR
+    assert tm.poll() == 1                      # resume drains the rest
+    assert ran == ["ok1", "ok2"]
+    assert fired == [True]                     # batch callback exactly once
+    assert not tm.busy
+
+
+def test_faulting_callback_does_not_rerun_transfer():
+    """A completion callback that raises must not leave the transfer
+    re-executable."""
+    tm = TrafficManager()
+    ran = []
+    _kv(tm, fn=lambda: ran.append(1))
+    tm.flush(on_complete=lambda: (_ for _ in ()).throw(ValueError("cb")))
+    with pytest.raises(ValueError):
+        tm.poll()
+    assert ran == [1]
+    assert tm.poll() == 0 and not tm.busy      # nothing left to re-run
+    assert ran == [1]
+
+
+# ---------------------------------------------------------------------------
+# re-entrancy: callbacks that drive the manager from inside poll
+# ---------------------------------------------------------------------------
+
+
+def test_reentrant_submit_flush_from_completion_callback():
+    """The persist-completion path submits new WRs and flushes from
+    inside a poll — counts and ordering must stay exact."""
+    tm = TrafficManager()
+    order = []
+    fired = []
+
+    def resubmit():
+        tm.submit(lambda: order.append("child"), 5,
+                  TrafficClass.KV_TRANSFER)
+        tm.flush(on_complete=lambda: fired.append("child-batch"))
+
+    tm.submit(lambda: order.append("parent"), 5, TrafficClass.KV_TRANSFER)
+    tm.flush(on_complete=resubmit)
+    n = tm.poll()          # parent executes, cb flushes the child in-ring
+    n += tm.poll()
+    assert n == 2
+    assert order == ["parent", "child"]
+    assert fired == ["child-batch"]
+    assert tm.stats[TrafficClass.KV_TRANSFER] == 2
+    assert tm.bytes[TrafficClass.KV_TRANSFER] == 10
+
+
+def test_reentrant_poll_cannot_double_execute():
+    tm = TrafficManager()
+    ran = []
+
+    def nested():
+        ran.append("a")
+        tm.poll()          # re-enter: must not re-run "a"
+
+    _kv(tm, fn=nested)
+    _kv(tm, fn=lambda: ran.append("b"))
+    tm.flush()
+    tm.poll()
+    assert ran == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# randomized interleavings (fuzz): exactly-once + exact accounting
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_fuzz_interleaved_flush_poll_accounting(seed):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    tm = TrafficManager(doorbell_batch=int(rng.integers(1, 5)))
+    executed = []
+    submitted = 0
+    submitted_bytes = 0
+    completions = []       # (flush_id, n_in_batch)
+    fired = {}
+    flush_id = 0
+    for _ in range(rng.integers(5, 30)):
+        op = rng.integers(0, 3)
+        if op == 0:
+            n = int(rng.integers(1, 6))
+            for i in range(n):
+                nbytes = int(rng.integers(1, 100))
+                tm.submit(lambda i=submitted + i: executed.append(i),
+                          nbytes, TrafficClass.KV_TRANSFER)
+                submitted_bytes += nbytes
+            submitted += n
+        elif op == 1:
+            fid = flush_id
+            flush_id += 1
+            queued = tm.queued
+            completions.append((fid, queued))
+            fired[fid] = 0
+            tm.flush(on_complete=lambda fid=fid:
+                     fired.__setitem__(fid, fired[fid] + 1))
+        else:
+            tm.poll(max_n=int(rng.integers(0, 8)) or None)
+    # drain everything
+    tm.drain()
+    assert len(executed) == submitted
+    # posted order == submission order within the KV class
+    assert executed == sorted(executed)
+    assert tm.bytes[TrafficClass.KV_TRANSFER] == submitted_bytes
+    assert tm.stats[TrafficClass.KV_TRANSFER] == submitted
+    for fid, count in fired.items():
+        assert count == 1, f"flush {fid} completion fired {count} times"
+
+
+# ---------------------------------------------------------------------------
+# congestion pacing: deferral keeps order, obligations and accounting
+# ---------------------------------------------------------------------------
+
+
+def test_paced_flush_defers_excess_kv_wrs():
+    tm = TrafficManager(doorbell_batch=4)
+    tm.net_congestion = 1.0
+    for _ in range(10):
+        _kv(tm)
+    assert tm.flush() == 4                 # one doorbell batch posted
+    assert tm.queued == 6 and tm.in_flight == 4
+    assert tm.doorbells == 1
+    assert tm.paced_flushes == 1 and tm.deferred_wrs == 6
+    tm.net_congestion = 0.0                # link drained: post the rest
+    assert tm.flush() == 6
+    assert tm.doorbells == 1 + 2           # 6 WRs / batch of 4
+    assert tm.poll() == 10
+
+
+def test_paced_flush_lets_late_collective_overtake_deferred_kv():
+    """The point of pacing: a collective submitted AFTER a deep KV
+    backlog still reaches the ring first."""
+    tm = TrafficManager(doorbell_batch=2)
+    tm.net_congestion = 1.0
+    order = []
+    for i in range(5):
+        _kv(tm, fn=lambda i=i: order.append(f"kv{i}"))
+    tm.flush()                             # kv0, kv1 posted; 3 deferred
+    tm.submit(lambda: order.append("coll"), 1,
+              TrafficClass.MODEL_COLLECTIVE)
+    tm.flush()                             # coll + one more KV batch
+    tm.poll()
+    assert order[:3] == ["kv0", "kv1", "coll"]
+    tm.flush()
+    tm.poll()
+    assert order == ["kv0", "kv1", "coll", "kv2", "kv3", "kv4"]
+
+
+def test_paced_flush_completion_covers_deferred_wrs():
+    """A paced flush's on_complete must wait for the WRs it deferred —
+    they were queued at the flush, and the caller's contract is 'my
+    transfers are done'."""
+    tm = TrafficManager(doorbell_batch=2)
+    tm.net_congestion = 1.0
+    done = []
+    for _ in range(5):
+        _kv(tm)
+    tm.flush(on_complete=lambda: done.append(True))
+    assert tm.poll() == 2 and done == []   # only the posted batch ran
+    tm.flush()                             # repost two more (still paced)
+    assert tm.poll() == 2 and done == []
+    tm.flush()
+    assert tm.poll() == 1 and done == [True]
+
+
+def test_paced_flush_charges_submission_cost_exactly_once():
+    """Deferred WRs pay the §5.2 submission cost when actually posted —
+    never twice, never zero times."""
+    c = SubmitCostModel()
+    tm = TrafficManager(doorbell_batch=3)
+    tm.net_congestion = 1.0
+    for _ in range(7):
+        _kv(tm)
+    tm.flush()                             # 3 posted (1 doorbell)
+    tm.flush()                             # 3 more
+    tm.flush()                             # last one
+    tm.poll()
+    assert tm.doorbells == 3
+    expect = 7 * c.rdma_wr_s + 3 * c.rdma_doorbell_s
+    assert tm.submitted_seconds == pytest.approx(expect, abs=1e-15)
+
+
+def test_drain_terminates_under_pacing():
+    tm = TrafficManager(doorbell_batch=2)
+    tm.net_congestion = 1.0
+    ran = []
+    for i in range(9):
+        _kv(tm, fn=lambda i=i: ran.append(i))
+    assert tm.drain() == 9
+    assert ran == list(range(9)) and not tm.busy
+
+
+def test_unpaced_behaviour_unchanged_below_threshold():
+    tm = TrafficManager(doorbell_batch=4)
+    tm.net_congestion = 0.49               # below the 0.5 default
+    for _ in range(10):
+        _kv(tm)
+    assert tm.flush() == 10
+    assert tm.paced_flushes == 0 and tm.deferred_wrs == 0
