@@ -162,6 +162,12 @@ def run(quick: bool = False, smoke: bool = False):
          f"slo@load{top:g} vl {vl_top['slo']:.3f} >= fifo "
          f"{fifo_top['slo']:.3f}; fifo stall "
          f"{fifo_top['collective_stall_s']:.1f}s; tokens identical")
+    # headline metrics for the CI perf gate (benchmarks/perf_gate.py)
+    return {
+        "vl_collective_stall_s": vl_top["collective_stall_s"],
+        "vl_slo_at_top_load": vl_top["slo"],
+        "fifo_slo_at_top_load": fifo_top["slo"],
+    }
 
 
 def main(argv=None):

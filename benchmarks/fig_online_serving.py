@@ -119,6 +119,13 @@ def run(quick: bool = False, smoke: bool = False):
          f"{off['pipelined']['tput']:.1f} >= blocking "
          f"{off['blocking']['tput']:.1f}; slo_attain@{top:g}aps "
          f"{att_p:.2f} >= {att_b:.2f}")
+    # headline metrics for the CI perf gate (benchmarks/perf_gate.py)
+    return {
+        "offline_tok_s": off["pipelined"]["tput"],
+        "slo_attainment": att_p,
+        "overlap_gain": off["pipelined"]["tput"] /
+        max(off["blocking"]["tput"], 1e-9),
+    }
 
 
 def main(argv=None):

@@ -97,6 +97,13 @@ def run(quick: bool = False, smoke: bool = False):
          f"{pf['dram_hit_ratio']:.3f} > 0; snic hit bytes "
          f"{pf['snic_hit_read_bytes'] / 1e9:.1f}GB < off "
          f"{off['snic_hit_read_bytes'] / 1e9:.1f}GB")
+    # headline metrics for the CI perf gate (benchmarks/perf_gate.py)
+    return {
+        "dram_hit_ratio": pf["dram_hit_ratio"],
+        "snic_hit_saved_gb": (off["snic_hit_read_bytes"] -
+                              pf["snic_hit_read_bytes"]) / 1e9,
+        "jct_max_s": pf["jct_max"],
+    }
 
 
 def main(argv=None):

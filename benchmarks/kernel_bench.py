@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit
 
 
 def _bench(fn, *args, iters=3, **kw):

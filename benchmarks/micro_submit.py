@@ -7,7 +7,7 @@ import time
 
 from repro.core.traffic import SubmitCostModel, TrafficClass, TrafficManager
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit
 
 
 def run(quick: bool = False):

@@ -1,0 +1,223 @@
+"""CI perf trajectory gate.
+
+Runs every registered ``--smoke`` benchmark (the ``benchmarks/run.py``
+registry), collects their headline metrics into a machine-readable
+``BENCH_<n>.json`` and compares against the last committed
+``BENCH_*.json`` at the repo root with per-metric tolerance bands, so a
+PR that silently regresses offline throughput, SLO attainment, the
+DRAM-tier hit ratio or collective stalls fails CI instead of landing.
+
+Usage::
+
+  perf_gate.py                  # run smokes, compare vs latest BENCH_*,
+                                # write --out (CI artifact); exit 1 on
+                                # regression
+  perf_gate.py --collect PATH   # run smokes, write PATH, no gating
+                                # (how BENCH_<n>.json is regenerated
+                                # after an intentional perf change)
+  perf_gate.py --compare A B    # gate B against baseline A, no runs
+  perf_gate.py --self-test      # verify the comparator catches an
+                                # injected >5% regression (no runs)
+
+Per-metric direction: +1 = higher is better (tok/s, SLO attainment, hit
+ratios, gains), -1 = lower is better (stalls, JCT, drain latency), 0 =
+informational (recorded, never gated).  A metric regresses when it
+moves against its direction by more than ``rel_tol`` (default 5%)
+relative to the baseline, with a small absolute floor so near-zero
+baselines (e.g. a 0.000 s collective stall) don't turn noise into
+failures.  Metrics present in the baseline but missing from the current
+run always fail — losing a headline metric is itself a regression.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+
+if __package__ in (None, ""):       # direct `python benchmarks/<file>.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA = 1
+REL_TOL = 0.05
+
+#: gating direction per headline metric (see module docstring)
+DIRECTIONS = {
+    "fig_tiered": {"dram_hit_ratio": +1, "snic_hit_saved_gb": +1,
+                   "jct_max_s": -1},
+    "fig_online_serving": {"offline_tok_s": +1, "slo_attainment": +1,
+                           "overlap_gain": +1},
+    "fig_interference": {"vl_collective_stall_s": -1,
+                         "vl_slo_at_top_load": +1,
+                         "fifo_slo_at_top_load": 0},
+    "fig_elastic": {"elastic_tput_tok_s": +1,
+                    "static_best_tput_tok_s": 0,
+                    "elastic_gain": +1, "role_changes": 0,
+                    "reconfig_drain_s": -1},
+}
+
+#: absolute slack added to every band, so near-zero baselines gate on
+#: "stayed near zero" instead of "within 5% of zero"
+ABS_FLOOR = {"vl_collective_stall_s": 1.0}
+DEFAULT_ABS_FLOOR = 0.02
+
+
+def collect() -> dict:
+    from benchmarks.run import run_smoke_all
+    return {"schema": SCHEMA, "metrics": run_smoke_all()}
+
+
+def compare(baseline: dict, current: dict,
+            rel_tol: float = REL_TOL) -> list:
+    """Regressions of ``current`` vs ``baseline``; empty list = pass."""
+    bad = []
+    base_m = baseline.get("metrics", {})
+    cur_m = current.get("metrics", {})
+    for bench, metrics in base_m.items():
+        cur = cur_m.get(bench)
+        if cur is None:
+            bad.append(f"{bench}: benchmark missing from current run")
+            continue
+        for name, base_v in metrics.items():
+            # presence FIRST: losing a baseline metric is a regression
+            # regardless of its gating direction
+            if name not in cur:
+                bad.append(f"{bench}.{name}: metric missing "
+                           f"(baseline {base_v:.4g})")
+                continue
+            direction = DIRECTIONS.get(bench, {}).get(name)
+            if direction == 0:
+                continue
+            if direction is None:
+                # unknown metric: informational (new metrics must not
+                # invalidate old baselines), but warn loudly
+                print(f"perf_gate: no direction for {bench}.{name}; "
+                      f"not gated", file=sys.stderr)
+                continue
+            cur_v = cur[name]
+            band = rel_tol * abs(base_v) + \
+                ABS_FLOOR.get(name, DEFAULT_ABS_FLOOR)
+            delta = (cur_v - base_v) * direction
+            if delta < -band:
+                bad.append(
+                    f"{bench}.{name}: {cur_v:.4g} vs baseline "
+                    f"{base_v:.4g} ({'-' if direction > 0 else '+'}"
+                    f"{abs(cur_v - base_v):.4g} > band {band:.4g})")
+    return bad
+
+
+def latest_baseline_path(exclude=None) -> str | None:
+    paths = []
+    for p in glob.glob(os.path.join(REPO_ROOT, "BENCH_*.json")):
+        m = re.match(r"BENCH_(\d+)\.json$", os.path.basename(p))
+        if m and p != exclude:
+            paths.append((int(m.group(1)), p))
+    return max(paths)[1] if paths else None
+
+
+def self_test() -> None:
+    """The comparator must catch an injected >5% regression in every
+    gated direction, accept within-band noise, and flag lost metrics."""
+    base = {"schema": SCHEMA, "metrics": {
+        "fig_online_serving": {"offline_tok_s": 100.0,
+                               "slo_attainment": 1.0},
+        "fig_interference": {"vl_collective_stall_s": 0.0},
+        "fig_elastic": {"reconfig_drain_s": 50.0},
+    }}
+
+    def mut(bench, name, value):
+        cur = json.loads(json.dumps(base))
+        cur["metrics"][bench][name] = value
+        return cur
+
+    # >5% drop in a higher-is-better metric fails
+    assert compare(base, mut("fig_online_serving", "offline_tok_s", 90.0))
+    # within-band noise passes
+    assert not compare(base, mut("fig_online_serving", "offline_tok_s",
+                                 96.0))
+    # improvement passes
+    assert not compare(base, mut("fig_online_serving", "offline_tok_s",
+                                 140.0))
+    # lower-is-better regression fails
+    assert compare(base, mut("fig_elastic", "reconfig_drain_s", 60.0))
+    # near-zero baseline: small absolute creep stays inside the floor,
+    # a real stall does not
+    assert not compare(base, mut("fig_interference",
+                                 "vl_collective_stall_s", 0.5))
+    assert compare(base, mut("fig_interference",
+                             "vl_collective_stall_s", 5.0))
+    # losing a metric or a whole benchmark fails — including metrics
+    # whose direction is informational (0) or unregistered
+    base["metrics"]["fig_elastic"]["static_best_tput_tok_s"] = 1500.0
+    base["metrics"]["fig_elastic"]["unregistered_metric"] = 1.0
+    for bench, name in (("fig_online_serving", "slo_attainment"),
+                        ("fig_elastic", "static_best_tput_tok_s"),
+                        ("fig_elastic", "unregistered_metric")):
+        cur = json.loads(json.dumps(base))
+        del cur["metrics"][bench][name]
+        assert compare(base, cur), (bench, name)
+    cur = json.loads(json.dumps(base))
+    del cur["metrics"]["fig_elastic"]
+    assert compare(base, cur)
+    print("perf_gate self-test: PASS")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--collect", metavar="PATH",
+                    help="run smokes and write PATH without gating")
+    ap.add_argument("--compare", nargs=2, metavar=("BASE", "CUR"),
+                    help="gate CUR against BASE without running")
+    ap.add_argument("--out", default="bench_current.json",
+                    help="where the gating run writes its metrics "
+                         "(uploaded as a CI artifact)")
+    ap.add_argument("--rel-tol", type=float, default=REL_TOL)
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        self_test()
+        return 0
+    if args.compare:
+        with open(args.compare[0]) as f:
+            base = json.load(f)
+        with open(args.compare[1]) as f:
+            cur = json.load(f)
+        bad = compare(base, cur, rel_tol=args.rel_tol)
+    elif args.collect:
+        data = collect()
+        with open(args.collect, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"perf_gate: wrote {args.collect}")
+        return 0
+    else:
+        data = collect()
+        with open(args.out, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
+        base_path = latest_baseline_path(
+            exclude=os.path.abspath(args.out))
+        if base_path is None:
+            print("perf_gate: no committed BENCH_*.json baseline; "
+                  "metrics recorded only")
+            return 0
+        with open(base_path) as f:
+            base = json.load(f)
+        print(f"perf_gate: comparing against {base_path}")
+        bad = compare(base, data, rel_tol=args.rel_tol)
+    if bad:
+        print("perf_gate: REGRESSION", file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    print("perf_gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

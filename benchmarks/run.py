@@ -3,8 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks agent
 counts (CI-sized); default sizes reproduce the paper's operating points
 (fig7 at 1024 agents reaches the ~1.87x headline).
+
+``--smoke-all`` runs every benchmark that declares a ``--smoke`` mode
+(a ``smoke`` parameter on its ``run()``) and fails on the first
+acceptance violation — the single CI entry point, so new figures are
+covered by registering here instead of editing the workflow.  Smoke
+runs return their headline metrics; ``benchmarks/perf_gate.py`` turns
+those into the committed ``BENCH_*.json`` trajectory.
 """
 import argparse
+import inspect
 import os
 import sys
 
@@ -13,23 +21,14 @@ if __package__ in (None, ""):       # direct `python benchmarks/run.py`
         os.path.abspath(__file__))))
 
 
-def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark names")
-    ap.add_argument("--list", action="store_true",
-                    help="list benchmark names and exit")
-    args = ap.parse_args(argv)
-
+def suite():
     from benchmarks import (fig7_offline, fig8_pd_ratio, fig9_append_gen,
                             fig10_online, fig12_ablation, fig13_balance,
-                            fig_interference, fig_online_serving,
-                            fig_tiered_prefetch, kernel_bench, micro_submit,
-                            roofline, table1_cache_compute, table3_scale)
-    from benchmarks.common import header
-
-    suite = {
+                            fig_elastic, fig_interference,
+                            fig_online_serving, fig_tiered_prefetch,
+                            kernel_bench, micro_submit, roofline,
+                            table1_cache_compute, table3_scale)
+    return {
         "table1": table1_cache_compute.run,
         "micro_submit": micro_submit.run,
         "kernels": kernel_bench.run,
@@ -42,18 +41,70 @@ def main(argv=None) -> None:
         "fig_tiered": fig_tiered_prefetch.run,
         "fig_online_serving": fig_online_serving.run,
         "fig_interference": fig_interference.run,
+        "fig_elastic": fig_elastic.run,
         "table3": table3_scale.run,
         "roofline": roofline.run,
     }
+
+
+def smoke_benchmarks(full=None):
+    """The registered benchmarks that declare a smoke mode."""
+    full = full or suite()
+    return {name: fn for name, fn in full.items()
+            if "smoke" in inspect.signature(fn).parameters}
+
+
+def run_smoke_all(only=None) -> dict:
+    """Run every smoke-capable benchmark (optionally filtered to the
+    ``only`` name set); returns ``{name: metrics}`` with each smoke
+    run's headline-metric dict (empty when a benchmark returns none).
+    Raises on the first acceptance violation or an unknown name."""
+    from benchmarks.common import header
+    header()
+    smokes = smoke_benchmarks()
+    if only:
+        unknown = set(only) - set(smokes)
+        if unknown:
+            raise SystemExit(f"--only names without a --smoke mode: "
+                             f"{sorted(unknown)}")
+        smokes = {n: fn for n, fn in smokes.items() if n in only}
+    out = {}
+    for name, fn in smokes.items():
+        metrics = fn(smoke=True)
+        out[name] = dict(metrics or {})
+        print(f"{name} smoke: PASS", file=sys.stderr)
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--list", action="store_true",
+                    help="list benchmark names and exit")
+    ap.add_argument("--smoke-all", action="store_true",
+                    help="run every benchmark that declares --smoke and "
+                         "fail on the first acceptance violation")
+    args = ap.parse_args(argv)
+
+    from benchmarks.common import header
+
+    full = suite()
     if args.list:
-        for name, fn in suite.items():
+        smokes = smoke_benchmarks(full)
+        for name, fn in full.items():
             doc = (sys.modules[fn.__module__].__doc__ or
                    "").strip().splitlines()
-            print(f"{name}: {doc[0] if doc else ''}")
+            tag = " [smoke]" if name in smokes else ""
+            print(f"{name}{tag}: {doc[0] if doc else ''}")
         return
     only = set(args.only.split(",")) if args.only else None
+    if args.smoke_all:
+        run_smoke_all(only=only)
+        return
     header()
-    for name, fn in suite.items():
+    for name, fn in full.items():
         if only and name not in only:
             continue
         try:

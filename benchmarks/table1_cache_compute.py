@@ -14,7 +14,7 @@ from __future__ import annotations
 from repro.configs import ARCH_IDS, get_config
 from repro.sim.spec import ModelSimSpec
 
-from benchmarks.common import emit, timed
+from benchmarks.common import timed
 
 # analytic descriptors of the paper's Table 1 models -----------------------
 TABLE1_MODELS = {

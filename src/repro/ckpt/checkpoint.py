@@ -11,7 +11,6 @@ and crash/resume semantics, property-tested to be bitwise resumable.
 """
 from __future__ import annotations
 
-import json
 import os
 import pickle
 import re

@@ -13,7 +13,7 @@ runnable (config, shape) cells and the documented skips.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

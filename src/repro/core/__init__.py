@@ -5,6 +5,7 @@
 #   traffic   — CNIC-centric traffic manager / VL arbiter (§5)
 #   scheduler — inter-engine scheduling (§6.1, Alg. 1)
 #   intra     — compute-quota batch packing (§6.2)
+#   autoscale — elastic PE<->DE role reconfiguration (abstract / §6)
 from repro.core.analysis import (
     ClusterSpec,
     bottleneck_free_range,
@@ -13,6 +14,15 @@ from repro.core.analysis import (
     max_aggregate_load_bw,
     pair_traffic,
     safe_pd_splits,
+)
+from repro.core.autoscale import (
+    DE_TO_PE,
+    PE_TO_DE,
+    DrainRecord,
+    DrainTracker,
+    LoadSignals,
+    PDController,
+    pick_victim,
 )
 from repro.core.blocks import BlockLayout, layout_for
 from repro.core.intra import AttnTimeModel, BatchItem, PrefillWork, QuotaPacker

@@ -14,7 +14,6 @@ DRAM bandwidth per node.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 

@@ -17,8 +17,8 @@ fitted affine in FLOPs (profiled in advance, as in PrefillOnly/Sarathi).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 

@@ -140,7 +140,7 @@ def split_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int,
             ("de_cnic_rd", "de_cnic_wr", "de_dram", "de_snic"),
             phase="decode"),
     ]
-    return [l for l in legs if l.nbytes > 0]
+    return [leg for leg in legs if leg.nbytes > 0]
 
 
 def tiered_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int,
@@ -189,7 +189,7 @@ def tiered_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int,
             ("de_cnic_rd", "de_cnic_wr", "de_dram", "de_snic"),
             phase="decode"),
     ]
-    return [l for l in legs if l.nbytes > 0]
+    return [leg for leg in legs if leg.nbytes > 0]
 
 
 PLANS = {

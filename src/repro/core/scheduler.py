@@ -34,9 +34,10 @@ the real JAX engines.
 """
 from __future__ import annotations
 
+import bisect
 import itertools
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 EngineId = Tuple[int, int]          # (node_id, local_rank)
@@ -152,6 +153,12 @@ class EngineState:
     tok: int = 0                    # unfinished tokens
     read_q: int = 0                 # node disk reading queue (tokens)
     free_hbm_tokens: int = 0        # decode engines only
+    # Elastic reconfiguration (core/autoscale.py): a draining engine is
+    # excluded from every admission pool (PE classes, DE fits, phase-1
+    # group sums) and read-path water-fills steer around it, but its
+    # in-flight work keeps all its accounting until it completes — the
+    # "stop admitting, finish in-flight" half of the drain protocol.
+    draining: bool = False
 
 
 @dataclass
@@ -198,20 +205,148 @@ class Scheduler:
 
     def groups(self, kind: str) -> Dict[int, List[EngineId]]:
         return {g: es for g, es in self._groups.items()
-                if self.engines[es[0]].kind == kind}
+                if es and self.engines[es[0]].kind == kind}
 
     def submit(self, req: Request):
         self.pe_queue.append(req)
         self.de_global_queue.append(req)
 
     # ------------------------------------------------------------------
+    # elastic role reconfiguration (core/autoscale.py drives this)
+    # ------------------------------------------------------------------
+    def begin_drain(self, engine: EngineId) -> EngineState:
+        """Stop admitting to ``engine``.  In-flight work is untouched —
+        its seq/tok/read_q accounting drains through the normal
+        completion hooks.  If this empties a DE group's admitting set,
+        the group's private queue is pushed back onto the global queue
+        (order-preserving) so phase 1 re-routes those requests to groups
+        that can still take them."""
+        st = self.engines[engine]
+        if st.draining:
+            return st
+        st.draining = True
+        if st.kind == "de":
+            members = [self.engines[e] for e in self._groups[st.group]]
+            if all(m.draining for m in members):
+                q = self.de_private.get(st.group)
+                while q:
+                    self.de_global_queue.appendleft(q.pop())
+        return st
+
+    def can_finish_drain(self, engine: EngineId) -> bool:
+        """True once the draining engine's request-level in-flight state
+        has emptied (no unfinished requests, no unfinished tokens).
+        ``read_q`` is deliberately NOT part of the gate: it tracks the
+        *node's* disk reading queue, which other engines on the node
+        (and the flip's own weight reload) keep busy — a request's read
+        always completes before its prefill, so ``tok == 0`` already
+        implies this engine's own reads are done."""
+        st = self.engines[engine]
+        return st.draining and st.seq == 0 and st.tok == 0
+
+    def finish_drain(self, engine: EngineId, *, kind: str, group: int,
+                     free_hbm_tokens: int = 0) -> EngineState:
+        """Flip the drained engine's role: remove it from its old group
+        (dropping the group when it empties) and re-register it under
+        ``kind``/``group``.  A PE->DE->PE round trip through
+        begin/finish restores the original scheduler state exactly
+        (pinned by tests/test_autoscale.py)."""
+        st = self.engines[engine]
+        assert st.draining, f"{engine} was not draining"
+        assert st.seq == 0 and st.tok == 0, \
+            f"{engine} still has in-flight work"
+        old = self._groups[st.group]
+        old.remove(engine)
+        if not old:
+            del self._groups[st.group]
+            q = self.de_private.pop(st.group, None)
+            assert not q, f"drained group {st.group} still had queued work"
+        st.kind = kind
+        st.group = group
+        st.draining = False
+        # every charge this engine's own requests made has been released
+        # (reads complete before prefill, and seq == 0); anything left is
+        # a stale node-backlog report from the old role — drop it, the
+        # next fetch's report refreshes the live value
+        st.read_q = 0
+        st.free_hbm_tokens = free_hbm_tokens if kind == "de" else 0
+        # keep group member order = engine-id order (how register_engine
+        # builds groups), so min()-tie-breaking priority is restored by
+        # a round trip instead of depending on flip history
+        members = self._groups.setdefault(group, [])
+        bisect.insort(members, engine)
+        if kind == "de":
+            self.de_private.setdefault(group, deque())
+        return st
+
+    def admitting(self, kind: str) -> List[EngineState]:
+        """Engines of ``kind`` still accepting work (the controller's
+        n_pe/n_de and the drain victim-candidate set)."""
+        return [st for st in self.engines.values()
+                if st.kind == kind and not st.draining]
+
+    def requeue_unstarted(self, engine: EngineId, requests):
+        """Drain-protocol step: hand back ``engine``'s assigned requests
+        whose KV read has not begun (``read_path is None``).  Nothing
+        has physically happened for them on this engine — no read, no
+        compute, no transfer — so reassignment is free, and without it
+        a drain is hostage to requests blocked on the *other* role
+        (e.g. a PE waiting on a request that cannot start reading until
+        a DE grants it HBM).  ``requests`` is the runtime's in-flight
+        request set; returns the requests given back, so the runtime
+        can mirror the reservation release (sim ``resident_tokens``)."""
+        st = self.engines[engine]
+        back: List[Request] = []
+        for req in requests:
+            if req.read_path is not None:
+                continue
+            if st.kind == "pe" and req.pe == engine:
+                req.pe = None
+            elif st.kind == "de" and req.de == engine:
+                req.de = None
+                st.free_hbm_tokens += req.hbm_tokens
+            else:
+                continue
+            st.seq = max(0, st.seq - 1)
+            st.tok = max(0, st.tok - req.prompt_tokens)
+            back.append(req)
+        if back:
+            # an assigned request is no longer in its queue (popped at
+            # assignment), so concatenate-and-sort restores submission
+            # order without duplicates
+            if st.kind == "pe":
+                self.pe_queue = deque(sorted(
+                    list(self.pe_queue) + back,
+                    key=lambda r: (r.arrival, r.rid)))
+            else:
+                self.de_global_queue = deque(sorted(
+                    list(self.de_global_queue) + back,
+                    key=lambda r: (r.arrival, r.rid)))
+        return back
+
+    def rebalance_de_private(self):
+        """Pull every un-assigned request out of the per-group private
+        queues back into the global queue (submission order), so the
+        next ``de_phase1`` re-routes them against the *current* group
+        topology.  Called after a role flip adds or removes a DE group —
+        without it, requests parked in an old group's private queue
+        would never reach a group that did not exist when phase 1 first
+        routed them."""
+        pend = list(self.de_global_queue)
+        for q in self.de_private.values():
+            while q:
+                pend.append(q.popleft())
+        pend.sort(key=lambda r: (r.arrival, r.rid))
+        self.de_global_queue = deque(pend)
+
+    # ------------------------------------------------------------------
     # PE scheduling — Algorithm 1
     # ------------------------------------------------------------------
     def _classify_pe(self, engines: Sequence[EngineState]):
-        c2 = [e for e in engines
-              if e.read_q <= self.alpha and e.tok <= self.beta]
-        c3 = [e for e in engines
-              if e.read_q > self.alpha and e.tok <= self.beta]
+        c2 = [e for e in engines if not e.draining
+              and e.read_q <= self.alpha and e.tok <= self.beta]
+        c3 = [e for e in engines if not e.draining
+              and e.read_q > self.alpha and e.tok <= self.beta]
         return c2, c3
 
     def on_pe_fetch(self, group: int,
@@ -242,10 +377,13 @@ class Scheduler:
         """Drain the global DE queue into per-group private queues
         (group with minimum Σ tok_e wins each request)."""
         de_groups = self.groups("de")
-        if not de_groups:
-            return
+        # groups whose every member is draining cannot admit: requests
+        # routed there would be stranded until the flip
         gtok = {g: sum(self.engines[e].tok for e in es)
-                for g, es in de_groups.items()}
+                for g, es in de_groups.items()
+                if not all(self.engines[e].draining for e in es)}
+        if not gtok:
+            return
         while self.de_global_queue:
             req = self.de_global_queue.popleft()
             g = min(gtok, key=gtok.get)
@@ -278,7 +416,7 @@ class Scheduler:
         while queue:
             req = queue[0]
             fits = [e for e in members
-                    if free[e.engine] >= req.hbm_tokens]
+                    if not e.draining and free[e.engine] >= req.hbm_tokens]
             if not fits:
                 break
             low = [e for e in fits if e.tok + req.prompt_tokens <= Z]
@@ -349,6 +487,17 @@ class Scheduler:
         assert req.pe is not None and req.de is not None, req.rid
         pe_q = self.engines[req.pe].read_q
         de_q = self.engines[req.de].read_q
+        # A draining side must empty, not refill: inflate its effective
+        # queue depth by the whole hit so the water-fill (and the
+        # shorter-queue choice) steers this read to the surviving side.
+        # Same mechanism as the congestion bias, so role flips cannot
+        # thrash the split-read partition — the drain looks like one
+        # more pressure signal, absorbed by the same arithmetic.
+        # No-op while nothing drains (elastic off: bit-identical).
+        if self.engines[req.pe].draining:
+            pe_q += req.cached_tokens
+        if self.engines[req.de].draining:
+            de_q += req.cached_tokens
         if tier_tokens and req.cached_tokens:
             t_pe = min(tier_tokens.get("pe", 0), req.cached_tokens)
             t_de = min(tier_tokens.get("de", 0), req.cached_tokens)
@@ -439,8 +588,11 @@ class RoundRobinScheduler(Scheduler):
     def on_pe_fetch(self, group, reports=None):
         members = [self.engines[e] for e in self._groups[group]]
         self._apply_reports(members, reports)
+        # the drain protocol's never-admit invariant holds for every
+        # scheduling policy: draining engines leave the rotation
+        members = [e for e in members if not e.draining]
         out = []
-        while self.pe_queue:
+        while self.pe_queue and members:
             req = self.pe_queue.popleft()
             pe = members[next(self._rr_pe) % len(members)]
             req.pe = pe.engine
@@ -457,7 +609,8 @@ class RoundRobinScheduler(Scheduler):
         out = []
         while queue:
             req = queue[0]
-            fits = [e for e in members if e.free_hbm_tokens >= req.hbm_tokens]
+            fits = [e for e in members
+                    if not e.draining and e.free_hbm_tokens >= req.hbm_tokens]
             if not fits:
                 break
             de = fits[next(self._rr_de) % len(fits)]

@@ -24,7 +24,7 @@ import itertools
 from collections import deque
 from dataclasses import dataclass, field
 from enum import IntEnum
-from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 
 class TrafficClass(IntEnum):

@@ -69,12 +69,12 @@ def _kv_rows(cfg: ModelConfig) -> List[Tuple[str, tuple]]:
     fam = cfg.family
     rows: List[Tuple[str, tuple]] = []
     if fam in ("dense", "vlm"):
-        for l in range(cfg.n_layers):
-            rows.append(("kv", (l,)))
+        for li in range(cfg.n_layers):
+            rows.append(("kv", (li,)))
     elif fam == "moe":
         m = cfg.moe
-        for l in range(m.first_k_dense):
-            rows.append(("dense", (l,)))
+        for li in range(m.first_k_dense):
+            rows.append(("dense", (li,)))
         n_super = (cfg.n_layers - m.first_k_dense) // m.period
         for i in range(n_super):
             if m.period > 1:
@@ -123,8 +123,8 @@ def serialize_kv_layer(cfg: ModelConfig, state, slot: int, t0: int,
 def serialize_kv(cfg: ModelConfig, state, slot: int, t0: int,
                  t1: int) -> np.ndarray:
     """-> (n_attn_layers, t1-t0, row_bytes) uint8."""
-    return np.stack([serialize_kv_layer(cfg, state, slot, t0, t1, l)
-                     for l in range(len(_kv_rows(cfg)))], axis=0)
+    return np.stack([serialize_kv_layer(cfg, state, slot, t0, t1, li)
+                     for li in range(len(_kv_rows(cfg)))], axis=0)
 
 
 def deserialize_kv_layer(cfg: ModelConfig, state, slot: int, t0: int,
@@ -214,8 +214,8 @@ def layer_stream(cfg: ModelConfig, blocks: List[np.ndarray],
         buf[layer] = np.asarray(out).reshape(n * pt, row)
 
     tm.submit(lambda: fetch(0), layer_bytes, tclass)
-    for l in range(n_l):
-        tm.drain()                            # layer l has landed
-        if l + 1 < n_l:                       # layer l+1 goes in flight
-            tm.submit(lambda nxt=l + 1: fetch(nxt), layer_bytes, tclass)
-        yield l, buf.pop(l)
+    for li in range(n_l):
+        tm.drain()                            # layer li has landed
+        if li + 1 < n_l:                      # layer li+1 goes in flight
+            tm.submit(lambda nxt=li + 1: fetch(nxt), layer_bytes, tclass)
+        yield li, buf.pop(li)

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import pickle
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -101,10 +101,10 @@ class PrefillEngine:
             er.length = hit
         elif payload:
             if self.layerwise:
-                for l, rows in kvio.layer_stream(self.cfg, payload,
-                                                 tm=self.tm):
+                for li, rows in kvio.layer_stream(self.cfg, payload,
+                                                  tm=self.tm):
                     er.state = kvio.deserialize_kv_layer(
-                        self.cfg, er.state, 0, 0, l, rows[:hit])
+                        self.cfg, er.state, 0, 0, li, rows[:hit])
             else:
                 kv_bytes = np.concatenate(payload, axis=1)   # (L, hit, row)
                 er.state = kvio.deserialize_kv(self.cfg, er.state, 0, 0,

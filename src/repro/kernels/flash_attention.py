@@ -94,9 +94,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ki == n_kv_blocks - 1)
     def _fin():
-        l = l_ref[...]
-        l = jnp.where(l == 0.0, 1.0, l)
-        out = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse = l_ref[...]
+        lse = jnp.where(lse == 0.0, 1.0, lse)
+        out = (acc_ref[...] / lse[:, None]).astype(o_ref.dtype)
         o_ref[0, 0] = out.reshape(g, bq, dh)
 
 

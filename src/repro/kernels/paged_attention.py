@@ -66,9 +66,9 @@ def _paged_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(pi == n_pages - 1)
     def _fin():
-        l = l_ref[...]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse = l_ref[...]
+        lse = jnp.where(lse == 0.0, 1.0, lse)
+        o_ref[0, 0] = (acc_ref[...] / lse[:, None]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,

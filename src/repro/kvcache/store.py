@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import itertools
 import threading
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Sequence
 
 import numpy as np
 

@@ -24,14 +24,13 @@ import argparse
 import json
 import sys
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, SHAPE_ORDER, get_config, shape_supported
-from repro.configs.base import ARCH_IDS, ModelConfig, ShapeSpec
+from repro.configs.base import ARCH_IDS, ModelConfig
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models import abstract_params, decode_step, forward, init_decode_state
 from repro.models.sharding import param_partition_specs, use_mesh
@@ -139,7 +138,6 @@ def input_specs(arch: str, shape_name: str, mesh, state_seq_axis=None):
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     gb, s = shape.global_batch, shape.seq_len
-    bspec = _batch_spec(mesh)
     if shape.kind == "train":
         if cfg.frontend_embed_dim:
             return {"batch": {
@@ -365,7 +363,6 @@ def main(argv=None):
                     help="save gzipped compiled HLO per cell (re-analysis)")
     args = ap.parse_args(argv)
 
-    cells = []
     archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
     shapes = SHAPE_ORDER if (args.all or args.shape is None) else [args.shape]
     meshes = {"single": [False], "multi": [True],

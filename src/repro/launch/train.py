@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.ckpt import FaultTolerantRunner
 from repro.configs import get_config

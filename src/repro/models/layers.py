@@ -8,8 +8,7 @@ Layout convention: activations ``(batch, seq, d_model)``; per-head tensors
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -158,7 +157,7 @@ def _attend_chunked_impl(q, k, v, *, causal, window, softcap, q_offset,
         a0 = jnp.zeros((b, hkv, g, q_chunk, vd), jnp.float32)
 
         def kv_body(i, carry):
-            m, l, acc = carry
+            m, lse, acc = carry
             k_blk = jax.lax.dynamic_slice_in_dim(kp, i * kv_chunk, kv_chunk, 1)
             v_blk = jax.lax.dynamic_slice_in_dim(vp, i * kv_chunk, kv_chunk, 1)
             kv_ids = kv_offset + i * kv_chunk + jnp.arange(kv_chunk)
@@ -177,15 +176,15 @@ def _attend_chunked_impl(q, k, v, *, causal, window, softcap, q_offset,
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(-1)
+            l_new = lse * corr + p.sum(-1)
             pv = jnp.einsum("bngqk,bknd->bngqd", p.astype(v_blk.dtype), v_blk,
                             preferred_element_type=jnp.float32)
             acc_new = acc * corr[..., None] + pv
             return m_new, l_new, acc_new
 
-        m, l, acc = jax.lax.fori_loop(0, nk, kv_body, (m0, l0, a0))
-        l = jnp.where(l == 0.0, 1.0, l)
-        return acc / l[..., None]
+        m, lse, acc = jax.lax.fori_loop(0, nk, kv_body, (m0, l0, a0))
+        lse = jnp.where(lse == 0.0, 1.0, lse)
+        return acc / lse[..., None]
 
     q_ids_all = (q_offset + jnp.arange(nq * q_chunk)).reshape(nq, q_chunk)
     out = jax.lax.map(q_body, (qp, q_ids_all))        # (nq,b,hkv,g,qc,dh)

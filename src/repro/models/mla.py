@@ -35,7 +35,6 @@ def mla_latent(p, cfg: ModelConfig, x, positions):
 
 
 def mla_q(p, cfg: ModelConfig, x, positions):
-    m = cfg.mla
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     q_nope, q_rope = _split_q(cfg, q)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
@@ -58,8 +57,6 @@ def mla_full(p, cfg: ModelConfig, x, positions, *, causal=True,
         pc, pk, plen = prefix
         c_all = jnp.concatenate([pc, c_kv], axis=1)
         k_rope_all = jnp.concatenate([pk, k_rope], axis=1)
-        q_offset = pc.shape[1]   # query global positions handled by caller
-        kv_valid = None          # caller guarantees dense packing
     else:
         c_all, k_rope_all = c_kv, k_rope
     # expand latent to per-head K/V

@@ -20,9 +20,7 @@ stacking so a single scan consumes both):
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -363,16 +361,16 @@ def decode_step(params, cfg: ModelConfig, tokens, state, lengths, *,
 
         def body(carry, xs):
             hh, kv = carry
-            blk, loc, l = xs
+            blk, loc, li = xs
             cache = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(a, l, 0,
+                lambda a: jax.lax.dynamic_index_in_dim(a, li, 0,
                                                        keepdims=False), kv)
             hh, new_cache = _dense_block(blk, cfg, hh, mode="decode",
                                          cache=cache, lengths=lengths,
                                          is_local=loc)
             kv = jax.tree.map(
                 lambda full, c: jax.lax.dynamic_update_index_in_dim(
-                    full, c.astype(full.dtype), l, 0), kv, new_cache)
+                    full, c.astype(full.dtype), li, 0), kv, new_cache)
             return (hh, kv), None
 
         (h, kvs), _ = jax.lax.scan(

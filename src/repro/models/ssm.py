@@ -11,8 +11,7 @@ All state math runs in f32.
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +41,6 @@ def _causal_conv(x, w, tail=None):
 
 def _inputs(p, cfg: ModelConfig, x, conv_tails=None):
     """Shared projection + conv for both scan and step paths."""
-    s = cfg.ssm
     z = jnp.einsum("bsd,di->bsi", x, p["w_z"])
     xb = jnp.einsum("bsd,di->bsi", x, p["w_x"])
     B = jnp.einsum("bsd,dn->bsn", x, p["w_B"])

@@ -30,7 +30,6 @@ definition of "collective load".
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 from repro.roofline.hlo import parse_hlo_metrics
 

@@ -58,6 +58,20 @@ class ReqState(Enum):
     DONE = "done"
 
 
+class EngineLifecycle(Enum):
+    """Lifecycle of one *engine* under elastic role reconfiguration
+    (core/autoscale.py), driven by the existing tick loop: a role flip
+    moves the engine ACTIVE → DRAINING (admissions stopped, in-flight
+    requests finishing through their normal ReqState transitions) →
+    RECONFIGURING (drained; the target role's weight shard reloading
+    over the node's storage NIC) → ACTIVE under the other kind.  With
+    ``elastic=False`` every engine stays ACTIVE forever."""
+
+    ACTIVE = "active"
+    DRAINING = "draining"
+    RECONFIGURING = "reconfiguring"
+
+
 @dataclass
 class RoundMetrics:
     """Timestamps of one round on the runtime's wall clock (mirrors the

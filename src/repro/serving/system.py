@@ -52,7 +52,9 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.blocks import BlockLayout, layout_for
+from repro.core.autoscale import (DE_TO_PE, DrainTracker, LoadSignals,
+                                  PDController, pick_victim)
+from repro.core.blocks import layout_for
 from repro.core.scheduler import Request, Scheduler
 from repro.core.traffic import TrafficClass, TrafficManager
 from repro.engines import kvio
@@ -62,8 +64,9 @@ from repro.kvcache.store import MemoryKVStore, StateBlobStore
 from repro.kvcache.tiers import DramTier, ThinkTimePrefetcher
 from repro.kvcache.trie import BlockTrie
 from repro.serving import events
-from repro.serving.events import (EventLoop, ReqState, RoundMetrics,
-                                  ServingTimeModel, TickIo, VirtualClock)
+from repro.serving.events import (EngineLifecycle, EventLoop, ReqState,
+                                  RoundMetrics, ServingTimeModel, TickIo,
+                                  VirtualClock)
 from repro.sim.spec import NodeSpec
 from repro.sim.traces import Trajectory
 
@@ -92,9 +95,16 @@ class ServingSystem:
                  pe_group_size: Optional[int] = None,
                  de_group_size: Optional[int] = None,
                  pipelined: bool = True, node: Optional[NodeSpec] = None,
-                 net_arbiter: str = "vl", collective_group_size: int = 0):
+                 net_arbiter: str = "vl", collective_group_size: int = 0,
+                 elastic: bool = False, reconfig_interval_s: float = 5.0,
+                 drain_policy: str = "idlest",
+                 reconfig_hi: float = 2.0, reconfig_lo: float = 0.5,
+                 reconfig_patience: int = 2,
+                 reconfig_cooldown_s: float = 0.0,
+                 reconfig_idle_floor_s: float = 1e-3):
         assert mode in ("dualpath", "basic")
         self.cfg = cfg
+        self.params = params            # role flips build new engines
         self.mode = mode
         self.max_seq = max_seq
         self.pipelined = pipelined
@@ -159,6 +169,32 @@ class ServingSystem:
             st.free_hbm_tokens = de_slots * max_seq
             de.defer_persist = pipelined
             self.des[eid] = de
+        # --- elastic role reconfiguration (core/autoscale.py) -------------
+        # Engines flip between PrefillEngine and DecodeEngine objects at
+        # runtime; the controller/tracker plumbing exists even when
+        # elastic is off (zero-cost, zero state drift) so stats() always
+        # reports the reconfiguration columns.
+        if drain_policy not in ("idlest", "rotate"):
+            raise ValueError(f"unknown drain_policy {drain_policy!r}")
+        self.elastic = elastic
+        self.reconfig_interval_s = reconfig_interval_s
+        self.drain_policy = drain_policy
+        self.drains = DrainTracker()
+        self.controller = PDController(
+            hi=reconfig_hi, lo=reconfig_lo, patience=reconfig_patience,
+            cooldown_s=reconfig_cooldown_s,
+            idle_floor_s=reconfig_idle_floor_s)
+        self.engine_lifecycle: Dict[Tuple[int, int], EngineLifecycle] = {
+            eid: EngineLifecycle.ACTIVE
+            for eid in (*self.pes, *self.des)}
+        self._next_gid = itertools.count(5000)
+        self._next_obs_t = reconfig_interval_s
+        self._drain_rotation = 0
+        self._reconfig_ready: List = []   # drained DrainRecords to flip
+        self._quota_s = quota_s
+        self._layerwise = layerwise
+        self._de_slots = de_slots
+        self.reconfig_weight_bytes = 0.0
         self._rid = itertools.count()
         self._pending_admit: deque = deque()
         self._inflight: Dict[int, EngineRequest] = {}
@@ -241,7 +277,7 @@ class ServingSystem:
         cross-group balancing on the global queue."""
         for gid, members in self.sched.groups("de").items():
             reports = {eid: (sum(s is not None for s in self.des[eid].slots),
-                             sum(int(l) for l in self.des[eid].lengths),
+                             sum(int(n) for n in self.des[eid].lengths),
                              0, self.des[eid].free_slots * self.max_seq)
                        for eid in members}
             for asg in self.sched.on_de_fetch(gid, reports):
@@ -745,6 +781,158 @@ class ServingSystem:
         for tm in self._all_tms():
             tm.net_congestion = self.net_congestion
 
+    # ------------------------------------------------------------------
+    # elastic role reconfiguration (core/autoscale.py), driven by the
+    # existing tick loop
+    # ------------------------------------------------------------------
+    def _elastic_signals(self) -> LoadSignals:
+        sched = self.sched
+        spec = self.time_model.spec
+        node = self.time_model.node
+        pe_rate = max(node.gpu.flops * node.gpu.mfu_prefill /
+                      max(spec.linear_flops_per_token(), 1.0), 1.0)
+        pe_queued = sum(r.new_tokens for r in sched.pe_queue)
+        pe_busy = sum(w.remaining for pe in self.pes.values()
+                      for w, _ in pe.fifo)
+        de_busy_tok = 0
+        n_active = 0
+        ctxs: List[float] = []
+        for de in self.des.values():
+            for slot, er in enumerate(de.slots):
+                if er is None:
+                    continue
+                n_active += 1
+                de_busy_tok += er.req.gen_tokens - len(er.generated)
+                ctxs.append(float(de.lengths[slot]))
+        de_q_tok = 0
+        for q in (sched.de_global_queue, *sched.de_private.values()):
+            for r in q:
+                de_q_tok += r.gen_tokens
+                ctxs.append(float(r.prompt_tokens))
+        n_de_now = max(len(self.des), 1)
+        n_ref = max(n_active / n_de_now, 1.0)
+        ctx_ref = (sum(ctxs) / len(ctxs)) if ctxs else 1.0
+        kv_step = spec.decode_step_bytes(ctx_ref)
+        w = spec.active_param_bytes_resident(1)
+        de_rate = max(n_ref * node.gpu.hbm_bw * node.gpu.mbu_decode /
+                      max(n_ref * kv_step + w, 1.0), 1.0)
+        kv_tok = max(spec.kv_bytes_per_token, 1)
+        snic_tok_rate = max(node.snic_bw / kv_tok, 1.0)
+        pe_rq = sum(st.read_q for st in sched.engines.values()
+                    if st.kind == "pe" and not st.draining)
+        de_rq = sum(st.read_q for st in sched.engines.values()
+                    if st.kind == "de" and not st.draining)
+        tiers = list(self.tiers.values())
+        dram_hit = sum(t.dram_hit_bytes for t in tiers)
+        denom = dram_hit + sum(self.read_bytes_by_side.values())
+        return LoadSignals(
+            n_pe=len(sched.admitting("pe")),
+            n_de=len(sched.admitting("de")),
+            pe_queued_s=pe_queued / pe_rate,
+            pe_busy_s=pe_busy / pe_rate,
+            de_queued_s=de_q_tok / de_rate,
+            de_busy_s=de_busy_tok / de_rate,
+            pe_read_q_s=pe_rq / snic_tok_rate,
+            de_read_q_s=de_rq / snic_tok_rate,
+            net_congestion=self.net_congestion,
+            dram_hit_ratio=(dram_hit / denom) if denom else 0.0,
+        )
+
+    def _begin_reconfig(self, action: str):
+        src = "de" if action == DE_TO_PE else "pe"
+        cands = self.sched.admitting(src)
+        if len(cands) <= 1:
+            return
+
+        def load_of(st):
+            if st.kind == "de":
+                de = self.des[st.engine]
+                return st.tok + (de.n_slots - de.free_slots) * self.max_seq
+            return st.tok + st.read_q
+
+        victim = pick_victim(cands, self.drain_policy, load_of,
+                             rotation=self._drain_rotation)
+        self._drain_rotation += 1
+        self.sched.begin_drain(victim.engine)
+        self.sched.requeue_unstarted(
+            victim.engine, [er.req for er in self._inflight.values()])
+        self.engine_lifecycle[victim.engine] = EngineLifecycle.DRAINING
+        self.drains.begin(victim.engine, src,
+                          "pe" if src == "de" else "de", self.clock.now)
+
+    def _engine_drained(self, eid: Tuple[int, int], kind: str) -> bool:
+        """In-flight lifecycle states emptied?  The scheduler's seq/tok
+        gate covers assigned requests end-to-end; the engine-local
+        checks cover work the scheduler has already released but whose
+        completion half is still parked (deferred persists, unflushed
+        doorbells)."""
+        if not self.sched.can_finish_drain(eid):
+            return False
+        if kind == "pe":
+            pe = self.pes[eid]
+            return not pe.fifo and not pe.tm.busy
+        de = self.des[eid]
+        return de.free_slots == de.n_slots and not de.pending_persist \
+            and not de.tm.busy and \
+            not any(er.req.de == eid for er in self._inflight.values())
+
+    def _finish_flip(self, rec):
+        eid = rec.engine
+        node_id = eid[0]
+        gid = next(self._next_gid)
+        tier = self.tiers.get(node_id)
+        handoff = int(tier.used_bytes) if tier is not None else 0
+        if rec.to_kind == "pe":
+            del self.des[eid]
+            self.pes[eid] = PrefillEngine(
+                eid, self.cfg, self.params, self.store, self.layout,
+                self.max_seq, self._quota_s, layerwise=self._layerwise)
+            self.sched.finish_drain(eid, kind="pe", group=gid)
+        else:
+            del self.pes[eid]
+            de_store = self.tiers.get(node_id, self.store)
+            de = DecodeEngine(eid, self.cfg, self.params, de_store,
+                              self.trie, self.layout, self.max_seq,
+                              n_slots=self._de_slots,
+                              blob_store=self.blob_store)
+            de.defer_persist = self.pipelined
+            self.des[eid] = de
+            self.sched.finish_drain(eid, kind="de", group=gid,
+                                    free_hbm_tokens=self._de_slots *
+                                    self.max_seq)
+        # the DE-group topology changed: re-route queued requests
+        self.sched.rebalance_de_private()
+        self.engine_lifecycle[eid] = EngineLifecycle.ACTIVE
+        self.drains.finish(eid, self.clock.now, tier_handoff_bytes=handoff)
+
+    def _elastic_tick(self):
+        """Phase 0 of an elastic tick: flip engines whose RECONFIGURING
+        weight reload was charged last tick, advance active drains
+        (drained -> RECONFIGURING + weight-reload io), then let the
+        controller observe once per ``reconfig_interval_s``."""
+        for rec in self._reconfig_ready:
+            self._finish_flip(rec)
+        self._reconfig_ready = []
+        for eid, rec in list(self.drains.active.items()):
+            if rec.t_drained >= 0:
+                continue
+            if not self._engine_drained(eid, rec.from_kind):
+                continue
+            self.drains.mark_drained(eid, self.clock.now)
+            self.engine_lifecycle[eid] = EngineLifecycle.RECONFIGURING
+            w = self.time_model.spec.active_param_bytes_resident(1)
+            self.reconfig_weight_bytes += w
+            self._tick_io.add(("snic", eid[0]),
+                              self.time_model.snic_seconds(w))
+            self._reconfig_ready.append(rec)
+        if self.clock.now >= self._next_obs_t:
+            self._next_obs_t = self.clock.now + self.reconfig_interval_s
+            if not self.drains.active and not self._reconfig_ready:
+                action = self.controller.observe(self._elastic_signals(),
+                                                 self.clock.now)
+                if action is not None:
+                    self._begin_reconfig(action)
+
     def _tick(self) -> int:
         """One event-loop tick; returns an activity count (0 = idle).
 
@@ -758,6 +946,8 @@ class ServingSystem:
         self._tick_compute = 0.0
         self._tick_coll = {}
         act = 0
+        if self.elastic:
+            self._elastic_tick()
         if self.pipelined:
             act += self._schedule_tick()     # 1. decide + issue reads
             act += self._step_pes()          # 2. prefill compute
@@ -860,6 +1050,14 @@ class ServingSystem:
             tier_miss_bytes=sum(t.miss_bytes for t in tiers),
             tier_prefetch_bytes=sum(t.prefetch_bytes for t in tiers),
             tier_evicted_bytes=sum(t.evicted_bytes for t in tiers),
+            # --- elastic reconfiguration (zeros when elastic off) -------
+            role_changes=self.drains.n_flips,
+            role_changes_by_direction=self.drains.flips_by_direction(),
+            reconfig_drain_s=self.drains.drain_seconds(),
+            reconfig_weight_bytes=self.reconfig_weight_bytes,
+            tier_handoff_bytes=self.drains.tier_handoff_bytes(),
+            n_pe_final=len(self.pes),
+            n_de_final=len(self.des),
         )
 
     def slo_attainment(self, ttft_slo_s: float = 4.0,

@@ -35,10 +35,12 @@ import heapq
 import itertools
 import math
 from collections import defaultdict, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.intra import AttnTimeModel, PrefillWork, QuotaPacker, attn_flops
+from repro.core.autoscale import (DE_TO_PE, DrainTracker, LoadSignals,
+                                  PDController, pick_victim)
+from repro.core.intra import AttnTimeModel, PrefillWork, QuotaPacker
 from repro.core.loading import Leg, PLANS, plan_for
 from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
 from repro.core.traffic import TrafficClass
@@ -195,6 +197,24 @@ class SimConfig:
     # share; under the VL arbiter it only backlogs itself.
     net_bg_load: float = 0.0
     net_bg_chunk_bytes: float = 512e6
+    # --- elastic PE<->DE role reconfiguration (core/autoscale.py) -------
+    # With ``elastic`` the sim runs a control loop every
+    # ``reconfig_interval_s`` modelled seconds: observe per-role load,
+    # let the hysteresis PDController propose at most one role flip, and
+    # execute it via the safe drain protocol (stop admitting, finish
+    # in-flight, reload the new role's weight shard over the node's
+    # storage NIC, flip kind).  Off (the default) is event-identical to
+    # the pre-elastic simulator.
+    elastic: bool = False
+    reconfig_interval_s: float = 10.0
+    drain_policy: str = "idlest"      # idlest | rotate (victim selection)
+    reconfig_hi: float = 2.0          # pressure-ratio hysteresis band
+    reconfig_lo: float = 0.5
+    reconfig_patience: int = 2        # consecutive out-of-band intervals
+    reconfig_cooldown_s: float = 0.0
+    reconfig_idle_floor_s: float = 1e-3
+    elastic_min_pe: int = 1
+    elastic_min_de: int = 1
 
 
 class _EngineSim:
@@ -208,6 +228,7 @@ class _EngineSim:
         self.kind = kind
         self.group = group
         self.fifo: List[PrefillWork] = []
+        self.packer = None              # PEs only (set at init / role flip)
         self.active_decode: List["RoundSim"] = []
         self.resident_tokens = 0
         self.kv_capacity_tokens = 0
@@ -327,6 +348,13 @@ class Sim:
         kv_cap_bytes = cfg.node.gpu.hbm_bytes * cfg.kv_hbm_frac
         kv_cap_tokens = int(kv_cap_bytes / max(self.kv_per_token, 1)) \
             if self.kv_per_token else 1 << 30
+        self._kv_cap_tokens = kv_cap_tokens
+        self._pe_tok_rate = max(tok_rate, 1.0)
+        self._mk_packer = lambda: _SimPacker(
+            self.model,
+            AttnTimeModel(effective_flops=cfg.node.gpu.flops *
+                          cfg.node.gpu.mfu_prefill),
+            cfg.quota_s)
 
         for n in range(cfg.P):
             grp = n // npg
@@ -377,6 +405,23 @@ class Sim:
         self._de_stepping: Dict[int, bool] = {gid: False
                                               for gid in self.de_groups}
         self._sched_pending = False
+
+        # --- elastic role reconfiguration (core/autoscale.py) -------------
+        if cfg.drain_policy not in ("idlest", "rotate"):
+            raise ValueError(f"unknown drain_policy {cfg.drain_policy!r}")
+        self.drains = DrainTracker()
+        self.controller = PDController(
+            hi=cfg.reconfig_hi, lo=cfg.reconfig_lo,
+            patience=cfg.reconfig_patience,
+            cooldown_s=cfg.reconfig_cooldown_s,
+            idle_floor_s=cfg.reconfig_idle_floor_s,
+            min_pe=cfg.elastic_min_pe, min_de=cfg.elastic_min_de)
+        # role flips re-home the engine into a fresh singleton scheduler
+        # group (groups are stepped in lockstep; a flipped engine shares
+        # no step barrier with its old peers)
+        self._next_gid = itertools.count(5000)
+        self._drain_rotation = 0
+        self.reconfig_weight_bytes = 0.0
 
         # --- metrics ---------------------------------------------------------
         self.snic_samples: List[Tuple[float, int, float]] = []  # (t, node, bytes)
@@ -453,8 +498,224 @@ class Sim:
                 self.loop.after(period, bg)
 
             self.loop.after(period, bg)
+        if cfg.elastic:
+            self.loop.after(cfg.reconfig_interval_s, self._reconfig_tick)
         self.loop.run(until)
         return self
+
+    # ------------------------------------------------------------------
+    # elastic control loop (core/autoscale.py)
+    # ------------------------------------------------------------------
+    def _workload_done(self) -> bool:
+        return all(a.end_t >= 0 for a in self.agents)
+
+    def _elastic_signals(self) -> LoadSignals:
+        """One observation of the deployment, in seconds of service per
+        role — built from the same state the scheduler and step loops
+        already maintain (queue depths, FIFO backlogs, active decodes,
+        disk reading queues, link congestion, tier hits)."""
+        sched = self.sched
+        gpu = self.cfg.node.gpu
+        pe_queued = sum(r.new_tokens for r in sched.pe_queue)
+        pe_busy = 0
+        de_busy_tok = 0
+        ctxs: List[int] = []
+        for e in self.engines.values():
+            if e.kind == "pe":
+                pe_busy += sum(w.remaining for w in e.fifo)
+            else:
+                for r in e.active_decode:
+                    de_busy_tok += r.gen_left
+                    ctxs.append(r.ctx)
+        de_q_tok = 0
+        n_active = 0
+        for e in self.engines.values():
+            if e.kind == "de":
+                n_active += len(e.active_decode)
+        for q in (sched.de_global_queue, *sched.de_private.values()):
+            for r in q:
+                de_q_tok += r.gen_tokens
+                ctxs.append(r.prompt_tokens)
+        # continuous-batching decode rate per engine at the observed
+        # batch size: n tokens advance per step of
+        # (n * kv_step_bytes + weight_bytes) / effective HBM bandwidth —
+        # the weight read amortises only across the actual batch, so
+        # small batches are weight-bound (rate grows with n) and huge
+        # ones kv-bound (rate saturates)
+        n_de_now = max(sum(1 for e in self.engines.values()
+                           if e.kind == "de"), 1)
+        n_ref = max(n_active / n_de_now, 1.0)
+        ctx_ref = (sum(ctxs) / len(ctxs)) if ctxs else 1.0
+        kv_step = self.model.decode_step_bytes(ctx_ref)
+        w = self.model.active_param_bytes_resident(self.de_group_size)
+        de_rate = max(n_ref * gpu.hbm_bw * gpu.mbu_decode /
+                      max(n_ref * kv_step + w, 1.0), 1.0)
+        # disk reading backlogs, live from the per-node SNIC FIFOs (the
+        # scheduler-side read_q copies go stale between fetches); one
+        # count per (node, role) so multi-engine nodes aren't inflated
+        snic_tok_rate = max(
+            self.cfg.node.snic_bw / max(self.kv_per_token, 1), 1.0)
+        pe_rq = de_rq = 0.0
+        counted = set()
+        for st in sched.engines.values():
+            if st.draining:
+                continue
+            key = (st.node, st.kind)
+            if key in counted:
+                continue
+            counted.add(key)
+            q = self.snic[st.node].queued_bytes / max(self.kv_per_token, 1)
+            if st.kind == "pe":
+                pe_rq += q
+            else:
+                de_rq += q
+        tiers = list(self.tiers.values())
+        dram_hit = sum(t.dram_hit_bytes for t in tiers)
+        denom = dram_hit + self.snic_hit_read_bytes
+        return LoadSignals(
+            n_pe=len(sched.admitting("pe")),
+            n_de=len(sched.admitting("de")),
+            pe_queued_s=pe_queued / self._pe_tok_rate,
+            pe_busy_s=pe_busy / self._pe_tok_rate,
+            de_queued_s=de_q_tok / de_rate,
+            de_busy_s=de_busy_tok / de_rate,
+            pe_read_q_s=pe_rq / snic_tok_rate,
+            de_read_q_s=de_rq / snic_tok_rate,
+            net_congestion=self.net.congestion(),
+            dram_hit_ratio=(dram_hit / denom) if denom else 0.0,
+        )
+
+    def _reconfig_tick(self):
+        if self._workload_done():
+            return                      # let the event loop terminate
+        self._advance_drains()
+        if not self.drains.active:
+            action = self.controller.observe(self._elastic_signals(),
+                                             self.loop.now)
+            if action is not None:
+                self._begin_reconfig(action)
+        self.loop.after(self.cfg.reconfig_interval_s, self._reconfig_tick)
+
+    def _begin_reconfig(self, action: str):
+        src = "de" if action == DE_TO_PE else "pe"
+        floor = self.cfg.elastic_min_de if src == "de" \
+            else self.cfg.elastic_min_pe
+        cands = self.sched.admitting(src)
+        if len(cands) <= floor:
+            return
+
+        def load_of(st):
+            used_hbm = 0
+            if st.kind == "de":
+                used_hbm = self._kv_cap_tokens - st.free_hbm_tokens
+            return st.tok + st.read_q + used_hbm
+
+        victim = pick_victim(cands, self.cfg.drain_policy, load_of,
+                             rotation=self._drain_rotation)
+        self._drain_rotation += 1
+        self.sched.begin_drain(victim.engine)
+        # requests assigned to the victim whose read never started are
+        # handed back for reassignment (the drain must not be hostage to
+        # work blocked on the other role's capacity)
+        back = self.sched.requeue_unstarted(
+            victim.engine, [rs.req for rs in self.rounds if rs.done_t < 0])
+        if src == "de":
+            e = self.engines[victim.engine]
+            for req in back:
+                e.resident_tokens -= req.hbm_tokens
+        self.drains.begin(victim.engine, src,
+                          "pe" if src == "de" else "de", self.loop.now)
+        if back:
+            self._kick_scheduler()
+        self.loop.after(min(self.cfg.reconfig_interval_s / 8.0, 1.0),
+                        self._drain_poll)
+
+    def _drain_poll(self):
+        self._advance_drains()
+        if self.drains.active:
+            self.loop.after(min(self.cfg.reconfig_interval_s / 8.0, 1.0),
+                            self._drain_poll)
+
+    def _engine_busy(self, eid, kind) -> bool:
+        """Ground-truth in-flight check for the drain gate.  The
+        scheduler's seq/tok are overwritten by fetch reports derived
+        from the engine FIFOs, which are EMPTY while a request's KV
+        read is still in flight (PrefillWork enters the fifo only at
+        _read_done) — so a PE gate must consult the rounds themselves,
+        not just the report-refreshed counters.  DEs are covered by
+        their reservation ledger: resident_tokens is held from
+        assignment to decode completion."""
+        e = self.engines[eid]
+        if kind == "de":
+            return bool(e.active_decode) or e.resident_tokens != 0
+        return bool(e.fifo) or any(
+            rs.req.pe == eid and rs.done_t < 0 and rs.prefill_done_t < 0
+            for rs in self.rounds)
+
+    def _advance_drains(self):
+        """Second half of the drain protocol: once a draining engine's
+        in-flight lifecycle states have emptied, reload the target
+        role's weight shard over the node's storage NIC (it contends
+        with real reads, as on hardware), then flip."""
+        for eid, rec in list(self.drains.active.items()):
+            if rec.t_drained >= 0:
+                continue                # weight reload already in flight
+            if not self.sched.can_finish_drain(eid) or \
+                    self._engine_busy(eid, rec.from_kind):
+                continue
+            e = self.engines[eid]
+            self.drains.mark_drained(eid, self.loop.now)
+            # reload exactly the shard the sim's compute model has the
+            # engine hold: _pe_step/_de_step shard weights by the
+            # STATIC pe/de_group_size regardless of actual group
+            # membership, so a flipped engine (singleton scheduler
+            # group) still computes — and therefore reloads — 1/gsz of
+            # the weights.  (serving's ServingTimeModel shards by 1, so
+            # its flip charges active_param_bytes_resident(1) there.)
+            gsz = self.pe_group_size if rec.to_kind == "pe" \
+                else self.de_group_size
+            w = self.model.active_param_bytes_resident(gsz)
+            self.reconfig_weight_bytes += w
+            self.snic[e.node].enqueue(
+                w, lambda rec=rec: self._finish_flip(rec), read=True)
+
+    def _finish_flip(self, rec):
+        eid = rec.engine
+        e = self.engines[eid]
+        groups = self.pe_groups if rec.from_kind == "pe" else self.de_groups
+        groups[e.group].remove(e)
+        if not groups[e.group]:
+            del groups[e.group]
+        gid = next(self._next_gid)
+        tier = self.tiers.get(e.node)
+        # tier-resident blocks stay with the node across the flip (the
+        # DRAM tier is node-local and role-agnostic): the handoff is
+        # accounting, not movement
+        handoff = int(tier.used_bytes) if tier is not None else 0
+        e.kind, e.group = rec.to_kind, gid
+        if rec.to_kind == "pe":
+            if e.packer is None:
+                e.packer = self._mk_packer()
+            e.resident_tokens = 0
+            self.pe_groups[gid].append(e)
+            self._pe_stepping.setdefault(gid, False)
+            self.sched.finish_drain(eid, kind="pe", group=gid)
+        else:
+            e.kv_capacity_tokens = self._kv_cap_tokens
+            self.de_groups[gid].append(e)
+            self._de_stepping.setdefault(gid, False)
+            self.sched.finish_drain(eid, kind="de", group=gid,
+                                    free_hbm_tokens=self._kv_cap_tokens)
+        # the DE group topology changed: re-route queued requests
+        # against it (requests parked in an old group's private queue
+        # would otherwise never see the new group)
+        self.sched.rebalance_de_private()
+        self.drains.finish(eid, self.loop.now, tier_handoff_bytes=handoff)
+        self._kick_scheduler()
+        if rec.to_kind == "pe":
+            self._wake_pe_group(gid)
+        else:
+            self._wake_de_group(gid)
 
     # ------------------------------------------------------------------
     # agent / request lifecycle
@@ -557,8 +818,8 @@ class Sim:
                 self.tiers[node].serve(prefix, now=self.loop.now)
                 self.tiers[node].pin(prefix)
                 rs.tier_pinned = (node, prefix)
-        load_legs = [l for l in self._request_legs(req)
-                     if l.phase == "load" and l.nbytes > 0]
+        load_legs = [leg for leg in self._request_legs(req)
+                     if leg.phase == "load" and leg.nbytes > 0]
         # tier-hit legs move no new bytes (the data already sits in that
         # node's DRAM buffer): charge the accounting resource and drop
         # them from the SNIC work list
@@ -597,8 +858,8 @@ class Sim:
                 return
             finish()
             return
-        leg_sides = {("pe" if "pe_snic" in l.resources else "de")
-                     for l in snic_legs}
+        leg_sides = {("pe" if "pe_snic" in leg.resources else "de")
+                     for leg in snic_legs}
         # the blob rides the majority side's SNIC; when the tier served
         # that side's whole hit there is no leg to piggyback on, so it
         # gets its own FIFO entry (its bytes must never vanish)
@@ -685,7 +946,7 @@ class Sim:
             rs.transfer_done = True
             return
         req = rs.req
-        legs = [l for l in self._request_legs(req) if l.layerwise]
+        legs = [leg for leg in self._request_legs(req) if leg.layerwise]
         rmap = self._resmap(req)
         pending = [len(legs)]
         if not legs:
@@ -713,7 +974,8 @@ class Sim:
         self.loop.after(0.0, lambda: self._pe_step(gid))
 
     def _pe_step(self, gid: int):
-        members = self.pe_groups[gid]
+        # a role flip can dissolve the group between wake and step
+        members = self.pe_groups.get(gid, [])
         if not any(e.fifo for e in members):
             self._pe_stepping[gid] = False
             return
@@ -822,8 +1084,8 @@ class Sim:
             return
         req = rs.req
         rmap = self._resmap(req)
-        legs = [l for l in self._request_legs(req)
-                if l.phase == "decode_start"]
+        legs = [leg for leg in self._request_legs(req)
+                if leg.phase == "decode_start"]
         if not legs:
             # the basic plan writes PE HBM -> DE HBM directly (no
             # decode_start leg); the sim still stages decode start
@@ -862,7 +1124,8 @@ class Sim:
         self.loop.after(0.0, lambda: self._de_step(gid))
 
     def _de_step(self, gid: int):
-        members = self.de_groups[gid]
+        # a role flip can dissolve the group between wake and step
+        members = self.de_groups.get(gid, [])
         active = [e for e in members if e.active_decode]
         if not active:
             self._de_stepping[gid] = False
@@ -891,7 +1154,7 @@ class Sim:
                            lambda: self._de_step_done(gid, block))
 
     def _de_step_done(self, gid: int, block: int):
-        members = self.de_groups[gid]
+        members = self.de_groups.get(gid, [])
         persist_bytes: Dict[int, int] = defaultdict(int)
         for e in members:
             done = []
@@ -1096,6 +1359,17 @@ class Sim:
             net_kv_bytes=self.net.bytes_by_class.get(
                 TrafficClass.KV_TRANSFER, 0.0),
             net_contended_joins=self.net.contended_joins,
+            # --- elastic reconfiguration (core/autoscale.py; zeros when
+            # elastic is off — the static-topology configuration) -------
+            role_changes=self.drains.n_flips,
+            role_changes_by_direction=self.drains.flips_by_direction(),
+            reconfig_drain_s=self.drains.drain_seconds(),
+            reconfig_weight_bytes=self.reconfig_weight_bytes,
+            tier_handoff_bytes=self.drains.tier_handoff_bytes(),
+            n_pe_final=sum(1 for e in self.engines.values()
+                           if e.kind == "pe"),
+            n_de_final=sum(1 for e in self.engines.values()
+                           if e.kind == "de"),
         )
 
 

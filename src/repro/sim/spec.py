@@ -9,9 +9,7 @@ Two built-in hardware profiles:
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
-from typing import Optional
+from dataclasses import dataclass, field
 
 from repro.configs.base import ModelConfig
 from repro.core.analysis import ClusterSpec

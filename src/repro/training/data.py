@@ -12,11 +12,10 @@ on the same batch sequence, which the fault-tolerance test asserts.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
-from repro.sim.traces import Trajectory, generate_dataset
+from repro.sim.traces import generate_dataset
 
 
 @dataclass

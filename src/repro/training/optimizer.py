@@ -7,9 +7,8 @@ what lets the llama4-maverick train_4k cell fit 16 GB/chip (DESIGN.md §4
 """
 from __future__ import annotations
 
-import math
 from functools import partial
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +108,6 @@ def adafactor_update(params, grads, state, *, lr, decay=0.8, eps=1e-30,
                                              p.astype(jnp.float32))
         return newp.astype(p.dtype), news
 
-    is_state_leaf = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
     pairs = jax.tree.map(upd, params, grads, state["fac"],
                          is_leaf=lambda x: hasattr(x, "ndim"))
     # pairs has tuples at param leaves

@@ -9,8 +9,6 @@ this way — DESIGN.md §4).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -17,6 +17,20 @@ import jax
 import pytest
 
 
+def pytest_report_header(config):
+    """Which property-test arm is active: the real hypothesis (CI, with
+    shrinking) or the deterministic no-dep stub (hermetic containers).
+    Asserting this in the header makes a CI run that silently fell back
+    to the stub visible in its logs."""
+    import hypothesis
+
+    if getattr(hypothesis, "__stub__", False):
+        return ("property tests: hypothesis STUB "
+                "(tests/_hypothesis_stub.py — deterministic fallback)")
+    return (f"property tests: hypothesis {hypothesis.__version__} "
+            f"(real shrinking)")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

@@ -1,7 +1,6 @@
 """Bottleneck-free analysis (paper §4.2) — exact paper numbers + properties."""
 import math
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.analysis import (ClusterSpec, bottleneck_free_range,

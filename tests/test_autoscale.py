@@ -1,0 +1,397 @@
+"""Elastic PE<->DE reconfiguration: controller, drain protocol, flips.
+
+The drain protocol's contract (ISSUE: stop admitting, finish in-flight
+lifecycle states, hand off tier-resident blocks, flip kind) is pinned
+here at three layers: the PDController/DrainTracker units, the
+scheduler's begin/finish_drain bookkeeping, and the simulator/serving
+runtimes executing real flips — including the serving runtime's
+bit-identical-generation invariant and exactly-once tier-pin release.
+"""
+import pytest
+
+from repro.core.autoscale import (DE_TO_PE, PE_TO_DE, DrainTracker,
+                                  LoadSignals, PDController, pick_victim)
+from repro.core.scheduler import Request, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# PDController
+# ---------------------------------------------------------------------------
+
+
+def _sig(pe_s, de_s, n_pe=2, n_de=2):
+    return LoadSignals(n_pe=n_pe, n_de=n_de,
+                       pe_queued_s=pe_s, pe_busy_s=0.0,
+                       de_queued_s=de_s, de_busy_s=0.0)
+
+
+def test_controller_dead_band_no_action():
+    c = PDController(hi=2.0, lo=0.5, patience=1)
+    for _ in range(10):
+        assert c.observe(_sig(1.0, 1.0), now=0.0) is None
+    assert c.n_proposed == 0
+
+
+def test_controller_patience_and_directions():
+    c = PDController(hi=2.0, lo=0.5, patience=2)
+    assert c.observe(_sig(10.0, 1.0), now=0.0) is None   # streak 1
+    assert c.observe(_sig(10.0, 1.0), now=1.0) == DE_TO_PE
+    # streak resets after an action
+    assert c.observe(_sig(1.0, 10.0), now=2.0) is None
+    assert c.observe(_sig(1.0, 10.0), now=3.0) == PE_TO_DE
+
+
+def test_controller_streak_resets_inside_band():
+    c = PDController(hi=2.0, lo=0.5, patience=2)
+    assert c.observe(_sig(10.0, 1.0), now=0.0) is None
+    assert c.observe(_sig(1.0, 1.0), now=1.0) is None    # back in band
+    assert c.observe(_sig(10.0, 1.0), now=2.0) is None   # streak restarts
+    assert c.observe(_sig(10.0, 1.0), now=3.0) == DE_TO_PE
+
+
+def test_controller_cooldown_blocks_second_action():
+    c = PDController(hi=2.0, lo=0.5, patience=1, cooldown_s=10.0)
+    assert c.observe(_sig(10.0, 1.0), now=0.0) == DE_TO_PE
+    assert c.observe(_sig(10.0, 1.0), now=5.0) is None   # cooling down
+    assert c.observe(_sig(10.0, 1.0), now=11.0) == DE_TO_PE
+
+
+def test_controller_respects_role_floors():
+    c = PDController(hi=2.0, lo=0.5, patience=1, min_pe=1, min_de=1)
+    assert c.observe(_sig(10.0, 1.0, n_de=1), now=0.0) is None
+    assert c.observe(_sig(0.1, 10.0, n_pe=1), now=1.0) is None
+
+
+def test_controller_idle_floor_absorbs_noise():
+    c = PDController(hi=2.0, lo=0.5, patience=1, idle_floor_s=1e-3)
+    # both sides idle: ratio undefined, no evidence either way
+    assert c.observe(_sig(1e-5, 0.0), now=0.0) is None
+    assert c.n_proposed == 0
+    # pe side real, de side idle: infinite ratio => more PEs
+    assert c.observe(_sig(1.0, 0.0), now=1.0) == DE_TO_PE
+
+
+# ---------------------------------------------------------------------------
+# DrainTracker / pick_victim
+# ---------------------------------------------------------------------------
+
+
+def test_drain_tracker_lifecycle_and_accounting():
+    t = DrainTracker()
+    rec = t.begin((0, 0), "de", "pe", now=1.0)
+    with pytest.raises(AssertionError):
+        t.begin((0, 0), "de", "pe", now=1.5)     # one drain per engine
+    with pytest.raises(AssertionError):
+        t.finish((0, 0), now=2.0)                # flip before drained
+    t.mark_drained((0, 0), now=3.0)
+    t.finish((0, 0), now=5.0, tier_handoff_bytes=128)
+    assert rec.t_drained == 3.0 and rec.t_flip == 5.0
+    assert t.n_flips == 1
+    assert t.drain_seconds() == pytest.approx(4.0)
+    assert t.flips_by_direction() == {"de->pe": 1, "pe->de": 0}
+    assert t.tier_handoff_bytes() == 128
+    assert not t.active
+
+
+def test_pick_victim_policies():
+    class E:
+        def __init__(self, eid, load):
+            self.engine = eid
+            self.load = load
+
+    es = [E((0, 0), 5), E((1, 0), 1), E((2, 0), 9)]
+    assert pick_victim(es, "idlest", lambda e: e.load) is es[1]
+    assert pick_victim(es, "rotate", lambda e: e.load, rotation=2) is es[2]
+    assert pick_victim(es, "rotate", lambda e: e.load, rotation=3) is es[0]
+    with pytest.raises(ValueError):
+        pick_victim(es, "bogus", lambda e: e.load)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler drain protocol
+# ---------------------------------------------------------------------------
+
+
+def _sched(n_pe=2, n_de=2):
+    s = Scheduler(alpha=1 << 30, beta=1 << 30)
+    for i in range(n_pe):
+        s.register_engine((i, 0), node=i, kind="pe", group=0)
+    for j in range(n_de):
+        st = s.register_engine((n_pe + j, 0), node=n_pe + j, kind="de",
+                               group=1000 + j)
+        st.free_hbm_tokens = 10000
+    return s
+
+
+def _req(rid, cached=0, new=64, gen=16, arrival=0.0):
+    return Request(rid=rid, cached_tokens=cached, new_tokens=new,
+                   gen_tokens=gen, arrival=arrival)
+
+
+def test_draining_engine_never_accepts_new_admissions():
+    s = _sched()
+    s.begin_drain((0, 0))
+    s.begin_drain((2, 0))
+    for i in range(6):
+        s.submit(_req(i))
+    for a in s.on_pe_fetch(0):
+        assert a.engine != (0, 0)
+    for gid in list(s.groups("de")):
+        for a in s.on_de_fetch(gid):
+            assert a.engine != (2, 0)
+    # phase 1 must not have parked anything in the drained group's queue
+    assert not s.de_private[1000]
+
+
+def test_begin_drain_requeues_fully_drained_groups_private_queue():
+    s = _sched(n_de=1)                           # single singleton DE group
+    for i in range(3):
+        s.submit(_req(i))
+    s.de_phase1()
+    assert len(s.de_private[1000]) == 3
+    s.begin_drain((2, 0))
+    assert not s.de_private[1000]
+    assert len(s.de_global_queue) == 3           # order-preserved requeue
+    assert [r.rid for r in s.de_global_queue] == [0, 1, 2]
+
+
+def test_requeue_unstarted_hands_back_only_unread_requests():
+    s = _sched()
+    rs = [_req(i, cached=64, arrival=float(i)) for i in range(3)]
+    for r in rs:
+        s.submit(r)
+    asg = s.on_pe_fetch(0)
+    assert len(asg) == 3
+    victim = rs[0].pe
+    st = s.engines[victim]
+    mine = [r for r in rs if r.pe == victim]
+    # one of the victim's requests has started its read: it must stay
+    for r in rs:
+        if r.de is None:
+            r.de = (2, 0)
+    started = mine[0]
+    s.choose_read_path(started)
+    tok0, seq0 = st.tok, st.seq
+    s.begin_drain(victim)
+    back = s.requeue_unstarted(victim, rs)
+    assert started not in back
+    assert all(r.pe is None for r in back)
+    assert st.tok == tok0 - sum(r.prompt_tokens for r in back)
+    assert st.seq == seq0 - len(back)
+    # handed-back requests rejoin the queue in submission order
+    assert [r.rid for r in s.pe_queue] == sorted(r.rid for r in back)
+
+
+def test_pe_de_pe_round_trip_restores_scheduler_state():
+    s = _sched()
+    snap = {eid: (st.kind, st.group, st.free_hbm_tokens, st.draining)
+            for eid, st in s.engines.items()}
+    groups_snap = {g: list(es) for g, es in s._groups.items()}
+    eid = (0, 0)
+    s.begin_drain(eid)
+    assert s.can_finish_drain(eid)
+    s.finish_drain(eid, kind="de", group=2000, free_hbm_tokens=5000)
+    assert s.engines[eid].kind == "de"
+    assert eid in s.groups("de")[2000]
+    assert s.de_private[2000] is not None
+    s.begin_drain(eid)
+    s.finish_drain(eid, kind="pe", group=0)
+    assert {eid_: (st.kind, st.group, st.free_hbm_tokens, st.draining)
+            for eid_, st in s.engines.items()} == snap
+    assert {g: list(es) for g, es in s._groups.items()
+            if es} == groups_snap
+    assert 2000 not in s._groups                 # empty group dropped
+
+
+def test_finish_drain_refuses_inflight_engine():
+    s = _sched()
+    s.submit(_req(0))
+    s.on_pe_fetch(0)
+    busy = next(st.engine for st in s.engines.values()
+                if st.kind == "pe" and st.tok > 0)
+    s.begin_drain(busy)
+    assert not s.can_finish_drain(busy)
+    with pytest.raises(AssertionError):
+        s.finish_drain(busy, kind="de", group=2000)
+
+
+def test_choose_read_path_steers_away_from_draining_side():
+    s = _sched()
+    r = _req(0, cached=100)
+    r.pe, r.de = (0, 0), (2, 0)
+    s.begin_drain((2, 0))
+    assert s.choose_read_path(r) == "pe"
+    s2 = _sched()
+    r2 = _req(1, cached=100)
+    r2.pe, r2.de = (0, 0), (2, 0)
+    s2.begin_drain((0, 0))
+    assert s2.choose_read_path(r2) == "de"
+
+
+# ---------------------------------------------------------------------------
+# simulator: the control loop executes real flips
+# ---------------------------------------------------------------------------
+
+
+def _two_phase_sim(elastic, drain_policy="idlest"):
+    from dataclasses import replace
+
+    from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
+    from repro.sim.traces import Round, Trajectory
+
+    trajs = [Trajectory(i, [Round(4096, 8)]) for i in range(24)] + \
+            [Trajectory(100 + i, [Round(64, 512)]) for i in range(60)]
+    arrivals = [0.0] * 24 + [20.0] * 60
+    cfg = SimConfig(node=replace(HOPPER_NODE, g=1), model=DS_660B,
+                    P=2, D=2, mode="dualpath", nodes_per_pe_group=1,
+                    nodes_per_de_group=1, kv_hbm_frac=0.04,
+                    elastic=elastic, drain_policy=drain_policy,
+                    reconfig_interval_s=4.0, reconfig_patience=2)
+    return Sim(cfg, trajs).run(arrivals=arrivals)
+
+
+def test_sim_elastic_flips_and_finishes_everything():
+    sim = _two_phase_sim(elastic=True)
+    r = sim.results()
+    assert r["finished_agents"] == 84
+    assert r["role_changes"] >= 1
+    assert r["reconfig_drain_s"] > 0
+    assert r["reconfig_weight_bytes"] > 0
+    assert r["n_pe_final"] + r["n_de_final"] == 4
+    # drain log is consistent: begin <= drained <= flip for every record
+    for rec in sim.drains.log:
+        assert rec.t_begin <= rec.t_drained <= rec.t_flip
+    # scheduler state settled: nothing draining, no stranded queues
+    assert not sim.drains.active
+    assert all(not st.draining for st in sim.sched.engines.values())
+    assert not sim.sched.pe_queue and not sim.sched.de_global_queue
+
+
+def test_sim_elastic_off_reports_zero_reconfiguration():
+    sim = _two_phase_sim(elastic=False)
+    r = sim.results()
+    assert r["finished_agents"] == 84
+    assert r["role_changes"] == 0
+    assert r["reconfig_drain_s"] == 0
+    assert r["n_pe_final"] == 2 and r["n_de_final"] == 2
+
+
+def test_sim_rotate_drain_policy_runs():
+    sim = _two_phase_sim(elastic=True, drain_policy="rotate")
+    r = sim.results()
+    assert r["finished_agents"] == 84
+    assert r["role_changes"] >= 1
+
+
+def test_pe_drain_waits_for_inflight_read():
+    """The PE drain gate must consult the rounds, not just the fetch
+    reports: scheduler seq/tok are report-derived from the engine FIFO,
+    which is EMPTY while a request's KV read is still in flight, so a
+    report-only gate would flip a PE mid-read and strand the
+    PrefillWork on a DE engine."""
+    from dataclasses import replace
+
+    from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
+    from repro.sim.traces import Round, Trajectory
+
+    # storage slow enough that round-2 hit reads stay in flight for
+    # many seconds; small weights so the reload (same slow SNIC)
+    # doesn't dominate the run
+    node = replace(HOPPER_NODE, g=1, snic_bw=1e6)
+    model = replace(DS_660B, total_param_bytes=2e6,
+                    active_param_bytes=2e6)
+    trajs = [Trajectory(i, [Round(256, 8), Round(256, 8)])
+             for i in range(4)]
+    cfg = SimConfig(node=node, model=model, P=2, D=1, mode="dualpath",
+                    nodes_per_pe_group=1, nodes_per_de_group=1)
+    sim = Sim(cfg, trajs)
+    box = {}
+
+    def inject():
+        inflight = [rs for rs in sim.rounds
+                    if rs.req.read_path is not None
+                    and rs.read_done_t < 0 and rs.req.pe is not None]
+        assert inflight, "expected a KV read in flight at the probe time"
+        eid = box["eid"] = inflight[0].req.pe
+        sim.sched.begin_drain(eid)
+        sim.drains.begin(eid, "pe", "de", sim.loop.now)
+        sim._advance_drains()
+        # the read is in flight and the fifo empty: reports say idle,
+        # the gate must still hold the drain open
+        assert sim.drains.active[eid].t_drained < 0
+        sim._drain_poll()
+
+    sim.loop.at(6.0, inject)
+    sim.run()
+    # ...and once the in-flight work completed, the flip went through
+    # and the whole workload still finished
+    eid = box["eid"]
+    assert sim.engines[eid].kind == "de"
+    assert sim.drains.n_flips == 1
+    assert all(a.end_t >= 0 for a in sim.agents)
+
+
+def test_sim_rejects_unknown_drain_policy():
+    from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
+
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
+                    drain_policy="bogus")
+    with pytest.raises(ValueError):
+        Sim(cfg, [])
+
+
+# ---------------------------------------------------------------------------
+# serving runtime: live flips, bit-identical generation, tier pins
+# ---------------------------------------------------------------------------
+
+
+def test_serving_elastic_identity_and_tier_pin_release():
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import ServingSystem
+    from repro.serving.events import EngineLifecycle
+    from repro.sim.spec import REDUCED_TEST_NODE
+    from repro.sim.traces import Round, Trajectory
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # two rounds per prefill-phase session so the second round carries a
+    # trie hit (tier pins are taken on the read path)
+    trajs = [Trajectory(i, [Round(48, 1), Round(8, 1)]) for i in range(3)] \
+        + [Trajectory(10 + i, [Round(4, 16)]) for i in range(3)]
+    arrivals = [0.0] * 3 + [1.5] * 3
+
+    def run(elastic):
+        sys_ = ServingSystem(cfg, params, n_pe=2, n_de=2, block_tokens=16,
+                             max_seq=96, de_slots=1, seed=0, pipelined=True,
+                             node=REDUCED_TEST_NODE,
+                             dram_tier_bytes=64e3,
+                             elastic=elastic, reconfig_interval_s=0.05,
+                             reconfig_patience=2,
+                             reconfig_idle_floor_s=1e-4)
+        sessions = sys_.run_online(trajs, arrivals)
+        return sys_, [s.context for s in sessions]
+
+    sys_e, toks_e = run(elastic=True)
+    sys_s, toks_s = run(elastic=False)
+    # a role flip may change timing, never generation
+    assert toks_e == toks_s
+    st = sys_e.stats()
+    assert st["role_changes"] >= 1
+    assert st["reconfig_drain_s"] > 0
+    assert sys_s.stats()["role_changes"] == 0
+    # every tier pin taken during draining/flipping was released
+    # exactly once: nothing stays pinned after the workload drains
+    for tier in sys_e.tiers.values():
+        assert tier.pinned_bytes() == 0
+    # engines settled back to ACTIVE; the engine maps match the
+    # scheduler's view of the final topology
+    assert all(lc == EngineLifecycle.ACTIVE
+               for lc in sys_e.engine_lifecycle.values())
+    assert st["n_pe_final"] == len(sys_e.pes)
+    assert st["n_de_final"] == len(sys_e.des)
+    assert set(sys_e.pes) == {st_.engine for st_ in
+                              sys_e.sched.engines.values()
+                              if st_.kind == "pe"}

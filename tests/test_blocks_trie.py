@@ -1,6 +1,5 @@
 """Block layouts (§A.5) + trie store properties."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -1,7 +1,6 @@
 """Loop-aware HLO metrics parser (the roofline's data source)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline.hlo import parse_hlo_metrics, shape_bytes, \

@@ -1,5 +1,4 @@
 """Intra-engine compute-quota packing (§6.2)."""
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.engines import kvio
-from repro.models import forward, init_decode_state, init_params
+from repro.models import init_decode_state, init_params
 from repro.models.model import append_step
 
 KEY = jax.random.PRNGKey(0)
@@ -37,8 +37,6 @@ def test_serialize_roundtrip(arch):
         if a.ndim >= 3 and a.shape[-2:] == b_.shape[-2:]:
             pass
     axes = kvio.batch_axes_of_state(cfg)
-    sub1 = kvio.slot_get(st, axes, 0)
-    sub2 = kvio.slot_get(st2, axes, 0)
     kv1 = kvio.serialize_kv(cfg, st2, 0, 0, s)
     np.testing.assert_array_equal(kv, kv1)
 

@@ -1,8 +1,6 @@
 """Loading plans (Fig. 4) must reproduce the §4.2 per-resource coefficients."""
-import math
 from fractions import Fraction
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.loading import (basic_plan, de_read_plan, oracle_plan,
@@ -57,9 +55,9 @@ def test_basic_plan_pe_only_storage():
 
 def test_layerwise_legs_marked():
     plan = pe_read_plan(1000, 10, 5)
-    lw = [l.name for l in plan if l.layerwise]
+    lw = [leg.name for leg in plan if leg.layerwise]
     assert "pe_buf_to_pe_hbm" in lw and "pe_hbm_to_de_buf" in lw
-    assert all(not l.layerwise for l in plan if l.phase == "load")
+    assert all(not leg.layerwise for leg in plan if leg.phase == "load")
 
 
 # ---------------------------------------------------------------------------
@@ -111,11 +109,11 @@ def test_split_plan_load_legs_occupy_both_snics():
     """A genuine split must put one load leg on each side's storage NIC
     (the two legs the simulator serves concurrently)."""
     plan = split_read_plan(1000, 10, 5, 400)
-    load = [l for l in plan if l.phase == "load"]
+    load = [leg for leg in plan if leg.phase == "load"]
     assert len(load) == 2
-    snics = {r for l in load for r in l.resources if r.endswith("snic")}
+    snics = {r for leg in load for r in leg.resources if r.endswith("snic")}
     assert snics == {"pe_snic", "de_snic"}
-    assert sum(l.nbytes for l in load) == 1000
+    assert sum(leg.nbytes for leg in load) == 1000
 
 
 def test_plan_for_dispatch():

@@ -15,11 +15,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, EXTRA_ARCH_IDS, all_configs, get_config
+from repro.configs import ARCH_IDS, EXTRA_ARCH_IDS, get_config
 from repro.models import (count_active_params_analytic,
                           count_params_analytic, decode_step, forward,
                           init_decode_state, init_params)
-from repro.models.model import append_step, lm_loss
+from repro.models.model import append_step
 from repro.training import make_train_step
 
 KEY = jax.random.PRNGKey(0)

@@ -314,7 +314,8 @@ def test_finite_network_preserves_plan_byte_accounting():
     for rs in sim.rounds:
         if rs.done_t < 0 or rs.req.read_path is None:
             continue
-        legs = [l for l in sim._request_legs(rs.req) if l.phase != "decode"]
+        legs = [leg for leg in sim._request_legs(rs.req)
+                if leg.phase != "decode"]
         exp = {k: v for k, v in resource_bytes(legs).items() if v}
         got = {k: v for k, v in rs.charged.items() if v}
         assert got == exp, (rs.req.rid, got, exp)

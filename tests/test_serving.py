@@ -69,7 +69,6 @@ def test_generation_with_cache_reuse_matches_reference(mode):
     assert sessions[0].rounds_done == 3
     ref = reference_generate(cfg, params, rounds,
                              np.random.default_rng(1000))
-    got = []
     ctx = sessions[0].context
     # reconstruct per-round gens from the final context? easier: compare
     # final context suffix — instead regenerate via the recorded sessions

@@ -1,9 +1,7 @@
 """Discrete-event simulator: paper-claim directionality + invariants."""
 import numpy as np
-import pytest
 
-from repro.core.analysis import ClusterSpec, link_utilisation
-from repro.sim import (DS_660B, HOPPER_NODE, QWEN25_32B, Sim, SimConfig,
+from repro.sim import (DS_660B, HOPPER_NODE, Sim, SimConfig,
                        generate_dataset)
 
 
@@ -156,8 +154,8 @@ def test_sim_charges_match_loading_plans_to_the_byte():
         for rs in sim.rounds:
             if rs.done_t < 0 or rs.req.read_path is None:
                 continue
-            legs = [l for l in sim._request_legs(rs.req)
-                    if l.phase != "decode"]     # persists aggregate per block
+            legs = [leg for leg in sim._request_legs(rs.req)
+                    if leg.phase != "decode"]     # persists aggregate per block
             exp = {k: v for k, v in resource_bytes(legs).items() if v}
             got = {k: v for k, v in rs.charged.items() if v}
             assert got == exp, (split, tier, rs.req.rid, got, exp)

@@ -3,11 +3,8 @@ import os
 import subprocess
 import sys
 
-import jax
-import numpy as np
-import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config
+from repro.configs import ARCH_IDS, cells_for, get_config
 from repro.core.analysis import ClusterSpec, is_bottleneck_free
 from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig, generate_dataset
 

@@ -16,7 +16,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.blocks import BlockLayout
-from repro.core.loading import (de_read_plan, pe_read_plan, plan_for,
+from repro.core.loading import (plan_for,
                                 resource_bytes, split_read_plan,
                                 tiered_read_plan)
 from repro.core.scheduler import Request, Scheduler
@@ -95,7 +95,7 @@ def test_tiered_plan_conserves_and_matches_split_plan(hit, miss, gen, data):
     rb = resource_bytes(plan)
     # load-phase conservation, byte-exact (the de_snic resource also
     # carries decode-phase persists, so restrict to load legs)
-    load = resource_bytes([l for l in plan if l.phase == "load"])
+    load = resource_bytes([leg for leg in plan if leg.phase == "load"])
     storage = {k: v for k, v in load.items()
                if k in ("pe_snic", "de_snic", "pe_tier", "de_tier")}
     assert sum(storage.values()) == hit
@@ -305,7 +305,7 @@ def test_scheduler_tier_with_split_reads_water_fills_remainder():
     s = _sched(split_reads=True)
     r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
     r.pe, r.de = (0, 0), (1, 0)
-    path = s.choose_read_path(r, tier_tokens={"pe": 40, "de": 0})
+    s.choose_read_path(r, tier_tokens={"pe": 40, "de": 0})
     assert r.dram_side == "pe" and r.dram_tokens == 40
     tok = r.read_tokens_by_side()
     assert tok["pe"] + tok["de"] == 60          # remainder water-filled

@@ -1,8 +1,7 @@
 """CNIC-centric traffic manager (§5): VL arbiter + doorbell batching."""
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.traffic import (DEFAULT_ARBITER, SubmitCostModel,
+from repro.core.traffic import (SubmitCostModel,
                                 TrafficClass, TrafficManager,
                                 VLArbiterConfig, allocate_bandwidth)
 

@@ -84,7 +84,8 @@ def test_wsd_schedule():
 
 def test_pipeline_checkpointable():
     p1 = SyntheticLM(100, 2, 8, seed=3)
-    a = p1.next_batch(); b = p1.next_batch()
+    p1.next_batch()
+    b = p1.next_batch()
     p2 = SyntheticLM(100, 2, 8, seed=3)
     p2.load_state_dict(dict(seed=3, step=1))
     np.testing.assert_array_equal(p2.next_batch(), b)
