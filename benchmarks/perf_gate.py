@@ -58,6 +58,14 @@ DIRECTIONS = {
                     "static_best_tput_tok_s": 0,
                     "elastic_gain": +1, "role_changes": 0,
                     "reconfig_drain_s": -1},
+    "fig_resilience": {"slo_faulted_hedged_elastic": +1,
+                       "slo_faulted_nohedge_static": 0,
+                       "resilience_slo_gain": +1,
+                       "slo_straggle_hedged": +1,
+                       "straggle_ttft_p99_hedged_s": -1,
+                       "straggle_ttft_p99_nohedge_s": 0,
+                       "sim_hedged_reads": 0,
+                       "sim_recovered_rounds": 0},
 }
 
 #: absolute slack added to every band, so near-zero baselines gate on

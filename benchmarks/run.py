@@ -25,9 +25,10 @@ def suite():
     from benchmarks import (fig7_offline, fig8_pd_ratio, fig9_append_gen,
                             fig10_online, fig12_ablation, fig13_balance,
                             fig_elastic, fig_interference,
-                            fig_online_serving, fig_tiered_prefetch,
-                            kernel_bench, micro_submit, roofline,
-                            table1_cache_compute, table3_scale)
+                            fig_online_serving, fig_resilience,
+                            fig_tiered_prefetch, kernel_bench,
+                            micro_submit, roofline, table1_cache_compute,
+                            table3_scale)
     return {
         "table1": table1_cache_compute.run,
         "micro_submit": micro_submit.run,
@@ -42,6 +43,7 @@ def suite():
         "fig_online_serving": fig_online_serving.run,
         "fig_interference": fig_interference.run,
         "fig_elastic": fig_elastic.run,
+        "fig_resilience": fig_resilience.run,
         "table3": table3_scale.run,
         "roofline": roofline.run,
     }
@@ -73,6 +75,11 @@ def run_smoke_all(only=None) -> dict:
         metrics = fn(smoke=True)
         out[name] = dict(metrics or {})
         print(f"{name} smoke: PASS", file=sys.stderr)
+        try:        # drop compiled programs between benchmarks: a long
+            import jax      # single-process run OOMs the CPU LLVM JIT
+            jax.clear_caches()  # (same guard as tests/conftest.py)
+        except ImportError:
+            pass
     return out
 
 

@@ -189,6 +189,13 @@ class DrainTracker:
         self.log.append(rec)
         return rec
 
+    def abort(self, engine: EngineId) -> Optional[DrainRecord]:
+        """Cancel an in-progress drain without a flip — the victim died
+        (sim/faults.py fail-stop) before the protocol completed.  The
+        record is dropped, not logged: an aborted drain is not a role
+        change and must not count toward n_flips/drain_seconds."""
+        return self.active.pop(engine, None)
+
     # ------------------------------------------------------------------
     @property
     def n_flips(self) -> int:

@@ -192,6 +192,67 @@ def tiered_read_plan(hit_bytes: int, miss_bytes: int, gen_bytes: int,
     return [leg for leg in legs if leg.nbytes > 0]
 
 
+def rebalance_remainder(pe_snic_bytes: int, de_snic_bytes: int,
+                        from_side: str, remaining_bytes: int,
+                        moved_bytes: int) -> tuple:
+    """Hedged split read: re-water-fill part of one side's *remainder*
+    onto the other side mid-read, byte-exactly.
+
+    A split read was issued with SNIC shares ``(pe_snic_bytes,
+    de_snic_bytes)``; the ``from_side`` leg has straggled with
+    ``remaining_bytes`` still unserved, and the hedging policy wants to
+    move ``moved_bytes`` of that remainder to the healthy side.  This is
+    the pure arithmetic: the move is clamped to what is actually movable
+    (never more than the remainder, never more than the side's share —
+    bytes already served stay where they were served) and the new
+    partition is returned.
+
+    Invariants (property-tested in tests/test_loading.py):
+
+    * conservation — ``new_pe + new_de == pe + de`` exactly;
+    * the rebalanced fraction ``moved / remainder`` lies in [0, 1];
+    * only SNIC shares move — DRAM-tier hit bytes are not an input, so a
+      tier-hit leg can never be re-charged to a storage NIC.
+    """
+    assert from_side in ("pe", "de"), from_side
+    assert pe_snic_bytes >= 0 and de_snic_bytes >= 0
+    assert remaining_bytes >= 0
+    src = pe_snic_bytes if from_side == "pe" else de_snic_bytes
+    assert remaining_bytes <= src, (remaining_bytes, src)
+    moved = max(0, min(int(moved_bytes), int(remaining_bytes)))
+    if from_side == "pe":
+        new = (pe_snic_bytes - moved, de_snic_bytes + moved)
+    else:
+        new = (pe_snic_bytes + moved, de_snic_bytes - moved)
+    assert new[0] + new[1] == pe_snic_bytes + de_snic_bytes
+    assert new[0] >= 0 and new[1] >= 0
+    return new
+
+
+def hedge_water_fill(remainder: int, severity: float,
+                     healthy_backlog: int = 0) -> int:
+    """How much of a straggling leg's remainder to move to the healthy
+    side: the water-fill that equalises both sides' completion.
+
+    The straggler serves at ``1/severity`` of the healthy side's rate
+    (``severity`` >= 1 is the observed service-time ratio); the healthy
+    side already has ``healthy_backlog`` units queued.  Moving ``x``
+    equalises ``healthy_backlog + x == (remainder - x) * severity``::
+
+        x = (severity * remainder - healthy_backlog) / (1 + severity)
+
+    clamped to ``[0, remainder]``.  Monotone non-decreasing in
+    ``severity`` (d/ds = (remainder + backlog)/(1+s)^2 > 0) and exactly
+    0 when the straggler is healthy and unloaded (s=1, backlog >=
+    remainder) — both property-tested in tests/test_scheduler.py.
+    Units are caller's choice (bytes or tokens), as long as they match.
+    """
+    assert remainder >= 0 and healthy_backlog >= 0
+    assert severity >= 1.0, severity
+    x = (severity * remainder - healthy_backlog) / (1.0 + severity)
+    return max(0, min(int(x), int(remainder)))
+
+
 PLANS = {
     "pe": pe_read_plan,
     "de": de_read_plan,

@@ -550,14 +550,114 @@ class Scheduler:
         return req.read_path
 
     # ------------------------------------------------------------------
+    # hedged split reads (fault tolerance — sim/faults.py)
+    # ------------------------------------------------------------------
+    def rebalance_remainder(self, req: Request, from_side: str,
+                            remaining_tokens: int, severity: float,
+                            healthy_backlog_tokens: int = 0) -> int:
+        """Mid-read hedge: one side's in-flight read leg has straggled
+        (service-time ratio ``severity`` >= 1 vs the healthy side) with
+        ``remaining_tokens`` of its SNIC share still unserved; move the
+        water-filled portion of that remainder to the healthy side.
+
+        This is ``choose_read_path`` re-run over the *remainder*: the
+        moved share is ``loading.hedge_water_fill`` (equalise both
+        sides' completion given the healthy side's current backlog),
+        applied through an explicit token partition so bytes already
+        served stay charged where they were served.  Accounting moved
+        atomically with the partition:
+
+        * ``req.snic_tokens`` becomes explicit (conserving the per-side
+          sum exactly — only SNIC tokens move, tier tokens never);
+        * the disk reading queues transfer exactly the moved charge
+          (``from`` releases, ``to`` acquires), so the later
+          ``on_read_done`` calls — which release each side's *current*
+          share — balance to zero;
+        * the (read_path, read_split) majority view is re-derived for
+          ``plan_for``.
+
+        Returns the moved token count (0 = no hedge; the caller skips
+        the physical re-enqueue).
+        """
+        assert from_side in ("pe", "de"), from_side
+        to_side = "de" if from_side == "pe" else "pe"
+        tokens = req.read_tokens_by_side()
+        # never move bytes that were not going to a SNIC: the remainder
+        # is capped by the straggling side's SNIC share (tier-hit tokens
+        # are not in `tokens` at all, so they cannot be re-charged)
+        rem = max(0, min(int(remaining_tokens), tokens[from_side]))
+        from repro.core.loading import hedge_water_fill
+        moved = hedge_water_fill(rem, max(severity, 1.0),
+                                 max(int(healthy_backlog_tokens), 0))
+        if moved <= 0:
+            return 0
+        snic = {from_side: tokens[from_side] - moved,
+                to_side: tokens[to_side] + moved}
+        req.snic_tokens = snic
+        # dram_side/dram_tokens untouched: tier hits stay tier hits
+        from_eng = req.pe if from_side == "pe" else req.de
+        to_eng = req.pe if to_side == "pe" else req.de
+        st_from = self.engines.get(from_eng)
+        if st_from is not None:
+            st_from.read_q = max(0, st_from.read_q - moved)
+        st_to = self.engines.get(to_eng)
+        if st_to is not None:
+            st_to.read_q += moved
+        # re-derive the majority view (same arithmetic as
+        # _finalise_partition, without re-charging the queues)
+        t = req.dram_tokens
+        pe_total = snic["pe"] + (t if req.dram_side == "pe" else 0)
+        de_total = snic["de"] + (t if req.dram_side == "de" else 0)
+        if pe_total != de_total:
+            req.read_path = "pe" if pe_total > de_total else "de"
+        elif req.read_path not in ("pe", "de"):
+            req.read_path = to_side
+        major = pe_total if req.read_path == "pe" else de_total
+        if req.cached_tokens:
+            req.read_split = major / req.cached_tokens
+        return moved
+
+    # ------------------------------------------------------------------
+    # engine failure (fail-stop — sim/faults.py)
+    # ------------------------------------------------------------------
+    def fail_engine(self, engine: EngineId) -> EngineState:
+        """Involuntary, immediate removal — the fail-stop analogue of
+        the begin_drain/finish_drain pair.  The engine stops admitting
+        NOW, its outstanding charges are forfeited (the runtime re-homes
+        the affected requests; the tolerant completion hooks below
+        swallow their late releases), and it leaves the registry so
+        nothing routes to it.  If this empties a DE group's admitting
+        set the private queue is pushed back for phase-1 re-routing,
+        exactly like a drain."""
+        st = self.engines[engine]
+        if not st.draining:
+            self.begin_drain(engine)       # reuse the queue-handback path
+        grp = self._groups[st.group]
+        grp.remove(engine)
+        if not grp:
+            del self._groups[st.group]
+            q = self.de_private.pop(st.group, None)
+            if q:
+                # orphaned private queue: back to global for re-routing
+                pend = sorted(list(self.de_global_queue) + list(q),
+                              key=lambda r: (r.arrival, r.rid))
+                self.de_global_queue = deque(pend)
+        del self.engines[engine]
+        return st
+
+    # ------------------------------------------------------------------
     # completion / accounting hooks (engines & simulator call these)
     # ------------------------------------------------------------------
     def on_read_done(self, engine: EngineId, tokens: int):
-        st = self.engines[engine]
+        st = self.engines.get(engine)
+        if st is None:                 # engine failed: charge forfeited
+            return
         st.read_q = max(0, st.read_q - tokens)
 
     def on_request_done(self, engine: EngineId, req: Request):
-        st = self.engines[engine]
+        st = self.engines.get(engine)
+        if st is None:                 # engine failed: charge forfeited
+            return
         st.seq = max(0, st.seq - 1)
         st.tok = max(0, st.tok - req.prompt_tokens)
         if st.kind == "de":

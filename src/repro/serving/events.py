@@ -65,11 +65,15 @@ class EngineLifecycle(Enum):
     requests finishing through their normal ReqState transitions) →
     RECONFIGURING (drained; the target role's weight shard reloading
     over the node's storage NIC) → ACTIVE under the other kind.  With
-    ``elastic=False`` every engine stays ACTIVE forever."""
+    ``elastic=False`` every engine stays ACTIVE forever.  DEAD is the
+    fail-stop terminal state (sim/faults.py EngineDeath): the engine
+    left the scheduler registry at once, its in-flight rounds were
+    re-homed, and it never returns."""
 
     ACTIVE = "active"
     DRAINING = "draining"
     RECONFIGURING = "reconfiguring"
+    DEAD = "dead"
 
 
 @dataclass

@@ -67,6 +67,7 @@ from repro.serving import events
 from repro.serving.events import (EngineLifecycle, EventLoop, ReqState,
                                   RoundMetrics, ServingTimeModel, TickIo,
                                   VirtualClock)
+from repro.sim.faults import FaultSchedule
 from repro.sim.spec import NodeSpec
 from repro.sim.traces import Trajectory
 
@@ -101,7 +102,10 @@ class ServingSystem:
                  reconfig_hi: float = 2.0, reconfig_lo: float = 0.5,
                  reconfig_patience: int = 2,
                  reconfig_cooldown_s: float = 0.0,
-                 reconfig_idle_floor_s: float = 1e-3):
+                 reconfig_idle_floor_s: float = 1e-3,
+                 faults: Optional[FaultSchedule] = None,
+                 hedge_reads: bool = False,
+                 hedge_min_severity: float = 2.0):
         assert mode in ("dualpath", "basic")
         self.cfg = cfg
         self.params = params            # role flips build new engines
@@ -219,6 +223,20 @@ class ServingSystem:
         self.dram_bytes_by_side = {"pe": 0, "de": 0}
         self.n_split_reads = 0
         self.gen_tokens_done = 0
+        # --- fault injection (sim/faults.py, shared with the simulator) ---
+        # An empty schedule is normalised to None so every fault hook is
+        # a structural no-op on the happy path: zero-rate runs stay
+        # bit-identical to faults=None (pinned by tests/test_faults.py).
+        self.faults = faults if (faults is not None
+                                 and not faults.empty) else None
+        self.hedge_reads = hedge_reads
+        self.hedge_min_severity = hedge_min_severity
+        self._deaths_pending = list(self.faults.deaths) \
+            if self.faults is not None else []
+        self.dead_engines: List[Tuple[int, int]] = []
+        self.recovered_rounds = 0
+        self.hedged_reads = 0
+        self.hedge_moved_tokens = 0
 
     # ------------------------------------------------------------------
     def _all_tms(self) -> Iterator[TrafficManager]:
@@ -232,6 +250,30 @@ class ServingSystem:
         own tick counter) offline — keeping offline runs bit-compatible
         with the pre-clock behaviour."""
         return self.clock.now if self._online else None
+
+    # ------------------------------------------------------------------
+    # fault-aware service times: the schedule's multipliers compose onto
+    # the healthy time model.  With ``faults is None`` both helpers
+    # return the base value untouched (same floats, same arithmetic).
+    # ------------------------------------------------------------------
+    def _snic_s(self, node: int, nbytes: float, rid: Optional[int] = None,
+                side: Optional[str] = None) -> float:
+        """SNIC service seconds on ``node``, degraded by any active
+        slowdown window and — for a storage read leg identified by
+        ``(rid, side)`` — the straggler draw.  Tier (DRAM) reads never
+        come through here: tier hits are never re-charged to a SNIC."""
+        s = self.time_model.snic_seconds(nbytes)
+        if self.faults is not None:
+            s *= self.faults.snic_factor(node, self.clock.now)
+            if rid is not None:
+                s *= self.faults.leg_factor(rid, side)
+        return s
+
+    def _cn_s(self, nbytes: float) -> float:
+        s = self.time_model.cn_seconds(nbytes)
+        if self.faults is not None:
+            s *= self.faults.net_factor(self.clock.now)
+        return s
 
     # ------------------------------------------------------------------
     def _submit_round(self, sess: AgentSession):
@@ -256,6 +298,7 @@ class ServingSystem:
         er._session = sess
         er._tier_pinned = None
         er._pd_ready = False
+        er._cancelled = False
         er.lifecycle = ReqState.SCHEDULED
         sess.current = er
         sess.next_round += 1
@@ -315,6 +358,8 @@ class ServingSystem:
                 self.sched.choose_read_path(
                     req, tier_tokens=tier_tokens,
                     net_congestion=self.net_congestion)
+                if self.hedge_reads and self.faults is not None:
+                    self._maybe_hedge(req)
                 if req.dram_tokens:
                     # pin the tier-resident prefix NOW: reads of other
                     # ready requests admit blocks (and may evict) before
@@ -333,6 +378,42 @@ class ServingSystem:
             else:
                 self._do_read(er)
         return len(ready)
+
+    def _maybe_hedge(self, req: Request) -> int:
+        """Hedged split read (issue-time): if one side's storage leg is
+        degraded — straggler draw and/or an active SNIC slowdown window
+        on its node — by ``hedge_min_severity``× or more relative to the
+        other, re-water-fill that side's *remainder* to the healthy side
+        via ``Scheduler.rebalance_remainder`` before the legs are built.
+        The serving runtime's reads are issued and completed within one
+        tick, so the hedge decision lands at issue; the simulator owns
+        the mid-flight variant of the same re-fill.  Tier-hit tokens are
+        untouched (they are not SNIC charge to begin with)."""
+        toks = req.read_tokens_by_side()
+        if not (toks["pe"] > 0 and toks["de"] > 0):
+            return 0
+        now = self.clock.now
+        f = {s: self.faults.leg_factor(req.rid, s) *
+             self.faults.snic_factor(
+                 (req.pe if s == "pe" else req.de)[0], now)
+             for s in ("pe", "de")}
+        for slow, fast in (("pe", "de"), ("de", "pe")):
+            if f[fast] <= 0 or f[slow] / f[fast] < self.hedge_min_severity:
+                continue
+            healthy = req.pe if fast == "pe" else req.de
+            st = self.sched.engines.get(healthy)
+            # backlog ahead of this request on the healthy NIC = its
+            # reading queue minus this request's own charge there
+            backlog = max((st.read_q if st is not None else 0)
+                          - toks[fast], 0)
+            moved = self.sched.rebalance_remainder(
+                req, slow, toks[slow], f[slow] / f[fast],
+                healthy_backlog_tokens=backlog)
+            if moved:
+                self.hedged_reads += 1
+                self.hedge_moved_tokens += moved
+            return moved
+        return 0
 
     # ------------------------------------------------------------------
     # the read, split into issue/complete halves
@@ -366,12 +447,14 @@ class ServingSystem:
             self.read_bytes_by_side[side] += nbytes
             er._read_box = {}
             node = pe_node if side == "pe" else de_node
-            self._tick_io.add(("snic", node), tmod.snic_seconds(nbytes))
+            self._tick_io.add(("snic", node),
+                              self._snic_s(node, nbytes, rid=req.rid,
+                                           side=side))
             out.append((pe.tm if side == "pe" else de_tm,
                         lambda p=payload, box=er._read_box: box.update(p=p),
                         nbytes))
             if side == "de":
-                self._tick_io.add(("cn", pe_node), tmod.cn_seconds(nbytes))
+                self._tick_io.add(("cn", pe_node), self._cn_s(nbytes))
                 out.append((pe.tm, lambda: None, nbytes))
             return out
         n = len(er.hit_refs)
@@ -422,13 +505,17 @@ class ServingSystem:
                 hit_b = tier.dram_hit_bytes - h0
                 self.read_bytes_by_side[side] += miss_b
                 self.dram_bytes_by_side[side] += hit_b
-                self._tick_io.add(("snic", node), tmod.snic_seconds(miss_b))
+                self._tick_io.add(("snic", node),
+                                  self._snic_s(node, miss_b, rid=req.rid,
+                                               side=side))
                 self._tick_io.add(("dram", node), tmod.dram_seconds(hit_b))
             else:
                 blocks = self.store.read_blocks(refs)
                 nb = sum(b.nbytes for b in blocks)
+                self._tick_io.add(("snic", node),
+                                  self._snic_s(node, nb, rid=req.rid,
+                                               side=side))
                 self.read_bytes_by_side[side] += nb
-                self._tick_io.add(("snic", node), tmod.snic_seconds(nb))
             nbytes = sum(b.nbytes for b in blocks)
             out.append((pe.tm if side == "pe" else de_tm,
                         lambda blocks=blocks, lo=lo:
@@ -437,7 +524,7 @@ class ServingSystem:
                         nbytes))
             if side == "de":
                 # DE buffer -> PE over the compute network (layerwise)
-                self._tick_io.add(("cn", pe_node), tmod.cn_seconds(nbytes))
+                self._tick_io.add(("cn", pe_node), self._cn_s(nbytes))
                 out.append((pe.tm, lambda: None, nbytes))
         if er._tier_pinned is not None:
             # the tier segment is read (copied out) — the pin taken at
@@ -552,8 +639,7 @@ class ServingSystem:
             de_tm.submit(lambda: None,
                          per_layer + (rem if li == n_l - 1 else 0),
                          TrafficClass.KV_TRANSFER)
-        self._tick_io.add(("cn", er.req.de[0]),
-                          self.time_model.cn_seconds(nbytes))
+        self._tick_io.add(("cn", er.req.de[0]), self._cn_s(nbytes))
         if self.pipelined:
             self._pd_queue.append(er)
             de_tm.flush(on_complete=lambda er=er:
@@ -569,6 +655,8 @@ class ServingSystem:
         still: List[EngineRequest] = []
         n = 0
         for er in self._pd_queue:
+            if er._cancelled:
+                continue               # re-homed after an engine death
             if er._pd_ready:
                 er._pd_ready = False
                 self._pending_admit.append(er)
@@ -583,6 +671,8 @@ class ServingSystem:
         still = deque()
         while self._pending_admit:
             er = self._pending_admit.popleft()
+            if er._cancelled:
+                continue               # re-homed after an engine death
             de = self.des[er.req.de]
             if de.free_slots:
                 er.lifecycle = ReqState.DECODE
@@ -608,7 +698,7 @@ class ServingSystem:
             act += (de.decode_steps - steps0) + len(finished)
             persist_b = de.tm.bytes[TrafficClass.KV_TRANSFER] - b0
             self._tick_io.add(("snic", de_node),
-                              self.time_model.snic_seconds(persist_b))
+                              self._snic_s(de_node, persist_b))
             for er in active_before:
                 m = self.metrics.get(er.req.rid)
                 if m is None:
@@ -628,6 +718,8 @@ class ServingSystem:
 
                     def persists_done(pend=pend):
                         for er, fin in pend:
+                            if er._cancelled:
+                                continue   # engine died; round re-runs
                             if fin is not None:
                                 fin()
                             self._finish_round(er)
@@ -725,9 +817,13 @@ class ServingSystem:
         (rid) order — the blocking runtime's install order."""
         ready, self._install_ready = self._install_ready, []
         ready.sort(key=lambda er: er.req.rid)
+        n = 0
         for er in ready:
+            if er._cancelled:
+                continue       # stale completion of a re-homed request:
+            n += 1             # its charges were already released
             self._read_complete(er)
-        return len(ready)
+        return n
 
     def _stamp(self, rid: int, field_name: str):
         """Defer a milestone timestamp to the end of the current tick
@@ -922,8 +1018,7 @@ class ServingSystem:
             self.engine_lifecycle[eid] = EngineLifecycle.RECONFIGURING
             w = self.time_model.spec.active_param_bytes_resident(1)
             self.reconfig_weight_bytes += w
-            self._tick_io.add(("snic", eid[0]),
-                              self.time_model.snic_seconds(w))
+            self._tick_io.add(("snic", eid[0]), self._snic_s(eid[0], w))
             self._reconfig_ready.append(rec)
         if self.clock.now >= self._next_obs_t:
             self._next_obs_t = self.clock.now + self.reconfig_interval_s
@@ -932,6 +1027,129 @@ class ServingSystem:
                                                  self.clock.now)
                 if action is not None:
                     self._begin_reconfig(action)
+
+    # ------------------------------------------------------------------
+    # engine failure (sim/faults.py EngineDeath): fail-stop + re-home
+    # ------------------------------------------------------------------
+    def _fault_tick(self):
+        """Process every death whose time has arrived (tick phase -1,
+        before scheduling) — the serving analogue of the simulator's
+        death events."""
+        while self._deaths_pending and \
+                self._deaths_pending[0].t <= self.clock.now:
+            d = self._deaths_pending.pop(0)
+            self._engine_death(tuple(d.engine))
+
+    def _engine_death(self, eid: Tuple[int, int]):
+        """Fail-stop of engine ``eid``: abort any drain it was part of,
+        hand unstarted assignments back to the queues, re-home every
+        round with physical state on the engine (restart from persisted
+        KV — the trie still holds every block persisted *before* the
+        death, and blocks whose persist writes had not landed are
+        re-persisted exactly once by the recovery run), then remove the
+        engine from the scheduler registry so nothing routes to it.
+        Role backfill is emergent: the survivors' pressure shift feeds
+        the PDController, which proposes a compensating flip."""
+        if eid not in self.pes and eid not in self.des:
+            return                     # already dead / never existed
+        self.dead_engines.append(eid)
+        # a victim dying mid-drain is not a role change: drop the record
+        self.drains.abort(eid)
+        self._reconfig_ready = [r for r in self._reconfig_ready
+                                if r.engine != eid]
+        # assigned-but-unstarted requests go back to the queues whole —
+        # nothing physical happened for them on this engine
+        self.sched.requeue_unstarted(
+            eid, [er.req for er in self._inflight.values()])
+        # rounds with physical state on the engine restart.  PE
+        # involvement ends once the prompt state left for the DE
+        # (PD_TRANSFER rides the DE's TrafficManager); DE involvement
+        # lasts until the round's persist lands.
+        for er in list(self._inflight.values()):
+            req = er.req
+            if req.de == eid or (req.pe == eid and er.lifecycle in (
+                    ReqState.SCHEDULED, ReqState.READING,
+                    ReqState.PREFILL)):
+                self._resubmit_round(er)
+        self.sched.fail_engine(eid)
+        self.pes.pop(eid, None)
+        self.des.pop(eid, None)
+        self.engine_lifecycle[eid] = EngineLifecycle.DEAD
+        # the group topology changed: re-route queued DE requests
+        self.sched.rebalance_de_private()
+
+    def _resubmit_round(self, er: EngineRequest):
+        """Partial-leg cancellation + restart of one re-homed round.
+
+        The old EngineRequest is marked ``_cancelled`` so every stale
+        completion half (a surviving read leg's install, a parked PD
+        entry, a pending admit) discards itself; its scheduler charges
+        are released per lifecycle state (the dead engine's own charges
+        are forfeited by the tolerant hooks).  A fresh request under a
+        new rid restarts from the *persisted* prefix — the trie match
+        of the same prompt tokens, no session-RNG redraw — and inherits
+        the original RoundMetrics (same submit_t), so TTFT/TPOT include
+        the recovery gap honestly.  Greedy decode regenerates the same
+        tokens, which keeps session context and persisted blocks
+        identical to a fault-free run."""
+        if er._cancelled:
+            return
+        er._cancelled = True
+        req = er.req
+        sess = er._session
+        if er._tier_pinned is not None:
+            node, prefix = er._tier_pinned
+            self.tiers[node].unpin(prefix)
+            er._tier_pinned = None
+        lc = er.lifecycle
+        if lc == ReqState.READING:
+            # the read never completed: the full path-decision charge is
+            # still held on both sides' reading queues
+            self._release_read_q(req)
+        if lc in (ReqState.SCHEDULED, ReqState.READING, ReqState.PREFILL):
+            if req.pe is not None:
+                self.sched.on_request_done(req.pe, req)
+                pe = self.pes.get(req.pe)
+                if pe is not None:
+                    pe.fifo = [(w, e) for (w, e) in pe.fifo if e is not er]
+        if req.de is not None and lc in (
+                ReqState.SCHEDULED, ReqState.READING, ReqState.PREFILL,
+                ReqState.PD_TRANSFER, ReqState.DECODE):
+            # the DE charge (seq/tok/HBM reservation) is held from
+            # assignment until decode finishes
+            self.sched.on_request_done(req.de, req)
+        del self._inflight[req.rid]
+        # -- fresh request over the same tokens -------------------------
+        prompt = er.context_tokens + er.append_tokens
+        if uses_state_blob(self.cfg):
+            blob, hit = self.blob_store.get(sess.context)
+            refs = []
+            hit = hit if blob is not None else 0
+        else:
+            hit, refs = self.trie.match(prompt)
+            blob = None
+        if hit >= len(prompt):         # keep >= 1 token to prefill
+            hit = len(prompt) - 1
+            refs = refs[:hit // self.layout.block_tokens]
+        req2 = Request(rid=next(self._rid), cached_tokens=hit,
+                       new_tokens=len(prompt) - hit,
+                       gen_tokens=req.gen_tokens,
+                       arrival=req.arrival)   # original queue priority
+        er2 = EngineRequest(req=req2, context_tokens=prompt[:hit],
+                            append_tokens=prompt[hit:], hit_refs=refs)
+        er2._blob = blob
+        er2._session = sess
+        er2._tier_pinned = None
+        er2._pd_ready = False
+        er2._cancelled = False
+        er2.lifecycle = ReqState.SCHEDULED
+        sess.current = er2
+        self._inflight[req2.rid] = er2
+        m = self.metrics.pop(req.rid)
+        m.rid = req2.rid
+        self.metrics[req2.rid] = m
+        self.recovered_rounds += 1
+        self.sched.submit(req2)
 
     def _tick(self) -> int:
         """One event-loop tick; returns an activity count (0 = idle).
@@ -946,6 +1164,8 @@ class ServingSystem:
         self._tick_compute = 0.0
         self._tick_coll = {}
         act = 0
+        if self._deaths_pending:
+            self._fault_tick()
         if self.elastic:
             self._elastic_tick()
         if self.pipelined:
@@ -1001,6 +1221,10 @@ class ServingSystem:
         try:
             for s, t0 in zip(sessions, arrivals):
                 self.loop.at(float(t0), lambda s=s: self._submit_round(s))
+            # wake-up markers at death times so an idle clock jump never
+            # lands past a death (the tick's _fault_tick processes it)
+            for d in self._deaths_pending:
+                self.loop.at(float(d.t), lambda: None)
             for _ in range(max_iters):
                 self.loop.fire_due()
                 if all(s.done() for s in sessions) and not self.loop.pending:
@@ -1058,6 +1282,11 @@ class ServingSystem:
             tier_handoff_bytes=self.drains.tier_handoff_bytes(),
             n_pe_final=len(self.pes),
             n_de_final=len(self.des),
+            # --- faults / resilience (zeros when faults off) -------------
+            engine_deaths=len(self.dead_engines),
+            recovered_rounds=self.recovered_rounds,
+            hedged_reads=self.hedged_reads,
+            hedge_moved_tokens=self.hedge_moved_tokens,
         )
 
     def slo_attainment(self, ttft_slo_s: float = 4.0,

@@ -1,3 +1,9 @@
+from repro.sim.faults import (
+    EngineDeath,
+    FaultSchedule,
+    SlowdownWindow,
+    StragglerModel,
+)
 from repro.sim.simulator import Sim, SimConfig
 from repro.sim.spec import (
     DS_660B,

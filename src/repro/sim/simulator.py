@@ -46,6 +46,7 @@ from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
 from repro.core.traffic import TrafficClass
 from repro.kvcache.tiers import DramTier, ThinkTimePrefetcher
 from repro.network import CollectiveVolumeModel, SharedLink
+from repro.sim.faults import FaultSchedule
 from repro.sim.spec import ModelSimSpec, NodeSpec
 from repro.sim.traces import Trajectory
 
@@ -100,11 +101,12 @@ class Flow:
 
     __slots__ = ("sim", "nbytes_left", "resources", "on_done", "rate",
                  "t_last", "version", "done", "tclass", "t_enter",
-                 "nbytes_total")
+                 "nbytes_total", "fid")
 
     def __init__(self, sim: "Sim", nbytes: float, resources, on_done,
                  tclass: TrafficClass = TrafficClass.KV_TRANSFER):
         self.sim = sim
+        self.fid = next(sim._flow_seq)
         self.nbytes_left = float(max(nbytes, 1.0))
         self.nbytes_total = self.nbytes_left
         self.resources = [r for r in resources if r is not None]
@@ -146,6 +148,24 @@ class Flow:
         if self.resources:
             self.sim._reshare(self.resources)
         self.on_done()
+
+    def cancel(self):
+        """Abandon the flow (fault recovery): detach from every resource
+        and never fire ``on_done``.  Bytes already moved stay moved; the
+        residual is simply lost with the dead engine."""
+        if self.done:
+            return
+        self.done = True
+        for r in self.resources:
+            r.flows.discard(self)
+            # drop arbiter caches without note_done's byte accounting
+            # (the flow did not complete; counting its bytes would
+            # overstate delivered traffic)
+            inv = getattr(r, "_invalidate", None)
+            if inv is not None:
+                inv()
+        if self.resources:
+            self.sim._reshare(self.resources)
 
 
 @dataclass
@@ -215,6 +235,20 @@ class SimConfig:
     reconfig_idle_floor_s: float = 1e-3
     elastic_min_pe: int = 1
     elastic_min_de: int = 1
+    # --- fault injection & hedged reads (sim/faults.py) -----------------
+    # ``faults`` carries SNIC-degradation windows, link flaps, engine
+    # deaths and per-leg stragglers.  An absent or *empty* schedule is
+    # structurally invisible: zero-fault runs are event-identical to
+    # the pre-fault simulator (pinned by tests/test_faults.py).
+    faults: Optional[FaultSchedule] = None
+    # hedged split reads: when exactly one storage leg of a request is
+    # observed straggling (fault-induced slowdown >= hedge_min_severity
+    # relative to the healthy side) and its remainder is worth at least
+    # hedge_threshold_s of service time, re-water-fill the unserved
+    # remainder onto the healthy side's NIC mid-read
+    hedge_reads: bool = False
+    hedge_threshold_s: float = 0.25
+    hedge_min_severity: float = 2.0
 
 
 class _EngineSim:
@@ -241,7 +275,9 @@ class RoundSim:
     __slots__ = ("req", "traj", "round_idx", "agent", "submit_t", "read_done_t",
                  "prefill_done_t", "first_decode_t", "done_t", "transfer_done",
                  "prefill_left", "gen_left", "ctx", "h2d_done", "tokens_out",
-                 "second_token_t", "charged", "read_legs", "tier_pinned")
+                 "second_token_t", "charged", "read_legs", "tier_pinned",
+                 "read_recs", "read_pending", "hedged", "flows",
+                 "gen_total", "n_recoveries")
 
     def __init__(self, req: Request, traj: Trajectory, round_idx: int, agent):
         self.req = req
@@ -270,6 +306,18 @@ class RoundSim:
         # (node, refs) of DRAM-tier blocks pinned while this round is in
         # flight — unpinned at round completion
         self.tier_pinned = None
+        # live per-storage-leg records ({"side","engine","entry","job",
+        # "release","refs","done"}) while the load phase is in flight —
+        # the handles hedging and fault recovery act on
+        self.read_recs = None
+        self.read_pending = None
+        self.hedged = False
+        # in-flight transfer/h2d Flows, cancellable on engine death
+        self.flows: List[Flow] = []
+        # gen_tokens of the ORIGINAL request: recovery resubmits with
+        # only the remaining generation, so TPOT math needs the total
+        self.gen_total = req.gen_tokens
+        self.n_recoveries = 0
 
     def charge(self, leg: Leg):
         for r in leg.resources:
@@ -297,6 +345,14 @@ class Sim:
         self.node_spec = cfg.node
         g = cfg.node.g
         self.kv_per_token = self.model.kv_bytes_per_token
+        # monotone Flow ids: _reshare resettles affected flows in fid
+        # order so PS rate updates are independent of set iteration
+        # order (chaos failures must reproduce from a seed alone)
+        self._flow_seq = itertools.count()
+        # empty schedules are normalised away so every fault hook stays
+        # a structural no-op on the happy path (zero-fault identity)
+        f = cfg.faults
+        self.faults = f if (f is not None and not f.empty) else None
 
         # --- resources -----------------------------------------------------
         self.snic: Dict[int, "_FifoNic"] = {}
@@ -399,6 +455,12 @@ class Sim:
         # --- workload --------------------------------------------------------
         self.agents = [AgentSim(t) for t in trajectories]
         self.rounds: List[RoundSim] = []
+        # rid -> RoundSim.  Recovery after an engine death resubmits a
+        # round under a FRESH rid and unmaps the old one, so callbacks
+        # captured against the dead incarnation (a prefill batch item in
+        # a step barrier, a late NIC completion) resolve to None and are
+        # dropped instead of corrupting the recovered round.
+        self._by_rid: Dict[int, RoundSim] = {}
         self._rid = itertools.count()
         self._pe_stepping: Dict[int, bool] = {gid: False
                                               for gid in self.pe_groups}
@@ -431,6 +493,11 @@ class Sim:
         self.gen_tokens_done = 0
         self.snic_hit_read_bytes = 0   # demand hit bytes that paid a SNIC
         self.net_bg_bytes = 0          # injected background transfer bytes
+        # --- faults / hedged reads / recovery ------------------------------
+        self.dead_engines: List[Tuple[float, Tuple[int, int], str]] = []
+        self.recovered_rounds = 0
+        self.hedged_reads = 0
+        self.hedge_moved_tokens = 0
 
     # ------------------------------------------------------------------
     # PS rate management
@@ -440,7 +507,10 @@ class Sim:
         affected = set()
         for r in resources:
             affected.update(r.flows)
-        for f in affected:
+        # resource flow-sets are unordered; resettle in creation order so
+        # the event heap's tie-breaking (and thus every downstream
+        # timestamp) is independent of set iteration order
+        for f in sorted(affected, key=lambda f: f.fid):
             f._settle(now)
             new_rate = min(r.rate_of(f) for r in f.resources)
             f.rate = new_rate
@@ -500,6 +570,24 @@ class Sim:
             self.loop.after(period, bg)
         if cfg.elastic:
             self.loop.after(cfg.reconfig_interval_s, self._reconfig_tick)
+        if self.faults is not None:
+            for d in self.faults.deaths:
+                self.loop.at(d.t,
+                             lambda d=d: self._engine_death(tuple(d.engine)))
+            # link flaps: the shared link's capacity changes at window
+            # edges; every in-flight flow is resettled at each edge.
+            # SNIC windows need no events (the FIFO server reads the
+            # fault factor at each job's service start).
+            if cfg.net_bw:
+                base_cap = self.net.cap
+
+                def flap(t):
+                    self.net.cap = base_cap / self.faults.net_factor(t)
+                    self.net._invalidate()
+                    self._reshare([self.net])
+
+                for t in self.faults.boundaries("net"):
+                    self.loop.at(t, lambda t=t: flap(t))
         self.loop.run(until)
         return self
 
@@ -681,6 +769,8 @@ class Sim:
 
     def _finish_flip(self, rec):
         eid = rec.engine
+        if eid not in self.engines or eid not in self.drains.active:
+            return      # the engine died while its weight reload was queued
         e = self.engines[eid]
         groups = self.pe_groups if rec.from_kind == "pe" else self.de_groups
         groups[e.group].remove(e)
@@ -718,6 +808,137 @@ class Sim:
             self._wake_de_group(gid)
 
     # ------------------------------------------------------------------
+    # engine death & request recovery (sim/faults.py)
+    # ------------------------------------------------------------------
+    def _engine_death(self, eid):
+        """Fail-stop of one engine (tentpole: role backfill).  The
+        engine's unstarted assignments are handed back via the drain
+        machinery, its in-flight rounds are recovered (prefill restarts
+        from persisted whole-block KV, decode resumes from the trie),
+        and the engine leaves the scheduler and topology.  Backfill is
+        controller-driven: the dead engine drops out of the admitting
+        sets the elastic LoadSignals count, so the resulting pressure
+        shift makes the PDController propose a compensating flip."""
+        e = self.engines.get(eid)
+        if e is None or eid not in self.sched.engines:
+            return                       # unknown or already dead
+        kind = e.kind
+        self.dead_engines.append((self.loop.now, eid, kind))
+        # a victim dying mid-drain: the flip it was draining for is off
+        if eid in self.drains.active:
+            self.drains.abort(eid)
+        # 1. assignments whose read never started are cheap: hand them
+        # back for reassignment exactly like a drain does
+        back = self.sched.requeue_unstarted(
+            eid, [rs.req for rs in self.rounds if rs.done_t < 0])
+        if kind == "de":
+            for req in back:
+                e.resident_tokens -= req.hbm_tokens
+        # 2. started rounds that still depend on the engine are
+        # recovered.  A PE's involvement ends once prefill AND the PD
+        # transfer are done; a DE's only at round completion.
+        for rs in self.rounds:
+            if rs.done_t >= 0 or rs.req.read_path is None:
+                continue
+            req = rs.req
+            lost = (req.de == eid) or (
+                req.pe == eid and (rs.prefill_done_t < 0
+                                   or not rs.transfer_done))
+            if lost:
+                self._recover_round(rs)
+        # 3. drop the engine from the scheduler and the step topology
+        self.sched.fail_engine(eid)
+        groups = self.pe_groups if kind == "pe" else self.de_groups
+        members = groups.get(e.group)
+        if members and e in members:
+            members.remove(e)
+            if not members:
+                del groups[e.group]
+        del self.engines[eid]
+        self.sched.rebalance_de_private()
+        self._kick_scheduler()
+
+    def _recover_round(self, rs: RoundSim):
+        """Re-home one in-flight round after an engine death.
+
+        Cancels everything physical (NIC read jobs, transfer flows),
+        releases every hold the incarnation took (read_q, engine
+        seq/tok/HBM reservations, tier pins), then resubmits the round
+        under a fresh rid: whole blocks of context persisted so far —
+        prompt AND generated — are cached (exactly what the trie would
+        match), the tail re-prefills, and the remaining generation
+        re-decodes.  Timing milestones already reached stay: TTFT/TPOT
+        honestly include the recovery gap, which is what the SLO
+        regression fixtures pin."""
+        req = rs.req
+        # (a) outstanding storage reads: abort, release read_q charge
+        if rs.read_recs:
+            for rec in rs.read_recs:
+                if rec["done"]:
+                    continue
+                rec["done"] = True
+                if rec["job"] is not None:
+                    self.snic[rec["engine"][0]].abort(rec["job"])
+                self.sched.on_read_done(rec["engine"], rec["release"])
+        rs.read_recs = None
+        rs.read_pending = None
+        # (b) in-flight transfer / h2d flows die with the data
+        for f in rs.flows:
+            f.cancel()
+        rs.flows = []
+        # (c) engine-side holds (the dead engine's state is still
+        # registered at this point; its releases are simply forfeited
+        # when fail_engine removes it moments later)
+        if req.pe is not None:
+            if rs.prefill_done_t < 0:
+                self.sched.on_request_done(req.pe, req)
+            pe = self.engines.get(req.pe)
+            if pe is not None:
+                pe.fifo = [w for w in pe.fifo if w.rid != req.rid]
+        if req.de is not None:
+            de = self.engines.get(req.de)
+            if de is not None:
+                if rs in de.active_decode:
+                    de.active_decode.remove(rs)
+                de.resident_tokens -= req.hbm_tokens
+            self.sched.on_request_done(req.de, req)
+        # (d) tier pins from the dead incarnation
+        if rs.tier_pinned is not None:
+            node, refs = rs.tier_pinned
+            tier = self.tiers.get(node)
+            if tier is not None:
+                tier.unpin(refs)
+            rs.tier_pinned = None
+        # (e) resubmit: persisted whole blocks (prompt + generated) are
+        # the new hit; keep the ORIGINAL arrival so the round does not
+        # lose its place in arrival-ordered queues
+        bt = self.cfg.block_tokens
+        ctx = req.prompt_tokens + rs.tokens_out
+        cached = (ctx // bt) * bt
+        new_req = Request(rid=next(self._rid), cached_tokens=cached,
+                          new_tokens=max(ctx - cached, 1),
+                          gen_tokens=max(rs.gen_left, 1),
+                          arrival=req.arrival)
+        del self._by_rid[req.rid]
+        self._by_rid[new_req.rid] = rs
+        new_req._sim_round = rs
+        rs.req = new_req
+        # accounting restarts for the new incarnation (NIC counters keep
+        # the bytes the dead one physically moved)
+        rs.charged = {}
+        rs.read_legs = []
+        rs.read_done_t = -1.0
+        rs.transfer_done = False
+        rs.h2d_done = False
+        rs.hedged = False
+        rs.prefill_left = new_req.new_tokens
+        rs.gen_left = new_req.gen_tokens
+        rs.ctx = new_req.prompt_tokens
+        rs.n_recoveries += 1
+        self.recovered_rounds += 1
+        self.sched.submit(new_req)
+
+    # ------------------------------------------------------------------
     # agent / request lifecycle
     # ------------------------------------------------------------------
     def _agent_start(self, agent: AgentSim):
@@ -748,6 +969,7 @@ class Sim:
         rs = RoundSim(req, traj, i, agent)
         rs.submit_t = self.loop.now
         self.rounds.append(rs)
+        self._by_rid[req.rid] = rs
         rs.req._sim_round = rs          # backref
         for tier in self.tiers.values():
             tier.note_alive(traj.tid, now=self.loop.now)
@@ -842,19 +1064,37 @@ class Sim:
         # partitioned, so it rides the majority side's storage NIC
         extra = self.model.ssm_state_bytes
         major = "pe" if req.pe_read_frac >= 0.5 else "de"
+        rid = req.rid
+        rs.read_recs = []
         if not snic_legs:
             # no SNIC bytes to read (pure-SSM models, or the whole hit
             # was served from the DRAM tier): release the read_q charge
             # on both sides, then complete (after the blob read, if any)
+            for side, engine in (("pe", req.pe), ("de", req.de)):
+                if tokens[side]:
+                    rs.read_recs.append(
+                        {"side": side, "engine": engine, "entry": None,
+                         "refs": [], "release": tokens[side],
+                         "done": False, "job": None})
+
             def finish(rs=rs):
-                for side, engine in (("pe", req.pe), ("de", req.de)):
-                    if tokens[side]:
-                        self.sched.on_read_done(engine, tokens[side])
+                if rs.req.rid != rid:
+                    return              # round re-homed after a death
+                for rec in rs.read_recs:
+                    if not rec["done"]:
+                        rec["done"] = True
+                        self.sched.on_read_done(rec["engine"],
+                                                rec["release"])
                 self._read_done(rs)
 
             if extra > 0:
                 node = (req.pe if major == "pe" else req.de)[0]
-                self.snic[node].enqueue(extra, finish)
+                brec = {"side": major,
+                        "engine": req.pe if major == "pe" else req.de,
+                        "entry": None, "refs": [], "release": 0,
+                        "done": False, "job": None}
+                rs.read_recs.append(brec)
+                brec["job"] = self.snic[node].enqueue(extra, finish)
                 return
             finish()
             return
@@ -864,16 +1104,17 @@ class Sim:
         # that side's whole hit there is no leg to piggyback on, so it
         # gets its own FIFO entry (its bytes must never vanish)
         blob_alone = extra > 0 and major not in leg_sides
-        pending = [len(snic_legs) + (1 if blob_alone else 0)]
-
-        def one_done():
-            pending[0] -= 1
-            if pending[0] == 0:
-                self._read_done(rs)
+        rs.read_pending = [len(snic_legs) + (1 if blob_alone else 0)]
 
         if blob_alone:
             node = (req.pe if major == "pe" else req.de)[0]
-            self.snic[node].enqueue(extra, one_done)
+            brec = {"side": major,
+                    "engine": req.pe if major == "pe" else req.de,
+                    "entry": None, "refs": [], "release": 0,
+                    "done": False, "job": None}
+            rs.read_recs.append(brec)
+            brec["job"] = self.snic[node].enqueue(
+                extra, lambda: self._read_leg_done(rs, brec))
         for leg in snic_legs:
             side = "pe" if "pe_snic" in leg.resources else "de"
             engine = req.pe if side == "pe" else req.de
@@ -883,21 +1124,135 @@ class Sim:
             self.snic_hit_read_bytes += leg.nbytes
             entry = [side, nbytes, -1.0, -1.0]
             rs.read_legs.append(entry)
+            rec = {"side": side, "engine": engine, "entry": entry,
+                   "refs": admit_refs[side], "release": tokens[side],
+                   "done": False, "job": None}
+            rs.read_recs.append(rec)
+            rec["job"] = self.snic[engine[0]].enqueue(
+                nbytes, lambda rec=rec: self._read_leg_done(rs, rec),
+                read=True,
+                on_start=lambda t, entry=entry: entry.__setitem__(2, t),
+                factor=(self.faults.leg_factor(rid, side)
+                        if self.faults is not None else 1.0))
+        if extra > 0:
+            rs.hedged = True    # opaque blob rides a leg: byte-exact
+            #                     remainder accounting impossible
+        elif (self.cfg.hedge_reads and self.faults is not None
+                and self.cfg.mode == "dualpath"):
+            # timer covers the single-leg case, where no sibling
+            # completion event re-evaluates the straggler
+            self.loop.after(self.cfg.hedge_threshold_s,
+                            lambda: self._maybe_hedge(rs, rid))
 
-            def leg_done(side=side, engine=engine, entry=entry):
-                entry[3] = self.loop.now
-                self.sched.on_read_done(engine, tokens[side])
-                tier = self.tiers.get(engine[0])
-                if tier is not None:
-                    now = self.loop.now
-                    for ref in admit_refs[side]:
-                        tier.admit(ref, self.block_bytes,
-                                   owner=rs.traj.tid, now=now)
-                one_done()
+    def _read_leg_done(self, rs: RoundSim, rec: dict):
+        """One storage leg landed: release its read_q charge, warm the
+        reading node's tier with its blocks, and complete the load phase
+        once every leg (original or hedged remainder) is in."""
+        rec["done"] = True
+        if rec["entry"] is not None:
+            rec["entry"][3] = self.loop.now
+        self.sched.on_read_done(rec["engine"], rec["release"])
+        tier = self.tiers.get(rec["engine"][0])
+        if tier is not None:
+            now = self.loop.now
+            for ref in rec["refs"]:
+                tier.admit(ref, self.block_bytes, owner=rs.traj.tid,
+                           now=now)
+        rs.read_pending[0] -= 1
+        if rs.read_pending[0] == 0:
+            self._read_done(rs)
+        elif self.cfg.hedge_reads:
+            # a sibling leg is still out: the classic hedge moment
+            self._maybe_hedge(rs, rs.req.rid)
 
-            self.snic[engine[0]].enqueue(
-                nbytes, leg_done, read=True,
-                on_start=lambda t, entry=entry: entry.__setitem__(2, t))
+    def _maybe_hedge(self, rs: RoundSim, rid: int):
+        """Hedged split reads (tentpole): when exactly one storage leg
+        is still in flight and it is *fault-slowed* relative to the
+        healthy side (observed service-time factors, not queue depth —
+        issue-time water-filling already balanced load), re-water-fill
+        the unserved remainder onto the healthy side's NIC.
+
+        Byte-exact by construction: the straggling FIFO job is shrunk
+        by exactly the moved bytes, a new job for exactly those bytes is
+        enqueued on the healthy NIC, and Scheduler.rebalance_remainder
+        moves the same tokens between the authoritative per-side
+        partition and the read_q charges.  Tier-hit bytes never appear
+        here (they are not SNIC work and not movable)."""
+        if (not self.cfg.hedge_reads or self.faults is None or rs.hedged
+                or rs.req.rid != rid or rs.read_done_t >= 0
+                or not rs.read_recs or not self.kv_per_token):
+            return
+        live = [rec for rec in rs.read_recs if not rec["done"]]
+        if len(live) != 1:
+            return
+        rec = live[0]
+        job = rec["job"]
+        if job is None or job.state not in ("queued", "serving"):
+            return
+        req = rs.req
+        s = rec["side"]
+        h = "de" if s == "pe" else "pe"
+        h_engine = req.pe if h == "pe" else req.de
+        s_nic = self.snic[rec["engine"][0]]
+        h_nic = self.snic[h_engine[0]]
+        now = self.loop.now
+        # observed straggle: the leg's own draw x the SNIC window it is
+        # (or would be) served under, relative to the healthy side
+        t_ref = job.t_start if job.state == "serving" else now
+        f_s = job.factor * self.faults.snic_factor(s_nic.node, t_ref)
+        f_h = self.faults.leg_factor(rid, h) * \
+            self.faults.snic_factor(h_nic.node, now)
+        severity = f_s / max(f_h, 1e-12)
+        if severity < self.cfg.hedge_min_severity:
+            return
+        rem_bytes = s_nic.remaining_bytes(job, now)
+        # whole unserved tokens only, never beyond the side's charged
+        # SNIC share (the partition the remainder is carved from)
+        rem_tok = min(int(rem_bytes // self.kv_per_token),
+                      req.read_tokens_by_side()[s])
+        if rem_tok <= 0:
+            return
+        # not worth a second queue entry if the straggler is nearly done
+        if rem_bytes * f_s / s_nic.bw < self.cfg.hedge_threshold_s:
+            return
+        moved = self.sched.rebalance_remainder(
+            req, s, rem_tok, severity,
+            healthy_backlog_tokens=h_nic.queue_tokens(self.kv_per_token))
+        if moved <= 0:
+            return
+        rs.hedged = True
+        self.hedged_reads += 1
+        self.hedge_moved_tokens += moved
+        moved_bytes = moved * self.kv_per_token
+        got = s_nic.shrink(job, moved_bytes)
+        assert got == moved_bytes, (got, moved_bytes)
+        rec["release"] -= moved
+        if rec["entry"] is not None:
+            rec["entry"][1] -= moved_bytes
+        # the straggler serves front-to-back, so its unserved tail —
+        # including its trailing admit blocks — is what moves
+        bt = self.cfg.block_tokens
+        m_blk = min(len(rec["refs"]), moved // bt) if bt else 0
+        moved_refs = rec["refs"][-m_blk:] if m_blk else []
+        if m_blk:
+            del rec["refs"][-m_blk:]
+        # byte-exact re-charge: the moved bytes now traverse the healthy
+        # side's SNIC + DRAM instead of the straggler's
+        for res_s, res_h in ((f"{s}_snic", f"{h}_snic"),
+                             (f"{s}_dram", f"{h}_dram")):
+            rs.charged[res_s] = rs.charged.get(res_s, 0) - moved_bytes
+            rs.charged[res_h] = rs.charged.get(res_h, 0) + moved_bytes
+        entry = [h, moved_bytes, -1.0, -1.0]
+        rs.read_legs.append(entry)
+        hrec = {"side": h, "engine": h_engine, "entry": entry,
+                "refs": moved_refs, "release": moved, "done": False,
+                "job": None}
+        rs.read_recs.append(hrec)
+        rs.read_pending[0] += 1
+        hrec["job"] = h_nic.enqueue(
+            moved_bytes, lambda: self._read_leg_done(rs, hrec), read=True,
+            on_start=lambda t, entry=entry: entry.__setitem__(2, t),
+            factor=self.faults.leg_factor(rid, h))
 
     def _read_done(self, rs: RoundSim):
         rs.read_done_t = self.loop.now
@@ -961,8 +1316,9 @@ class Sim:
 
         for leg in legs:
             rs.charge(leg)
-            Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done,
-                 tclass=leg.tclass)
+            rs.flows.append(
+                Flow(self, leg.nbytes, [rmap[r] for r in leg.resources],
+                     leg_done, tclass=leg.tclass))
 
     # ------------------------------------------------------------------
     # PE group stepping
@@ -1053,6 +1409,11 @@ class Sim:
         for e, batch in work:
             for bi in batch:
                 rs = self._round_by_rid(bi.rid)
+                if rs is None:
+                    # the round was re-homed (engine death) after this
+                    # step launched: its new incarnation re-prefills
+                    # from scratch, so the stale batch item is dropped
+                    continue
                 rs.prefill_left -= bi.bsz
                 self.prompt_tokens_done += bi.bsz
                 if rs.prefill_left <= 0 and rs.prefill_done_t < 0:
@@ -1071,7 +1432,7 @@ class Sim:
         self._kick_scheduler()
 
     def _round_by_rid(self, rid):
-        return self.rounds[rid]
+        return self._by_rid.get(rid)
 
     # ------------------------------------------------------------------
     # decode
@@ -1094,10 +1455,11 @@ class Sim:
             (dn, dr) = req.de
             rs.charge(Leg("de_h2d", full,
                           ("de_cnic_rd", "de_cnic_wr", "de_dram")))
-            Flow(self, full,
-                 [self.cnic_rd[(dn, dr)], self.cnic_wr[(dn, dr)],
-                  self.dram[dn]],
-                 lambda: self._h2d_done(rs))
+            rs.flows.append(
+                Flow(self, full,
+                     [self.cnic_rd[(dn, dr)], self.cnic_wr[(dn, dr)],
+                      self.dram[dn]],
+                     lambda: self._h2d_done(rs)))
             return
         pending = [len(legs)]
 
@@ -1108,8 +1470,9 @@ class Sim:
 
         for leg in legs:
             rs.charge(leg)
-            Flow(self, leg.nbytes, [rmap[r] for r in leg.resources], leg_done,
-                 tclass=leg.tclass)
+            rs.flows.append(
+                Flow(self, leg.nbytes, [rmap[r] for r in leg.resources],
+                     leg_done, tclass=leg.tclass))
 
     def _h2d_done(self, rs: RoundSim):
         rs.h2d_done = True
@@ -1302,7 +1665,7 @@ class Sim:
         simulator output unchanged — one percentile/SLO definition for
         both runtimes (pinned by tests/test_metrics_regression.py)."""
         from repro.serving.events import RoundMetrics
-        return [RoundMetrics(rid=rs.req.rid, gen_tokens=rs.req.gen_tokens,
+        return [RoundMetrics(rid=rs.req.rid, gen_tokens=rs.gen_total,
                              submit_t=rs.submit_t,
                              read_done_t=rs.read_done_t,
                              prefill_done_t=rs.prefill_done_t,
@@ -1324,8 +1687,8 @@ class Sim:
         ttfts = [r.prefill_done_t - r.submit_t for r in done_rounds]
         ttsts = [r.second_token_t - r.submit_t for r in done_rounds
                  if r.second_token_t >= 0]
-        tpots = [(r.done_t - r.first_decode_t) / max(r.req.gen_tokens - 1, 1)
-                 for r in done_rounds if r.req.gen_tokens > 1]
+        tpots = [(r.done_t - r.first_decode_t) / max(r.gen_total - 1, 1)
+                 for r in done_rounds if r.gen_total > 1]
         import numpy as np
         pct = lambda xs, q: float(np.percentile(xs, q)) if xs else float("nan")
         mean = lambda xs: float(np.mean(xs)) if xs else float("nan")
@@ -1370,7 +1733,36 @@ class Sim:
                            if e.kind == "pe"),
             n_de_final=sum(1 for e in self.engines.values()
                            if e.kind == "de"),
+            # --- faults / hedged reads / recovery (sim/faults.py; zeros
+            # when no schedule is injected) -----------------------------
+            engine_deaths=len(self.dead_engines),
+            recovered_rounds=self.recovered_rounds,
+            hedged_reads=self.hedged_reads,
+            hedge_moved_tokens=self.hedge_moved_tokens,
         )
+
+
+class _NicJob:
+    """One FIFO entry on a storage NIC — a first-class handle so hedged
+    reads can shrink it mid-flight and fault recovery can abort it."""
+
+    __slots__ = ("nbytes", "cb", "read", "on_start", "prefetch", "factor",
+                 "t_start", "rate", "version", "state")
+
+    def __init__(self, nbytes, cb, read, on_start, prefetch, factor):
+        self.nbytes = nbytes
+        self.cb = cb
+        self.read = read
+        self.on_start = on_start
+        self.prefetch = prefetch
+        # per-job service-time multiplier (straggler draw); SNIC window
+        # factors compose with it at service start
+        self.factor = factor
+        self.t_start = -1.0
+        self.rate = 0.0
+        self.version = 0        # bumped on shrink/abort to void the
+        #                         completion event already in the heap
+        self.state = "queued"   # queued | serving | done | cancelled
 
 
 class _FifoNic:
@@ -1379,7 +1771,13 @@ class _FifoNic:
     Tracks reads (KV loads) and writes (block persists) separately so
     tests can pin the read totals against the loading-plan snic sums,
     and reports service start via ``on_start`` so split-read tests can
-    assert two NICs were busy concurrently on one request."""
+    assert two NICs were busy concurrently on one request.
+
+    Fault semantics: a job's effective rate is fixed at service start —
+    ``bw / (job.factor * FaultSchedule.snic_factor(node, t_start))`` —
+    so degradation windows apply to jobs *starting* inside them (the
+    granularity the chaos suite pins).  With no faults the arithmetic
+    is bit-identical to the pre-fault server (``rate == bw`` exactly)."""
 
     def __init__(self, sim: Sim, node: int, bw: float):
         self.sim = sim
@@ -1387,6 +1785,7 @@ class _FifoNic:
         self.bw = bw
         self.queue: deque = deque()
         self.busy = False
+        self.current: Optional[_NicJob] = None
         self.queued_bytes = 0
         self.total_bytes = 0
         self.read_bytes = 0
@@ -1400,38 +1799,118 @@ class _FifoNic:
         return int(self.queued_bytes / kv_per_token)
 
     def enqueue(self, nbytes: float, on_done, read=True, on_start=None,
-                prefetch=False):
-        self.queue.append((nbytes, on_done, read, on_start, prefetch))
+                prefetch=False, factor: float = 1.0) -> _NicJob:
+        job = _NicJob(nbytes, on_done, read, on_start, prefetch, factor)
+        self.queue.append(job)
         self.queued_bytes += nbytes
         if not self.busy:
             self._serve()
+        return job
 
     def _serve(self):
         if not self.queue:
             self.busy = False
+            self.current = None
             return
         self.busy = True
-        nbytes, cb, read, on_start, prefetch = self.queue.popleft()
-        if on_start is not None:
-            on_start(self.sim.loop.now)
-        dt = nbytes / self.bw
+        job = self.queue.popleft()
+        self.current = job
+        job.state = "serving"
+        now = self.sim.loop.now
+        job.t_start = now
+        if job.on_start is not None:
+            job.on_start(now)
+        f = job.factor
+        faults = self.sim.faults
+        if faults is not None:
+            f *= faults.snic_factor(self.node, now)
+        job.rate = self.bw if f == 1.0 else self.bw / f
+        v = job.version
+        self.sim.loop.after(job.nbytes / job.rate,
+                            lambda: self._complete(job, v))
 
-        def done():
-            self.queued_bytes -= nbytes
-            self.total_bytes += nbytes
-            if prefetch:
-                # think-time staging reads — separated from demand reads
-                # so round-start SNIC traffic stays directly observable
-                self.prefetch_bytes += nbytes
-            elif read:
-                self.read_bytes += nbytes
-            else:
-                self.write_bytes += nbytes
-            self.samples.append((self.sim.loop.now, nbytes))
-            cb()
-            self._serve()
+    def _complete(self, job: _NicJob, version: int):
+        if job.version != version or job.state != "serving":
+            return              # voided by a shrink/abort
+        job.state = "done"
+        nbytes = job.nbytes
+        self.queued_bytes -= nbytes
+        self.total_bytes += nbytes
+        if job.prefetch:
+            # think-time staging reads — separated from demand reads
+            # so round-start SNIC traffic stays directly observable
+            self.prefetch_bytes += nbytes
+        elif job.read:
+            self.read_bytes += nbytes
+        else:
+            self.write_bytes += nbytes
+        self.samples.append((self.sim.loop.now, nbytes))
+        if job.cb is not None:
+            job.cb()
+        self._serve()
 
-        self.sim.loop.after(dt, done)
+    # -- hedged reads / fault recovery ---------------------------------
+    def remaining_bytes(self, job: _NicJob, now: float) -> float:
+        """Unserved bytes of ``job`` at ``now`` (0 once finished)."""
+        if job.state == "serving":
+            return max(0.0, job.nbytes - (now - job.t_start) * job.rate)
+        if job.state == "queued":
+            return job.nbytes
+        return 0.0
+
+    def shrink(self, job: _NicJob, delta: float) -> float:
+        """Hedge: carve ``delta`` unserved bytes off the tail of the job
+        (they will be served elsewhere).  The job keeps its callback and
+        completes earlier at its reduced size; a queued job shrunk to
+        nothing is unqueued and completes immediately having served
+        zero bytes here.  Returns the bytes actually removed."""
+        assert delta >= 0
+        now = self.sim.loop.now
+        if job.state == "serving":
+            served = (now - job.t_start) * job.rate
+            delta = min(delta, max(0.0, job.nbytes - served))
+            job.nbytes -= delta
+            self.queued_bytes -= delta
+            job.version += 1
+            v = job.version
+            t_done = job.t_start + job.nbytes / job.rate
+            self.sim.loop.after(max(t_done - now, 0.0),
+                                lambda: self._complete(job, v))
+            return delta
+        if job.state == "queued":
+            delta = min(delta, job.nbytes)
+            job.nbytes -= delta
+            self.queued_bytes -= delta
+            if job.nbytes <= 0:
+                self.queue.remove(job)
+                job.state = "done"
+                if job.cb is not None:
+                    self.sim.loop.after(0.0, job.cb)
+            return delta
+        return 0.0
+
+    def abort(self, job: _NicJob):
+        """Fault recovery: drop the job.  Queued jobs vanish without a
+        trace; an in-service job is truncated to the bytes already
+        served (they were physically read and stay in the counters) and
+        its callback is suppressed."""
+        if job.state == "queued":
+            self.queue.remove(job)
+            self.queued_bytes -= job.nbytes
+            job.state = "cancelled"
+            job.cb = None
+            return
+        if job.state == "serving":
+            served = (self.sim.loop.now - job.t_start) * job.rate
+            delta = max(0.0, job.nbytes - served)
+            job.nbytes -= delta
+            self.queued_bytes -= delta
+            job.cb = None
+            job.version += 1
+            v = job.version
+            # complete immediately at the truncated size: the byte
+            # accounting and FIFO hand-off reuse the normal path
+            self.sim.loop.after(0.0, lambda: self._complete(job, v))
 
 
 class _SimPacker(QuotaPacker):

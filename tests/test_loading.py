@@ -1,10 +1,12 @@
 """Loading plans (Fig. 4) must reproduce the §4.2 per-resource coefficients."""
 from fractions import Fraction
 
+import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.loading import (basic_plan, de_read_plan, oracle_plan,
-                                pe_read_plan, plan_for, resource_bytes,
+from repro.core.loading import (basic_plan, de_read_plan, hedge_water_fill,
+                                oracle_plan, pe_read_plan, plan_for,
+                                rebalance_remainder, resource_bytes,
                                 split_read_plan)
 
 
@@ -114,6 +116,65 @@ def test_split_plan_load_legs_occupy_both_snics():
     snics = {r for leg in load for r in leg.resources if r.endswith("snic")}
     assert snics == {"pe_snic", "de_snic"}
     assert sum(leg.nbytes for leg in load) == 1000
+
+
+# ---------------------------------------------------------------------------
+# hedged split reads: the pure remainder re-partition (sim/faults.py)
+# ---------------------------------------------------------------------------
+
+
+@given(pe=st.integers(0, 1 << 20), de=st.integers(0, 1 << 20),
+       rem_frac=st.floats(0.0, 1.0),
+       move=st.integers(-(1 << 10), 1 << 21),
+       side=st.sampled_from(["pe", "de"]))
+@settings(max_examples=100, deadline=None)
+def test_property_rebalance_remainder_conserves_exactly(pe, de, rem_frac,
+                                                        move, side):
+    """The docstring invariants: new_pe + new_de == pe + de exactly, and
+    whatever move is requested (negative, or beyond the remainder), the
+    realised fraction moved / remainder stays in [0, 1]."""
+    src = pe if side == "pe" else de
+    rem = int(src * rem_frac)
+    new_pe, new_de = rebalance_remainder(pe, de, side, rem, move)
+    assert new_pe + new_de == pe + de
+    assert new_pe >= 0 and new_de >= 0
+    moved = (pe - new_pe) if side == "pe" else (de - new_de)
+    assert 0 <= moved <= rem
+    if rem:
+        assert 0.0 <= moved / rem <= 1.0
+    # the other side only ever gains
+    gained = (new_de - de) if side == "pe" else (new_pe - pe)
+    assert gained == moved
+
+
+def test_rebalance_remainder_rejects_remainder_beyond_snic_share():
+    """Tier-hit bytes are not an input: a remainder larger than the
+    side's SNIC share means the caller tried to re-charge bytes that
+    never belonged to a storage NIC — rejected, not clamped away."""
+    with pytest.raises(AssertionError):
+        rebalance_remainder(10, 50, "pe", 11, 5)
+    with pytest.raises(AssertionError):
+        rebalance_remainder(50, 10, "de", 11, 5)
+    # at exactly the share it is a legal full-remainder hedge
+    assert rebalance_remainder(10, 50, "pe", 10, 10) == (0, 60)
+
+
+@given(rem=st.integers(0, 1 << 20), backlog=st.integers(0, 1 << 20),
+       sev=st.floats(1.0, 128.0))
+@settings(max_examples=100, deadline=None)
+def test_property_hedge_water_fill_equalises_completion(rem, backlog,
+                                                        sev):
+    """Unclamped, the water-fill solves backlog + x == (rem - x) * s;
+    clamped, it pins to the [0, remainder] boundary."""
+    x = hedge_water_fill(rem, sev, backlog)
+    assert 0 <= x <= rem
+    ideal = (sev * rem - backlog) / (1.0 + sev)
+    if 0 < x < rem:
+        assert abs(x - ideal) <= 1.0          # int truncation only
+    elif x == 0:
+        assert ideal < 1.0
+    else:
+        assert ideal >= rem - 1.0
 
 
 def test_plan_for_dispatch():

@@ -104,6 +104,61 @@ def test_slo_judges_single_token_rounds_on_ttft_alone():
                           tpot_slo_s=1e9) == 0.0
 
 
+# ---------------------------------------------------------------------------
+# recovery accounting (engine death -> resubmit, sim/faults.py)
+# ---------------------------------------------------------------------------
+# When an engine dies, the runtime resubmits its in-flight rounds under
+# the ORIGINAL submission time, and milestone stamps are set-once: a
+# milestone reached before the death keeps its first-attempt value, one
+# never reached is stamped by the recovery attempt.  ``done_t`` is
+# always the true completion, so the recovery gap lands in TPOT (for a
+# mid-decode death) or TTFT (for a pre-prefill death) — the SLO judge
+# sees the fault, never a reset clock.
+#
+# Hand-computed single-fault scenario (death at t=5.0):
+#   rid 7 — mid-decode death.  submit 1.0, prefill 3.0, first token
+#     3.5, second 4.0 (all pre-death stamps survive); recovery finishes
+#     the round at done 20.0 with gen 9.
+#       TTFT = 3.0 - 1.0 = 2.0        (unchanged by the fault)
+#       TTST = 4.0 - 1.0 = 3.0
+#       TPOT = (20.0 - 3.5) / 8 = 2.0625   (recovery gap included)
+#   rid 8 — death before prefill.  submit 2.0; no stamp existed, so the
+#     recovery attempt stamps prefill 9.0, first 9.5, second 10.0,
+#     done 12.0 with gen 6.
+#       TTFT = 9.0 - 2.0 = 7.0        (the re-queue wait is charged)
+#       TTST = 10.0 - 2.0 = 8.0
+#       TPOT = (12.0 - 9.5) / 5 = 0.5
+RECOVERY_FIXTURE = [
+    _round(7, 1.0, 3.0, 3.5, 4.0, 20.0, 9),
+    _round(8, 2.0, 9.0, 9.5, 10.0, 12.0, 6),
+]
+
+
+def test_recovery_round_latencies_pinned():
+    mid, pre = RECOVERY_FIXTURE
+    assert mid.finished and pre.finished
+    assert mid.ttft == pytest.approx(2.0)
+    assert mid.ttst == pytest.approx(3.0)
+    assert mid.tpot == pytest.approx(2.0625)
+    assert pre.ttft == pytest.approx(7.0)
+    assert pre.ttst == pytest.approx(8.0)
+    assert pre.tpot == pytest.approx(0.5)
+    s = latency_summary(RECOVERY_FIXTURE)
+    assert s["finished_rounds"] == 2
+    assert s["ttft_mean"] == pytest.approx(4.5)
+    assert s["tpot_mean"] == pytest.approx(1.28125)
+
+
+def test_recovery_slo_judging_pinned():
+    """Hand-judged against TTFT<=3.0, TPOT<=1.0:
+    rid 7: ttft 2.0 ok, tpot 2.0625 fail  -> fail  (decode gap counted)
+    rid 8: ttft 7.0 fail                  -> fail  (requeue wait counted)
+    => 0/2; relaxing TPOT admits rid 7 only => 1/2."""
+    assert slo_attainment(RECOVERY_FIXTURE, 3.0, 1.0) == 0.0
+    assert slo_attainment(RECOVERY_FIXTURE, 3.0, 2.1) == pytest.approx(0.5)
+    assert slo_attainment(RECOVERY_FIXTURE, 7.5, 2.1) == 1.0
+
+
 def test_summary_mirrors_sim_results_estimators():
     """The serving summary and Sim.results() compute TTFT/TPOT/TTST the
     same way: means and percentiles over the same per-round values."""

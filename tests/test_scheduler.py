@@ -332,6 +332,184 @@ def test_property_tier_partition_conserves_hit(cached, t_pe, t_de, pe_q,
 
 
 # ---------------------------------------------------------------------------
+# hedged split reads (fault tolerance — sim/faults.py)
+# ---------------------------------------------------------------------------
+
+
+@given(rem=st.integers(0, 1 << 16), backlog=st.integers(0, 1 << 16),
+       sevs=st.lists(st.floats(1.0, 64.0), min_size=2, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_property_hedge_water_fill_monotone_in_severity(rem, backlog,
+                                                        sevs):
+    """The loading.hedge_water_fill contract: the moved share stays in
+    [0, remainder] and never decreases as the observed straggle severity
+    grows — a worse straggler never hedges less."""
+    from repro.core.loading import hedge_water_fill
+    moves = [hedge_water_fill(rem, s, backlog) for s in sorted(sevs)]
+    assert all(0 <= m <= rem for m in moves)
+    assert all(b >= a for a, b in zip(moves, moves[1:])), moves
+
+
+@given(rem=st.integers(0, 1 << 16), backlog=st.integers(0, 1 << 16))
+@settings(max_examples=100, deadline=None)
+def test_property_hedge_water_fill_zero_iff_healthy_and_unloaded(rem,
+                                                                 backlog):
+    """At severity 1 the hedge moves nothing exactly when the healthy
+    side's backlog already covers the remainder (the equalising
+    water level is non-positive)."""
+    from repro.core.loading import hedge_water_fill
+    moved = hedge_water_fill(rem, 1.0, backlog)
+    if backlog >= rem:
+        assert moved == 0
+    else:
+        assert moved == (rem - backlog) // 2
+
+
+@given(cached=st.integers(1, 1 << 14), pe_q=st.integers(0, 1 << 14),
+       de_q=st.integers(0, 1 << 14), rem_frac=st.floats(0.0, 1.0),
+       sev=st.floats(1.0, 32.0), backlog=st.integers(0, 1 << 14),
+       side=st.sampled_from(["pe", "de"]))
+@settings(max_examples=100, deadline=None)
+def test_property_scheduler_rebalance_conserves_charge(cached, pe_q, de_q,
+                                                       rem_frac, sev,
+                                                       backlog, side):
+    """Scheduler.rebalance_remainder: the per-side token partition
+    conserves the hit exactly, the moved share never exceeds the
+    remainder, the disk-queue charge transfers atomically, and the
+    final on_read_done releases balance both queues to their
+    pre-request values."""
+    s = mk_sched(split_reads=True)
+    s.engines[(0, 0)].read_q = pe_q
+    s.engines[(10, 0)].read_q = de_q
+    r = Request(rid=0, cached_tokens=cached, new_tokens=1, gen_tokens=1)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r)
+    before = dict(r.read_tokens_by_side())
+    q_pe = s.engines[(0, 0)].read_q
+    q_de = s.engines[(10, 0)].read_q
+    rem = int(before[side] * rem_frac)
+    moved = s.rebalance_remainder(r, side, rem, sev,
+                                  healthy_backlog_tokens=backlog)
+    after = r.read_tokens_by_side()
+    assert 0 <= moved <= rem                      # fraction in [0, 1]
+    assert after["pe"] + after["de"] == cached    # conservation, exact
+    assert after[side] == before[side] - moved
+    sign = -1 if side == "pe" else +1
+    assert s.engines[(0, 0)].read_q == q_pe + sign * moved
+    assert s.engines[(10, 0)].read_q == q_de - sign * moved
+    assert 0.0 <= r.read_split <= 1.0
+    # each side's eventual on_read_done releases its *current* share:
+    # the books balance to the pre-request queues exactly
+    s.on_read_done((0, 0), after["pe"])
+    s.on_read_done((10, 0), after["de"])
+    assert s.engines[(0, 0)].read_q == pe_q
+    assert s.engines[(10, 0)].read_q == de_q
+
+
+@given(cached=st.integers(1, 1 << 14), rem=st.integers(0, 1 << 14),
+       backlog=st.integers(0, 1 << 14),
+       sevs=st.lists(st.floats(1.0, 32.0), min_size=2, max_size=6))
+@settings(max_examples=50, deadline=None)
+def test_property_scheduler_rebalance_monotone_in_severity(cached, rem,
+                                                           backlog, sevs):
+    """For a fixed pre-hedge state, the moved token count is monotone
+    non-decreasing in the observed straggle severity."""
+    moves = []
+    for sev in sorted(sevs):
+        s = mk_sched(split_reads=True)
+        r = Request(rid=0, cached_tokens=cached, new_tokens=1,
+                    gen_tokens=1)
+        r.pe, r.de = (0, 0), (10, 0)
+        s.choose_read_path(r)
+        moves.append(s.rebalance_remainder(
+            r, "pe", rem, sev, healthy_backlog_tokens=backlog))
+    assert all(b >= a for a, b in zip(moves, moves[1:])), moves
+
+
+def test_rebalance_never_recharges_tier_hits_to_a_snic():
+    """A request whose hit is partly DRAM-tier served: the hedge's
+    remainder clamps to the straggling side's SNIC share, and the tier
+    partition is untouched — tier-hit tokens can never migrate into a
+    storage-NIC charge."""
+    s = mk_sched(split_reads=True)
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r, tier_tokens={"pe": 40, "de": 0})
+    dram = (r.dram_side, r.dram_tokens)
+    before = dict(r.snic_tokens)
+    # ask to move "everything": only the DE SNIC share is movable
+    moved = s.rebalance_remainder(r, "de", 10 ** 9, severity=32.0)
+    assert moved <= before["de"]
+    assert (r.dram_side, r.dram_tokens) == dram
+    assert (r.snic_tokens["pe"] + r.snic_tokens["de"] ==
+            before["pe"] + before["de"])
+    assert (r.dram_tokens + r.snic_tokens["pe"] +
+            r.snic_tokens["de"]) == 100
+
+
+def test_rebalance_zero_move_leaves_request_untouched():
+    s = mk_sched(split_reads=True)
+    r = Request(rid=0, cached_tokens=100, new_tokens=10, gen_tokens=10)
+    r.pe, r.de = (0, 0), (10, 0)
+    s.choose_read_path(r)
+    state = (r.read_path, r.read_split, dict(r.read_tokens_by_side()))
+    # severity 1, no backlog advantage over an empty remainder
+    assert s.rebalance_remainder(r, "pe", 0, 8.0) == 0
+    assert (r.read_path, r.read_split,
+            dict(r.read_tokens_by_side())) == state
+
+
+# ---------------------------------------------------------------------------
+# fail-stop engine removal (sim/faults.py EngineDeath)
+# ---------------------------------------------------------------------------
+
+
+def test_fail_engine_removes_from_registry_and_tolerates_late_hooks():
+    s = mk_sched()
+    rs = reqs(50, 60)
+    for r in rs:
+        s.submit(r)
+    out = s.on_pe_fetch(0)
+    victim = out[0].engine
+    st_ = s.fail_engine(victim)
+    assert st_.engine == victim
+    assert victim not in s.engines
+    assert victim not in s._groups.get(0, [])
+    # late completion hooks from in-flight work are swallowed, not raised
+    s.on_read_done(victim, 100)
+    s.on_request_done(victim, out[0].request)
+    # the survivors keep scheduling
+    s.submit(Request(rid=9, cached_tokens=10, new_tokens=10,
+                     gen_tokens=10))
+    out2 = s.on_pe_fetch(0)
+    assert out2 and all(a.engine != victim for a in out2)
+
+
+def test_fail_engine_reroutes_orphaned_private_queue():
+    """Killing a DE group's last member must push its private queue
+    back to the global queue (in submission order) for re-routing —
+    requests conserved, nothing stranded."""
+    s = Scheduler(alpha=10, beta=10_000)
+    for j in range(2):
+        st_ = s.register_engine((j, 0), node=j, kind="de", group=j)
+        st_.free_hbm_tokens = 10_000
+    for r in reqs(100, 100, 100, 100):
+        s.submit(r)
+    s.de_phase1()
+    total = (len(s.de_global_queue) +
+             sum(len(q) for q in s.de_private.values()))
+    assert total == 4
+    s.fail_engine((0, 0))
+    assert (0, 0) not in s.engines
+    assert 0 not in s.de_private          # orphaned queue dissolved
+    left = (len(s.de_global_queue) +
+            sum(len(q) for q in s.de_private.values()))
+    assert left == total                  # every request conserved
+    assert [r.rid for r in s.de_global_queue] == \
+        sorted(r.rid for r in s.de_global_queue)
+
+
+# ---------------------------------------------------------------------------
 # compute-network back-pressure (repro.network congestion signal)
 # ---------------------------------------------------------------------------
 
