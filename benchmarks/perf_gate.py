@@ -16,6 +16,9 @@ Usage::
                                 # (how BENCH_<n>.json is regenerated
                                 # after an intentional perf change)
   perf_gate.py --compare A B    # gate B against baseline A, no runs
+  perf_gate.py --from-json F    # gate an already-collected metrics file
+                                # (benchmarks/run.py --smoke-all --json F)
+                                # against the latest BENCH_*, no runs
   perf_gate.py --self-test      # verify the comparator catches an
                                 # injected >5% regression (no runs)
 
@@ -33,6 +36,7 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import math
 import os
 import re
 import sys
@@ -66,6 +70,12 @@ DIRECTIONS = {
                        "straggle_ttft_p99_nohedge_s": 0,
                        "sim_hedged_reads": 0,
                        "sim_recovered_rounds": 0},
+    "fig_bottleneck": {"storage_frac_storage_bound": +1,
+                       "compute_frac_compute_bound": +1,
+                       "storage_bound_ttft_mean_s": 0,
+                       "max_decomp_err_s": -1,
+                       "attr_ttft_rel_err": -1,
+                       "trace_spans": 0},
 }
 
 #: absolute slack added to every band, so near-zero baselines gate on
@@ -107,6 +117,16 @@ def compare(baseline: dict, current: dict,
                       f"not gated", file=sys.stderr)
                 continue
             cur_v = cur[name]
+            # a non-finite current value against a finite baseline can
+            # never pass a band check by arithmetic (every NaN compare
+            # is False), so it must fail explicitly — a metric decaying
+            # to NaN/inf is a lost metric, not within-band noise
+            if not math.isfinite(cur_v):
+                if isinstance(base_v, float) and not math.isfinite(base_v):
+                    continue        # non-finite on both sides: recorded
+                bad.append(f"{bench}.{name}: non-finite current value "
+                           f"{cur_v!r} vs baseline {base_v:.4g}")
+                continue
             band = rel_tol * abs(base_v) + \
                 ABS_FLOOR.get(name, DEFAULT_ABS_FLOOR)
             delta = (cur_v - base_v) * direction
@@ -158,6 +178,15 @@ def self_test() -> None:
                                  "vl_collective_stall_s", 0.5))
     assert compare(base, mut("fig_interference",
                              "vl_collective_stall_s", 5.0))
+    # a gated metric decaying to NaN/inf must fail, not slip through
+    # NaN-compares-false arithmetic; NaN-vs-NaN is merely recorded
+    assert compare(base, mut("fig_online_serving", "offline_tok_s",
+                             float("nan")))
+    assert compare(base, mut("fig_elastic", "reconfig_drain_s",
+                             float("inf")))
+    nan_base = json.loads(json.dumps(base))
+    nan_base["metrics"]["fig_elastic"]["reconfig_drain_s"] = float("nan")
+    assert not compare(nan_base, json.loads(json.dumps(nan_base)))
     # losing a metric or a whole benchmark fails — including metrics
     # whose direction is informational (0) or unregistered
     base["metrics"]["fig_elastic"]["static_best_tput_tok_s"] = 1500.0
@@ -180,6 +209,9 @@ def main(argv=None) -> int:
                     help="run smokes and write PATH without gating")
     ap.add_argument("--compare", nargs=2, metavar=("BASE", "CUR"),
                     help="gate CUR against BASE without running")
+    ap.add_argument("--from-json", metavar="PATH",
+                    help="gate an already-collected metrics file "
+                         "against the latest BENCH_* without running")
     ap.add_argument("--out", default="bench_current.json",
                     help="where the gating run writes its metrics "
                          "(uploaded as a CI artifact)")
@@ -195,6 +227,25 @@ def main(argv=None) -> int:
             base = json.load(f)
         with open(args.compare[1]) as f:
             cur = json.load(f)
+        bad = compare(base, cur, rel_tol=args.rel_tol)
+    elif args.from_json:
+        with open(args.from_json) as f:
+            cur = json.load(f)
+        if cur.get("schema") != SCHEMA:
+            print(f"perf_gate: {args.from_json} has schema "
+                  f"{cur.get('schema')!r}, expected {SCHEMA}",
+                  file=sys.stderr)
+            return 1
+        base_path = latest_baseline_path(
+            exclude=os.path.abspath(args.from_json))
+        if base_path is None:
+            print("perf_gate: no committed BENCH_*.json baseline; "
+                  "metrics recorded only")
+            return 0
+        with open(base_path) as f:
+            base = json.load(f)
+        print(f"perf_gate: comparing {args.from_json} against "
+              f"{base_path}")
         bad = compare(base, cur, rel_tol=args.rel_tol)
     elif args.collect:
         data = collect()

@@ -24,11 +24,11 @@ if __package__ in (None, ""):       # direct `python benchmarks/run.py`
 def suite():
     from benchmarks import (fig7_offline, fig8_pd_ratio, fig9_append_gen,
                             fig10_online, fig12_ablation, fig13_balance,
-                            fig_elastic, fig_interference,
-                            fig_online_serving, fig_resilience,
-                            fig_tiered_prefetch, kernel_bench,
-                            micro_submit, roofline, table1_cache_compute,
-                            table3_scale)
+                            fig_bottleneck, fig_elastic,
+                            fig_interference, fig_online_serving,
+                            fig_resilience, fig_tiered_prefetch,
+                            kernel_bench, micro_submit, roofline,
+                            table1_cache_compute, table3_scale)
     return {
         "table1": table1_cache_compute.run,
         "micro_submit": micro_submit.run,
@@ -44,6 +44,7 @@ def suite():
         "fig_interference": fig_interference.run,
         "fig_elastic": fig_elastic.run,
         "fig_resilience": fig_resilience.run,
+        "fig_bottleneck": fig_bottleneck.run,
         "table3": table3_scale.run,
         "roofline": roofline.run,
     }
@@ -93,7 +94,12 @@ def main(argv=None) -> None:
     ap.add_argument("--smoke-all", action="store_true",
                     help="run every benchmark that declares --smoke and "
                          "fail on the first acceptance violation")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --smoke-all: write the collected headline "
+                         "metrics as perf_gate-schema JSON to PATH")
     args = ap.parse_args(argv)
+    if args.json and not args.smoke_all:
+        raise SystemExit("--json requires --smoke-all")
 
     from benchmarks.common import header
 
@@ -108,7 +114,15 @@ def main(argv=None) -> None:
         return
     only = set(args.only.split(",")) if args.only else None
     if args.smoke_all:
-        run_smoke_all(only=only)
+        metrics = run_smoke_all(only=only)
+        if args.json:
+            import json
+            from benchmarks.perf_gate import SCHEMA
+            with open(args.json, "w") as f:
+                json.dump({"schema": SCHEMA, "metrics": metrics}, f,
+                          indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"wrote {args.json}", file=sys.stderr)
         return
     header()
     for name, fn in full.items():

@@ -102,6 +102,11 @@ class PDController:
     _last_action_t: float = field(default=float("-inf"))
     n_proposed: int = 0
 
+    #: optional flight recorder (repro.obs.Tracer) — a plain class
+    #: attribute, NOT a dataclass field: attaching a tracer must not
+    #: change the controller's repr/eq or its constructor signature
+    tracer = None
+
     def target_ratio(self, sig: LoadSignals) -> float:
         """pe/de pressure ratio this observation (inf when DEs idle)."""
         de = sig.de_pressure
@@ -138,6 +143,11 @@ class PDController:
         self._streak = 0
         self._last_action_t = now
         self.n_proposed += 1
+        if self.tracer is not None:
+            self.tracer.event("autoscale", "proposal", t=now,
+                              action=action,
+                              ratio=(-1.0 if r == float("inf") else r),
+                              n_pe=sig.n_pe, n_de=sig.n_de)
         return action
 
 

@@ -176,6 +176,10 @@ class Scheduler:
     processes in 5 s.  Both profiled in advance (§A.4).
     """
 
+    #: optional flight recorder (repro.obs.Tracer), attached by the
+    #: owning runtime; None = untraced, every hook is a no-op branch
+    tracer = None
+
     def __init__(self, alpha: int, beta: int, *, z_factor: float = 1.05,
                  split_reads: bool = False):
         self.alpha = alpha
@@ -472,6 +476,12 @@ class Scheduler:
         req.read_split = major / req.cached_tokens
         self.engines[req.pe].read_q += snic["pe"]
         self.engines[req.de].read_q += snic["de"]
+        if self.tracer is not None:
+            self.tracer.event("sched", "read_path", rid=req.rid,
+                              path=req.read_path, split=req.read_split,
+                              tier_side=side, tier_tokens=t,
+                              pe_tokens=snic["pe"],
+                              de_tokens=snic["de"])
         return req.read_path
 
     def choose_read_path(self, req: Request,
@@ -547,6 +557,12 @@ class Scheduler:
         tokens = req.read_tokens_by_side()
         self.engines[req.pe].read_q += tokens["pe"]
         self.engines[req.de].read_q += tokens["de"]
+        if self.tracer is not None:
+            self.tracer.event("sched", "read_path", rid=req.rid,
+                              path=req.read_path, split=req.read_split,
+                              tier_side="", tier_tokens=0,
+                              pe_tokens=tokens["pe"],
+                              de_tokens=tokens["de"])
         return req.read_path
 
     # ------------------------------------------------------------------
@@ -615,6 +631,13 @@ class Scheduler:
         major = pe_total if req.read_path == "pe" else de_total
         if req.cached_tokens:
             req.read_split = major / req.cached_tokens
+        if self.tracer is not None:
+            # one event per hedge that actually moved tokens — the
+            # trace audit pins count/sum against hedged_reads /
+            # hedge_moved_tokens in BOTH runtimes
+            self.tracer.event("sched", "hedge", rid=req.rid,
+                              from_side=from_side,
+                              moved_tokens=moved)
         return moved
 
     # ------------------------------------------------------------------

@@ -1,0 +1,35 @@
+"""Flight-recorder observability layer shared by both runtimes.
+
+A deterministic, zero-overhead-when-disabled tracing + metrics
+subsystem for the discrete-event simulator (``repro.sim``) and the
+event-driven serving runtime (``repro.serving``):
+
+* :mod:`repro.obs.tracer` — spans/events/counters on the *modelled*
+  clock, exported as Chrome-trace JSON (open in Perfetto);
+* :mod:`repro.obs.schema` — the canonical metric-name registry both
+  runtimes' results dicts are validated against;
+* :mod:`repro.obs.metrics` — counters/gauges/histograms under the
+  schema's naming rules;
+* :mod:`repro.obs.attribution` — critical-path decomposition of each
+  request's TTFT into per-resource waiting seconds;
+* :mod:`repro.obs.audit` — cross-validation of span byte sums against
+  the runtimes' conservation ledgers (the recorder is correctness
+  tooling, not just logging).
+
+Every hook in the runtimes is guarded by ``if tracer is not None`` —
+with no tracer attached the instrumented code paths execute the exact
+pre-instrumentation arithmetic (bit-identical token streams and stats,
+pinned by tests/test_obs.py).
+"""
+from repro.obs.attribution import attribute_ttft, bottleneck_report
+from repro.obs.audit import TraceAuditError, audit_serving, audit_sim
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.schema import conforming, orphans, registered_keys
+from repro.obs.tracer import Tracer
+
+__all__ = [
+    "Tracer", "conforming", "orphans", "registered_keys",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "attribute_ttft", "bottleneck_report",
+    "audit_sim", "audit_serving", "TraceAuditError",
+]

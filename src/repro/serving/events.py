@@ -119,9 +119,19 @@ class RoundMetrics:
 
 def latency_summary(metrics: Iterable[RoundMetrics]) -> dict:
     """TTFT/TTST/TPOT summary over finished rounds — the same keys (and
-    the same definitions) as ``Sim.results()``."""
+    the same definitions) as ``Sim.results()``.
+
+    NaN contract: with no finished rounds every mean/percentile is NaN
+    (never an exception), and the NaN flows — unchanged — through
+    ``slo_attainment``, ``ServingSystem.stats()``, the fig_* smoke
+    asserts and the perf gate (whose comparator rejects a gated metric
+    decaying to NaN against a finite baseline).  Pinned by
+    tests/test_metrics_regression.py."""
     done = [m for m in metrics if m.finished]
-    ttfts = [m.ttft for m in done]
+    # a finished round without a prefill stamp (possible only for
+    # exotic recovery interleavings) must not contribute a garbage
+    # negative TTFT — it is excluded, like Sim.results() does
+    ttfts = [m.ttft for m in done if m.prefill_done_t >= 0]
     ttsts = [m.ttst for m in done if m.ttst is not None]
     tpots = [m.tpot for m in done if m.tpot is not None]
     pct = lambda xs, q: float(np.percentile(xs, q)) if xs else float("nan")

@@ -60,6 +60,7 @@ from repro.core.traffic import TrafficClass, TrafficManager
 from repro.engines import kvio
 from repro.engines.runtime import (DecodeEngine, EngineRequest,
                                    PrefillEngine, uses_state_blob)
+from repro.obs.schema import conforming
 from repro.kvcache.store import MemoryKVStore, StateBlobStore
 from repro.kvcache.tiers import DramTier, ThinkTimePrefetcher
 from repro.kvcache.trie import BlockTrie
@@ -105,7 +106,8 @@ class ServingSystem:
                  reconfig_idle_floor_s: float = 1e-3,
                  faults: Optional[FaultSchedule] = None,
                  hedge_reads: bool = False,
-                 hedge_min_severity: float = 2.0):
+                 hedge_min_severity: float = 2.0,
+                 tracer=None):
         assert mode in ("dualpath", "basic")
         self.cfg = cfg
         self.params = params            # role flips build new engines
@@ -237,6 +239,25 @@ class ServingSystem:
         self.recovered_rounds = 0
         self.hedged_reads = 0
         self.hedge_moved_tokens = 0
+        # --- flight recorder (repro.obs) -------------------------------
+        # Optional; ``tracer=None`` keeps every hook a structural no-op
+        # so untraced runs stay bit-identical.  Lifecycle spans are
+        # closed at end-of-tick (the same deferred-timestamp rule
+        # _stamp uses), so span edges match the stamped milestones.
+        self.tracer = tracer
+        self._pending_states: List[Tuple[EngineRequest, ReqState]] = []
+        if tracer is not None:
+            tracer.bind_clock(lambda: self.clock.now)
+            if self.faults is not None:
+                tracer.annotate_faults(self.faults)
+            self.sched.tracer = tracer
+            self.controller.tracer = tracer
+            for node_id, tier in self.tiers.items():
+                tier.tracer = tracer
+                tier.track = f"tier/node{node_id}"
+            for eng in (*self.pes.values(), *self.des.values()):
+                eng.tm.tracer = tracer
+                eng.tm.track = f"traffic/node{eng.eid[0]}"
 
     # ------------------------------------------------------------------
     def _all_tms(self) -> Iterator[TrafficManager]:
@@ -300,6 +321,7 @@ class ServingSystem:
         er._pd_ready = False
         er._cancelled = False
         er.lifecycle = ReqState.SCHEDULED
+        self._trace_submit(er)
         sess.current = er
         sess.next_round += 1
         self._inflight[req.rid] = er
@@ -372,7 +394,7 @@ class ServingSystem:
                     er._tier_pinned = (node, prefix)
             ready.append(er)
         for er in ready:
-            er.lifecycle = ReqState.READING
+            self._set_state(er, ReqState.READING)
             if self.pipelined:
                 self._issue_read(er)
             else:
@@ -445,6 +467,9 @@ class ServingSystem:
             payload = er._blob
             nbytes = len(payload) if payload else 0
             self.read_bytes_by_side[side] += nbytes
+            if nbytes and self.tracer is not None:
+                self.tracer.event(f"req/{req.rid}", "storage_read",
+                                  side=side, nbytes=nbytes)
             er._read_box = {}
             node = pe_node if side == "pe" else de_node
             self._tick_io.add(("snic", node),
@@ -491,6 +516,9 @@ class ServingSystem:
                                           now=self._tier_now())
                 hit_b = sum(b.nbytes for b in blocks)
                 self.dram_bytes_by_side[side] += hit_b
+                if hit_b and self.tracer is not None:
+                    self.tracer.event(f"req/{req.rid}", "tier_hit",
+                                      side=side, nbytes=hit_b)
                 self._tick_io.add(("dram", node), tmod.dram_seconds(hit_b))
             elif node in self.tiers:
                 # read through the node tier: misses hit the store (the
@@ -505,6 +533,13 @@ class ServingSystem:
                 hit_b = tier.dram_hit_bytes - h0
                 self.read_bytes_by_side[side] += miss_b
                 self.dram_bytes_by_side[side] += hit_b
+                if self.tracer is not None:
+                    if miss_b:
+                        self.tracer.event(f"req/{req.rid}", "storage_read",
+                                          side=side, nbytes=miss_b)
+                    if hit_b:
+                        self.tracer.event(f"req/{req.rid}", "tier_hit",
+                                          side=side, nbytes=hit_b)
                 self._tick_io.add(("snic", node),
                                   self._snic_s(node, miss_b, rid=req.rid,
                                                side=side))
@@ -516,6 +551,9 @@ class ServingSystem:
                                   self._snic_s(node, nb, rid=req.rid,
                                                side=side))
                 self.read_bytes_by_side[side] += nb
+                if nb and self.tracer is not None:
+                    self.tracer.event(f"req/{req.rid}", "storage_read",
+                                      side=side, nbytes=nb)
             nbytes = sum(b.nbytes for b in blocks)
             out.append((pe.tm if side == "pe" else de_tm,
                         lambda blocks=blocks, lo=lo:
@@ -574,7 +612,7 @@ class ServingSystem:
         req = er.req
         self._release_read_q(req)
         self._stamp(req.rid, "read_done_t")
-        er.lifecycle = ReqState.PREFILL
+        self._set_state(er, ReqState.PREFILL)
         pe = self.pes[req.pe]
         if uses_state_blob(self.cfg):
             pe.install_hit_kv(er, er._read_box.get("p"))
@@ -619,7 +657,7 @@ class ServingSystem:
             for er in done:
                 self.sched.on_request_done(er.req.pe, er.req)
                 self._stamp(er.req.rid, "prefill_done_t")
-                er.lifecycle = ReqState.PD_TRANSFER
+                self._set_state(er, ReqState.PD_TRANSFER)
                 self._queue_pd_transfer(er)
         self._tick_compute += pe_max
         return act
@@ -675,7 +713,7 @@ class ServingSystem:
                 continue               # re-homed after an engine death
             de = self.des[er.req.de]
             if de.free_slots:
-                er.lifecycle = ReqState.DECODE
+                self._set_state(er, ReqState.DECODE)
                 de.admit(er)
                 n += 1
             else:
@@ -697,6 +735,9 @@ class ServingSystem:
             self._charge_collectives(de_node, len(de.last_step_ctxs))
             act += (de.decode_steps - steps0) + len(finished)
             persist_b = de.tm.bytes[TrafficClass.KV_TRANSFER] - b0
+            if persist_b and self.tracer is not None:
+                self.tracer.event(f"engine/node{de_node}", "persist",
+                                  nbytes=persist_b)
             self._tick_io.add(("snic", de_node),
                               self._snic_s(de_node, persist_b))
             for er in active_before:
@@ -714,7 +755,7 @@ class ServingSystem:
                 pend, de.pending_persist = de.pending_persist, []
                 if pend:
                     for er, _ in pend:
-                        er.lifecycle = ReqState.PERSIST
+                        self._set_state(er, ReqState.PERSIST)
 
                     def persists_done(pend=pend):
                         for er, fin in pend:
@@ -740,7 +781,7 @@ class ServingSystem:
                         er.generated)
         sess.rounds_done += 1
         sess.current = None
-        er.lifecycle = ReqState.DONE
+        self._set_state(er, ReqState.DONE)
         self.gen_tokens_done += len(er.generated)
         del self._inflight[er.req.rid]
         if self.tiers:
@@ -825,6 +866,23 @@ class ServingSystem:
             self._read_complete(er)
         return n
 
+    def _set_state(self, er: EngineRequest, state: ReqState):
+        """Lifecycle transition.  With a tracer attached the previous
+        state is closed as a span on the request's track at the end of
+        the current tick (``_flush_stamps``) so span edges line up with
+        the stamped milestones."""
+        er.lifecycle = state
+        if self.tracer is not None:
+            self._pending_states.append((er, state))
+
+    def _trace_submit(self, er: EngineRequest):
+        """Open the lifecycle span chain at submission time itself (not
+        end-of-tick): the first span's t0 must equal the metrics'
+        ``submit_t`` so the attribution window matches measured TTFT."""
+        if self.tracer is not None:
+            er._span_state = "scheduled"
+            er._state_t0 = self.clock.now
+
     def _stamp(self, rid: int, field_name: str):
         """Defer a milestone timestamp to the end of the current tick
         (after the clock charges the tick's modelled seconds) — stamping
@@ -835,10 +893,22 @@ class ServingSystem:
             self._pending_stamps.append((m, field_name))
 
     def _flush_stamps(self):
+        now = self.clock.now
         for m, fld in self._pending_stamps:
             if getattr(m, fld) < 0:
-                setattr(m, fld, self.clock.now)
+                setattr(m, fld, now)
+                if fld == "prefill_done_t" and self.tracer is not None:
+                    # TTFT endpoint (events.RoundMetrics.ttft)
+                    self.tracer.event(f"req/{m.rid}", "first_token")
         self._pending_stamps = []
+        for er, state in self._pending_states:
+            prev = getattr(er, "_span_state", None)
+            t0 = getattr(er, "_state_t0", now)
+            if prev is not None and now > t0:
+                self.tracer.span(f"req/{er.req.rid}", prev, t0, now)
+            er._span_state = state.name.lower()
+            er._state_t0 = now
+        self._pending_states.clear()
 
     def _submit_overhead_delta(self) -> float:
         tot = sum(tm.submitted_seconds for tm in self._all_tms())
@@ -999,7 +1069,16 @@ class ServingSystem:
         # the DE-group topology changed: re-route queued requests
         self.sched.rebalance_de_private()
         self.engine_lifecycle[eid] = EngineLifecycle.ACTIVE
-        self.drains.finish(eid, self.clock.now, tier_handoff_bytes=handoff)
+        rec = self.drains.finish(eid, self.clock.now,
+                                 tier_handoff_bytes=handoff)
+        if self.tracer is not None:
+            eng = self.pes.get(eid) or self.des[eid]
+            eng.tm.tracer = self.tracer
+            eng.tm.track = f"traffic/node{eid[0]}"
+            self.tracer.span(
+                "reconfig", "drain", rec.t_begin, self.clock.now,
+                engine=list(eid),
+                direction=f"{rec.from_kind}->{rec.to_kind}")
 
     def _elastic_tick(self):
         """Phase 0 of an elastic tick: flip engines whose RECONFIGURING
@@ -1053,6 +1132,10 @@ class ServingSystem:
         if eid not in self.pes and eid not in self.des:
             return                     # already dead / never existed
         self.dead_engines.append(eid)
+        if self.tracer is not None:
+            kind = "pe" if eid in self.pes else "de"
+            self.tracer.event("faults/deaths", "engine_death",
+                              engine=list(eid), kind=kind)
         # a victim dying mid-drain is not a role change: drop the record
         self.drains.abort(eid)
         self._reconfig_ready = [r for r in self._reconfig_ready
@@ -1143,12 +1226,16 @@ class ServingSystem:
         er2._pd_ready = False
         er2._cancelled = False
         er2.lifecycle = ReqState.SCHEDULED
+        self._trace_submit(er2)
         sess.current = er2
         self._inflight[req2.rid] = er2
         m = self.metrics.pop(req.rid)
         m.rid = req2.rid
         self.metrics[req2.rid] = m
         self.recovered_rounds += 1
+        if self.tracer is not None:
+            self.tracer.event(f"req/{req2.rid}", "recovered",
+                              old_rid=req.rid, cached_tokens=hit)
         self.sched.submit(req2)
 
     def _tick(self) -> int:
@@ -1187,6 +1274,9 @@ class ServingSystem:
             dt = self._tick_io.serial_seconds() + self._tick_compute
         self.clock.advance(dt + self._submit_overhead_delta())
         self._flush_stamps()
+        if self.tracer is not None:
+            self.tracer.counter("system/load",
+                                inflight=len(self._inflight))
         return act
 
     # ------------------------------------------------------------------
@@ -1244,7 +1334,7 @@ class ServingSystem:
     # ------------------------------------------------------------------
     def stats(self) -> dict:
         tiers = list(self.tiers.values())
-        return dict(
+        return conforming(dict(
             store_reads=self.store.bytes_read,
             store_writes=self.store.bytes_written,
             read_bytes_pe_side=self.read_bytes_by_side["pe"],
@@ -1287,7 +1377,7 @@ class ServingSystem:
             recovered_rounds=self.recovered_rounds,
             hedged_reads=self.hedged_reads,
             hedge_moved_tokens=self.hedge_moved_tokens,
-        )
+        ), "serving")
 
     def slo_attainment(self, ttft_slo_s: float = 4.0,
                        tpot_slo_s: float = 0.050) -> float:

@@ -46,6 +46,7 @@ from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
 from repro.core.traffic import TrafficClass
 from repro.kvcache.tiers import DramTier, ThinkTimePrefetcher
 from repro.network import CollectiveVolumeModel, SharedLink
+from repro.obs.schema import conforming
 from repro.sim.faults import FaultSchedule
 from repro.sim.spec import ModelSimSpec, NodeSpec
 from repro.sim.traces import Trajectory
@@ -338,7 +339,8 @@ class AgentSim:
 
 
 class Sim:
-    def __init__(self, cfg: SimConfig, trajectories: List[Trajectory]):
+    def __init__(self, cfg: SimConfig, trajectories: List[Trajectory],
+                 tracer=None):
         self.cfg = cfg
         self.loop = EventLoop()
         self.model = cfg.model
@@ -353,6 +355,17 @@ class Sim:
         # a structural no-op on the happy path (zero-fault identity)
         f = cfg.faults
         self.faults = f if (f is not None and not f.empty) else None
+        # --- flight recorder (repro.obs) -----------------------------------
+        # None by default: every hook below is guarded by `if tracer is
+        # not None`, so an untraced run executes the exact pre-obs
+        # arithmetic (bit-identity pinned by tests/test_obs.py).
+        self.tracer = tracer
+        # per-rid lifecycle timestamps (RoundSim has __slots__, so the
+        # trace scratch lives here, keyed by rid)
+        self._tr: Dict[int, dict] = {}
+        if tracer is not None:
+            tracer.bind_clock(lambda: self.loop.now)
+            tracer.annotate_faults(self.faults)
 
         # --- resources -----------------------------------------------------
         self.snic: Dict[int, "_FifoNic"] = {}
@@ -382,6 +395,9 @@ class Sim:
                 self.tiers[n] = DramTier(cfg.dram_tier_bytes,
                                          policy=cfg.tier_policy,
                                          ttl_s=cfg.tier_ttl_s)
+                if tracer is not None:
+                    self.tiers[n].tracer = tracer
+                    self.tiers[n].track = f"tier/node{n}"
         self.prefetcher = ThinkTimePrefetcher(cfg.prefetch_chunk_blocks) \
             if (cfg.prefetch and self.tiers) else None
 
@@ -400,6 +416,8 @@ class Sim:
         beta = int(cfg.beta_compute_s * tok_rate)
         self.sched = sched_cls(alpha=alpha, beta=beta,
                                split_reads=cfg.split_reads)
+        if tracer is not None:
+            self.sched.tracer = tracer
 
         kv_cap_bytes = cfg.node.gpu.hbm_bytes * cfg.kv_hbm_frac
         kv_cap_tokens = int(kv_cap_bytes / max(self.kv_per_token, 1)) \
@@ -478,6 +496,8 @@ class Sim:
             cooldown_s=cfg.reconfig_cooldown_s,
             idle_floor_s=cfg.reconfig_idle_floor_s,
             min_pe=cfg.elastic_min_pe, min_de=cfg.elastic_min_de)
+        if tracer is not None:
+            self.controller.tracer = tracer
         # role flips re-home the engine into a fresh singleton scheduler
         # group (groups are stepped in lockstep; a flipped engine shares
         # no step barrier with its old peers)
@@ -765,7 +785,8 @@ class Sim:
             w = self.model.active_param_bytes_resident(gsz)
             self.reconfig_weight_bytes += w
             self.snic[e.node].enqueue(
-                w, lambda rec=rec: self._finish_flip(rec), read=True)
+                w, lambda rec=rec: self._finish_flip(rec), read=True,
+                tag="weights")
 
     def _finish_flip(self, rec):
         eid = rec.engine
@@ -801,6 +822,11 @@ class Sim:
         # would otherwise never see the new group)
         self.sched.rebalance_de_private()
         self.drains.finish(eid, self.loop.now, tier_handoff_bytes=handoff)
+        if self.tracer is not None:
+            self.tracer.span(
+                "reconfig", "drain", rec.t_begin, self.loop.now,
+                engine=list(eid),
+                direction=f"{rec.from_kind}->{rec.to_kind}")
         self._kick_scheduler()
         if rec.to_kind == "pe":
             self._wake_pe_group(gid)
@@ -824,6 +850,9 @@ class Sim:
             return                       # unknown or already dead
         kind = e.kind
         self.dead_engines.append((self.loop.now, eid, kind))
+        if self.tracer is not None:
+            self.tracer.event("faults/deaths", "engine_death",
+                              engine=list(eid), kind=kind)
         # a victim dying mid-drain: the flip it was draining for is off
         if eid in self.drains.active:
             self.drains.abort(eid)
@@ -936,6 +965,10 @@ class Sim:
         rs.ctx = new_req.prompt_tokens
         rs.n_recoveries += 1
         self.recovered_rounds += 1
+        if self.tracer is not None:
+            self.tracer.event(f"req/{new_req.rid}", "recovered",
+                              old_rid=req.rid,
+                              cached_tokens=new_req.cached_tokens)
         self.sched.submit(new_req)
 
     # ------------------------------------------------------------------
@@ -1094,7 +1127,8 @@ class Sim:
                         "entry": None, "refs": [], "release": 0,
                         "done": False, "job": None}
                 rs.read_recs.append(brec)
-                brec["job"] = self.snic[node].enqueue(extra, finish)
+                brec["job"] = self.snic[node].enqueue(extra, finish,
+                                                      tag="blob")
                 return
             finish()
             return
@@ -1114,7 +1148,7 @@ class Sim:
                     "done": False, "job": None}
             rs.read_recs.append(brec)
             brec["job"] = self.snic[node].enqueue(
-                extra, lambda: self._read_leg_done(rs, brec))
+                extra, lambda: self._read_leg_done(rs, brec), tag="blob")
         for leg in snic_legs:
             side = "pe" if "pe_snic" in leg.resources else "de"
             engine = req.pe if side == "pe" else req.de
@@ -1151,6 +1185,10 @@ class Sim:
         rec["done"] = True
         if rec["entry"] is not None:
             rec["entry"][3] = self.loop.now
+            if self.tracer is not None and rec["entry"][2] >= 0:
+                e = rec["entry"]
+                self.tracer.span(f"req/{rs.req.rid}", "read_leg",
+                                 e[2], e[3], side=e[0], nbytes=e[1])
         self.sched.on_read_done(rec["engine"], rec["release"])
         tier = self.tiers.get(rec["engine"][0])
         if tier is not None:
@@ -1256,6 +1294,15 @@ class Sim:
 
     def _read_done(self, rs: RoundSim):
         rs.read_done_t = self.loop.now
+        if self.tracer is not None:
+            # the pre-read span: submission up to the first leg's
+            # service start (pure wait — attribution's queue residual)
+            starts = [rec["entry"][2] for rec in (rs.read_recs or [])
+                      if rec["entry"] is not None
+                      and rec["entry"][2] >= 0]
+            self.tracer.span(f"req/{rs.req.rid}", "scheduled",
+                             rs.submit_t,
+                             min(starts) if starts else self.loop.now)
         req = rs.req
         pe = self.engines[req.pe]
         pe.fifo.append(PrefillWork(req.rid, req.cached_tokens, req.new_tokens))
@@ -1296,6 +1343,21 @@ class Sim:
             "net": self.net,
         }
 
+    def _traced_leg_cb(self, rid: int, leg_name: str, nbytes: float,
+                       cb: Callable) -> Callable:
+        """Wrap a flow-completion callback with a ``pd_transfer`` span
+        on the request's track (no-op passthrough when untraced)."""
+        if self.tracer is None:
+            return cb
+        t0 = self.loop.now
+
+        def done():
+            self.tracer.span(f"req/{rid}", "pd_transfer", t0,
+                             self.loop.now, leg=leg_name, nbytes=nbytes)
+            cb()
+
+        return done
+
     def _launch_transfer_flows(self, rs: RoundSim):
         if self.cfg.mode == "oracle":
             rs.transfer_done = True
@@ -1318,7 +1380,9 @@ class Sim:
             rs.charge(leg)
             rs.flows.append(
                 Flow(self, leg.nbytes, [rmap[r] for r in leg.resources],
-                     leg_done, tclass=leg.tclass))
+                     self._traced_leg_cb(req.rid, leg.name, leg.nbytes,
+                                         leg_done),
+                     tclass=leg.tclass))
 
     # ------------------------------------------------------------------
     # PE group stepping
@@ -1376,8 +1440,9 @@ class Sim:
             self._pe_stepping[gid] = False
             return
         step_tokens = sum(bi.bsz for _, batch in work for bi in batch)
+        t0 = self.loop.now
         self._step_barrier(t_max, self.coll_model.step_bytes(step_tokens),
-                           lambda: self._pe_step_done(gid, work))
+                           lambda: self._pe_step_done(gid, work, t0))
 
     def _step_barrier(self, t_compute: float, coll_bytes: float,
                       done: Callable):
@@ -1405,7 +1470,7 @@ class Sim:
         Flow(self, coll_bytes, [self.net], arm,
              tclass=TrafficClass.MODEL_COLLECTIVE)
 
-    def _pe_step_done(self, gid, work):
+    def _pe_step_done(self, gid, work, t0):
         for e, batch in work:
             for bi in batch:
                 rs = self._round_by_rid(bi.rid)
@@ -1414,10 +1479,18 @@ class Sim:
                     # step launched: its new incarnation re-prefills
                     # from scratch, so the stale batch item is dropped
                     continue
+                if self.tracer is not None:
+                    self.tracer.span(f"req/{bi.rid}", "prefill", t0,
+                                     self.loop.now, engine=list(e.eid),
+                                     tokens=bi.bsz)
                 rs.prefill_left -= bi.bsz
                 self.prompt_tokens_done += bi.bsz
                 if rs.prefill_left <= 0 and rs.prefill_done_t < 0:
                     rs.prefill_done_t = self.loop.now
+                    if self.tracer is not None:
+                        # TTFT's endpoint in both runtimes: the first
+                        # output token is ready when prefill completes
+                        self.tracer.event(f"req/{bi.rid}", "first_token")
                     self.sched.on_request_done(rs.req.pe, rs.req)
                     if not self.cfg.layerwise and not rs.transfer_done:
                         # no layerwise streaming: transfers run after the
@@ -1459,7 +1532,8 @@ class Sim:
                 Flow(self, full,
                      [self.cnic_rd[(dn, dr)], self.cnic_wr[(dn, dr)],
                       self.dram[dn]],
-                     lambda: self._h2d_done(rs)))
+                     self._traced_leg_cb(req.rid, "de_h2d", full,
+                                         lambda: self._h2d_done(rs))))
             return
         pending = [len(legs)]
 
@@ -1472,7 +1546,9 @@ class Sim:
             rs.charge(leg)
             rs.flows.append(
                 Flow(self, leg.nbytes, [rmap[r] for r in leg.resources],
-                     leg_done, tclass=leg.tclass))
+                     self._traced_leg_cb(req.rid, leg.name, leg.nbytes,
+                                         leg_done),
+                     tclass=leg.tclass))
 
     def _h2d_done(self, rs: RoundSim):
         rs.h2d_done = True
@@ -1557,6 +1633,10 @@ class Sim:
         agent, traj = rs.agent, rs.traj
         tid = traj.tid
         now = self.loop.now
+        if self.tracer is not None and rs.first_decode_t >= 0:
+            self.tracer.span(f"req/{rs.req.rid}", "decode",
+                             rs.first_decode_t, rs.done_t,
+                             tokens=rs.tokens_out)
         if rs.tier_pinned is not None:
             node, refs = rs.tier_pinned
             self.tiers[node].unpin(refs)
@@ -1695,7 +1775,7 @@ class Sim:
         tiers = list(self.tiers.values())
         dram_hit = sum(t.dram_hit_bytes for t in tiers)
         denom = dram_hit + self.snic_hit_read_bytes
-        return dict(
+        return conforming(dict(
             finished_agents=len(jcts),
             finished_rounds=len(done_rounds),
             jct_mean=mean(jcts), jct_max=max(jcts) if jcts else float("nan"),
@@ -1739,7 +1819,7 @@ class Sim:
             recovered_rounds=self.recovered_rounds,
             hedged_reads=self.hedged_reads,
             hedge_moved_tokens=self.hedge_moved_tokens,
-        )
+        ), "sim")
 
 
 class _NicJob:
@@ -1747,14 +1827,18 @@ class _NicJob:
     reads can shrink it mid-flight and fault recovery can abort it."""
 
     __slots__ = ("nbytes", "cb", "read", "on_start", "prefetch", "factor",
-                 "t_start", "rate", "version", "state")
+                 "t_start", "rate", "version", "state", "tag")
 
-    def __init__(self, nbytes, cb, read, on_start, prefetch, factor):
+    def __init__(self, nbytes, cb, read, on_start, prefetch, factor,
+                 tag=""):
         self.nbytes = nbytes
         self.cb = cb
         self.read = read
         self.on_start = on_start
         self.prefetch = prefetch
+        # trace label for the NIC-span audit: demand "read" vs "blob" /
+        # "weights" / "persist" / "prefetch" (derived in enqueue)
+        self.tag = tag
         # per-job service-time multiplier (straggler draw); SNIC window
         # factors compose with it at service start
         self.factor = factor
@@ -1799,8 +1883,13 @@ class _FifoNic:
         return int(self.queued_bytes / kv_per_token)
 
     def enqueue(self, nbytes: float, on_done, read=True, on_start=None,
-                prefetch=False, factor: float = 1.0) -> _NicJob:
-        job = _NicJob(nbytes, on_done, read, on_start, prefetch, factor)
+                prefetch=False, factor: float = 1.0,
+                tag: str = "") -> _NicJob:
+        if not tag:
+            tag = "prefetch" if prefetch else ("read" if read
+                                               else "persist")
+        job = _NicJob(nbytes, on_done, read, on_start, prefetch, factor,
+                      tag)
         self.queue.append(job)
         self.queued_bytes += nbytes
         if not self.busy:
@@ -1845,6 +1934,15 @@ class _FifoNic:
         else:
             self.write_bytes += nbytes
         self.samples.append((self.sim.loop.now, nbytes))
+        tr = self.sim.tracer
+        if tr is not None:
+            # one span per completed FIFO job, with the same float the
+            # byte counters just accumulated — obs.audit pins the sums
+            # equal, so a dropped or double-emitted span is an error
+            tr.span(f"snic/node{self.node}", "nic_xfer", job.t_start,
+                    self.sim.loop.now, tag=job.tag, nbytes=nbytes)
+            tr.counter(f"snic/node{self.node}/queue",
+                       queued_bytes=self.queued_bytes)
         if job.cb is not None:
             job.cb()
         self._serve()

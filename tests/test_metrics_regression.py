@@ -159,6 +159,51 @@ def test_recovery_slo_judging_pinned():
     assert slo_attainment(RECOVERY_FIXTURE, 7.5, 2.1) == 1.0
 
 
+def test_empty_summary_propagates_nan_not_crash():
+    """The NaN contract: no finished rounds -> every mean/percentile is
+    NaN, finished_rounds is 0, and nothing raises — downstream (stats(),
+    fig_* smokes, the perf gate) sees NaN, never an exception."""
+    for metrics in ([], [RoundMetrics(rid=0, gen_tokens=4, submit_t=0.0)]):
+        s = latency_summary(metrics)
+        assert s["finished_rounds"] == 0
+        for k in ("ttft_mean", "ttft_p99", "ttst_mean", "tpot_mean",
+                  "tpot_p99"):
+            assert np.isnan(s[k]), (k, s)
+        assert np.isnan(slo_attainment(metrics, 1.0, 1.0))
+
+
+def test_finished_round_without_prefill_stamp_is_excluded():
+    """A finished round whose prefill milestone was never stamped must
+    not feed a garbage negative TTFT into the summary."""
+    broken = RoundMetrics(rid=0, gen_tokens=2, submit_t=1.0,
+                          first_decode_t=2.0, done_t=3.0)
+    assert broken.finished and broken.prefill_done_t < 0
+    s = latency_summary([broken])
+    assert s["finished_rounds"] == 1        # it did finish...
+    assert np.isnan(s["ttft_mean"])         # ...but has no TTFT
+    s2 = latency_summary(FIXTURE + [broken])
+    assert s2["ttft_mean"] == pytest.approx(4.0)    # fixture unchanged
+
+
+def test_perf_gate_rejects_nan_against_finite_baseline():
+    """The gate's comparator must not let a gated metric decay to NaN
+    slip through NaN-compares-false arithmetic (the documented exit of
+    the NaN contract)."""
+    import sys
+    sys.path.insert(0, str(__import__("pathlib").Path(
+        __file__).resolve().parents[1]))
+    from benchmarks.perf_gate import SCHEMA, compare
+    base = {"schema": SCHEMA, "metrics": {
+        "fig_online_serving": {"slo_attainment": 1.0}}}
+    cur = {"schema": SCHEMA, "metrics": {
+        "fig_online_serving": {"slo_attainment": float("nan")}}}
+    assert compare(base, cur)               # NaN vs finite: regression
+    assert not compare(base, base)          # finite vs itself: pass
+    nan_both = {"schema": SCHEMA, "metrics": {
+        "fig_online_serving": {"slo_attainment": float("nan")}}}
+    assert not compare(nan_both, nan_both)  # NaN vs NaN: recorded only
+
+
 def test_summary_mirrors_sim_results_estimators():
     """The serving summary and Sim.results() compute TTFT/TPOT/TTST the
     same way: means and percentiles over the same per-round values."""
