@@ -1,0 +1,288 @@
+"""Fleet-scale sweep: 10 -> 1000 engines on the vectorized event engine.
+
+The per-object simulator (``repro.sim.Sim``) prices a processor-sharing
+reshare at O(k) Python — one settle plus one heap event per affected
+flow — so a fleet-sized shared link carrying thousands of concurrent
+KV transfers makes the *simulator* the bottleneck long before the
+modelled system is.  :class:`repro.sim.VectorSim` replaces that loop
+with struct-of-arrays kernels (sim/vectorized.py) while keeping the
+results contract bit-for-bit; this benchmark is the scale demonstration
+and the perf gate for both halves of that claim.
+
+Two operating points, both with power-law (Zipf) multi-tenant arrivals:
+
+* **serving sweep** — E in {10, 100, 1000} engines (P:D = 1:3, one
+  engine per node), per-engine provisioning held constant so the shared
+  link grows linearly with E.  Run on the vectorized engine to a fixed
+  sim horizon; reports fleet SLO attainment (TTFT <= SLO_TTFT_S) and
+  generation throughput per engine count — the fleet SLO/throughput
+  curves.
+* **burst point** — E = 100 under an agentic incast: every tenant's
+  agents arrive inside a few seconds and the fleet link is ~3x
+  oversubscribed, so in-flight transfers ramp to several thousand.
+  BOTH engines simulate the identical bounded horizon (``until=``):
+  ``results()`` must agree key-for-key (the at-scale equivalence
+  check), and the wall-clock ratio is the headline
+  ``fleet_speedup_100`` (target >= 50x).  ``sim_events_per_sec`` is
+  the event-equivalent simulation rate of the vectorized engine: the
+  per-object engine's processed-event count for the horizon divided by
+  the vectorized engine's wall time.
+
+Acceptance, asserted in ``--smoke`` mode (CI):
+
+* the small-config equivalence matrix passes exactly (every counter,
+  byte and time key identical between engines);
+* the burst-point results agree between engines at E = 100;
+* ``fleet_speedup_100 >= SPEEDUP_TARGET`` (50x) — asserted only when
+  the benchmark runs in its own process (the dedicated CI ``fleet``
+  job); a shared-process suite run records the metric but leaves
+  gating to the perf trajectory bands (see ``run.py``);
+* the E = 1000 serving point completes (``fleet_1000_done``).
+
+Wall-clock-sensitive metrics (speedup, events/sec) gate with generous
+absolute floors in benchmarks/perf_gate.py — they measure this
+machine, not the model.
+"""
+from __future__ import annotations
+
+import argparse
+import gc
+import os
+import sys
+import time
+
+if __package__ in (None, ""):       # direct `python benchmarks/<file>.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit, header
+
+# --- fleet shape -----------------------------------------------------------
+#: serving sweep: engines per point (P:D = 1:3, one engine per node)
+ENGINES = (10, 100, 1000)
+#: Zipf exponent for tenant arrival rates (heavy-tailed multi-tenancy)
+ZIPF_S = 1.2
+#: agents per engine and arrival window at the serving point
+SERVE_AGENTS_PER_ENGINE = 2
+SERVE_ARRIVAL_WINDOW_S = 20.0
+SERVE_HORIZON_S = 60.0
+#: per-engine shared-link provisioning at the serving point [B/s] —
+#: constant per engine, so the fleet link scales linearly with E
+SERVE_BW_PER_ENGINE = 25e9
+SERVE_BG_LOAD = 0.5
+#: context length and TTFT SLO for the fleet curves
+MAX_LEN = 8192
+SLO_TTFT_S = 20.0
+
+#: burst point: an agentic incast at E = 100 — everything arrives in
+#: BURST_ARRIVAL_WINDOW_S and the link is oversubscribed ~3x, so the
+#: in-flight transfer population ramps into the thousands (the regime
+#: where the per-object engine's O(k)-per-reshare cost explodes)
+BURST_E = 100
+BURST_AGENTS_PER_ENGINE = 24
+BURST_ARRIVAL_WINDOW_S = 5.0
+BURST_HORIZON_S = 8.0
+BURST_BW_PER_ENGINE = 0.2e9
+BURST_BG_LOAD = 0.9
+BURST_BG_CHUNK = 64e6
+#: coarser decode quota at the burst point: the shared scheduler tick
+#: is identical Python in both engines, so a fine quota only dilutes
+#: the drain-plane comparison the burst point exists to make
+BURST_QUOTA_S = 1.0
+
+SPEEDUP_TARGET = 50.0
+
+
+def _fleet_cfg(E, bw_per_engine, bg_load, bg_chunk=512e6, **kw):
+    from repro.sim import DS_660B, HOPPER_NODE, SimConfig
+    P = max(1, E // 4)
+    return SimConfig(node=HOPPER_NODE, model=DS_660B, P=P, D=E - P,
+                     nodes_per_pe_group=1, nodes_per_de_group=1,
+                     split_reads=True, net_bw=bw_per_engine * E,
+                     net_bg_load=bg_load, net_bg_chunk_bytes=bg_chunk,
+                     **kw)
+
+
+def _fleet_workload(E, agents_per_engine, window_s, seed=0):
+    """Power-law multi-tenant arrivals: tenant t's arrival rate is
+    proportional to 1/t^ZIPF_S, realised as a Zipf-weighted tenant
+    assignment over a uniform arrival window — per-tenant volume is
+    heavy-tailed while the merged process stays seed-deterministic."""
+    import numpy as np
+    from repro.sim import generate_dataset
+    n = agents_per_engine * E
+    trajs = generate_dataset(n, MAX_LEN, seed=seed)
+    rng = np.random.default_rng(seed)
+    n_tenants = max(4, E // 4)
+    w = 1.0 / np.arange(1, n_tenants + 1, dtype=np.float64) ** ZIPF_S
+    w /= w.sum()
+    tenants = rng.choice(n_tenants, size=n, p=w)
+    arrivals = np.sort(rng.uniform(0.0, window_s, n))
+    return trajs, arrivals.tolist(), tenants
+
+
+def _fleet_stats(sim, horizon_s):
+    """SLO/throughput from the struct-of-arrays request table: rounds
+    that finished inside the horizon count toward SLO (TTFT <=
+    SLO_TTFT_S); throughput is generated tokens per modelled second."""
+    import numpy as np
+    t = sim.request_table()
+    started = t["submit_t"] >= 0
+    done = (t["done_t"] >= 0) & started
+    ttft = t["first_decode_t"] - t["submit_t"]
+    ok = done & (ttft <= SLO_TTFT_S)
+    n_started = int(started.sum())
+    gen = int(t["gen_tokens"][done].sum())
+    return {
+        "rounds_started": n_started,
+        "rounds_done": int(done.sum()),
+        "slo": float(ok.sum()) / max(n_started, 1),
+        "tput_tok_s": gen / horizon_s,
+    }
+
+
+def _run_engine(engine_cls, cfg, trajs, arrivals, horizon_s):
+    t0 = time.perf_counter()
+    sim = engine_cls(cfg, trajs)
+    sim.run(until=horizon_s, arrivals=list(arrivals))
+    return sim, time.perf_counter() - t0
+
+
+def _equivalence_matrix(quick):
+    """Small-config engine-equivalence check: every results() key must
+    match exactly (the full randomized matrix lives in
+    tests/test_vectorized.py; this is the benchmark's own guard that
+    the speedup being measured is a speedup of the *same* model)."""
+    from repro.sim import (DS_660B, HOPPER_NODE, Sim, SimConfig,
+                           VectorSim, generate_dataset)
+    from repro.sim.faults import (FaultSchedule, SlowdownWindow,
+                                  StragglerModel)
+    faults = FaultSchedule(
+        windows=[SlowdownWindow("snic", 5.0, 25.0, 3.0, node=0),
+                 SlowdownWindow("net", 10.0, 14.0, 2.0)],
+        straggler=StragglerModel(0.3, 4.0, seed=7))
+    matrix = [
+        ("dualpath", dict()),
+        ("split+tier", dict(split_reads=True, dram_tier_bytes=64e9,
+                            prefetch=True)),
+        ("net-vl-bg", dict(net_bw=400e9, net_bg_load=0.4)),
+        ("net-fifo-bg", dict(net_bw=400e9, net_arbiter="fifo",
+                             net_bg_load=0.4)),
+        ("faults", dict(faults=faults, net_bw=300e9, net_bg_load=0.3)),
+        ("basic-rr", dict(mode="basic", scheduler="rr")),
+    ]
+    if quick:
+        matrix = matrix[:3]
+    n_agents = 6
+    trajs = generate_dataset(n_agents, MAX_LEN, seed=3)
+    for name, kw in matrix:
+        cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2, **kw)
+        r0 = Sim(cfg, trajs).run().results()
+        r1 = VectorSim(cfg, trajs).run().results()
+        keys = set(r0) | set(r1)
+        bad = [k for k in sorted(keys)
+               if not _same(r0.get(k), r1.get(k))]
+        assert not bad, (
+            f"equivalence[{name}]: engines disagree on "
+            f"{[(k, r0.get(k), r1.get(k)) for k in bad]}")
+    return len(matrix)
+
+
+def _same(a, b):
+    if isinstance(a, float) or isinstance(b, float):
+        return a == b or (a != a and b != b)      # NaN == NaN
+    return a == b
+
+
+def run(quick: bool = False, smoke: bool = False):
+    from repro.sim import Sim, VectorSim
+    header()
+    metrics = {}
+
+    # --- engine equivalence guard -------------------------------------
+    t0 = time.perf_counter()
+    n_cfg = _equivalence_matrix(quick=quick or smoke)
+    emit("fleet_equivalence_matrix", (time.perf_counter() - t0) * 1e6,
+         f"{n_cfg} configs exact")
+
+    # --- serving sweep (vectorized engine) ----------------------------
+    horizon = SERVE_HORIZON_S / 2 if (quick or smoke) else SERVE_HORIZON_S
+    engines = ENGINES if not quick else ENGINES[:2]
+    for E in engines:
+        cfg = _fleet_cfg(E, SERVE_BW_PER_ENGINE, SERVE_BG_LOAD,
+                         bg_chunk=512e6 * max(E, 10) / 10.0)
+        trajs, arrivals, _ = _fleet_workload(
+            E, SERVE_AGENTS_PER_ENGINE, SERVE_ARRIVAL_WINDOW_S, seed=E)
+        sim, wall = _run_engine(VectorSim, cfg, trajs, arrivals, horizon)
+        st = _fleet_stats(sim, horizon)
+        emit(f"fleet_serve_E{E}", wall * 1e6,
+             f"slo={st['slo']:.3f} tput={st['tput_tok_s']:.0f}tok/s "
+             f"peak_flows={sim.pool.peak_flows} "
+             f"reshares={sim.pool.n_reshares}")
+        metrics[f"fleet_slo_{E}"] = st["slo"]
+        metrics[f"fleet_tput_{E}_tok_s"] = st["tput_tok_s"]
+        if E == max(ENGINES):
+            metrics["fleet_1000_done"] = 1.0
+            if smoke:
+                assert st["rounds_started"] > 0, \
+                    "1000-engine point started no rounds"
+
+    # --- burst point: both engines, identical horizon -----------------
+    # Drop the serving sweep's heap (the 1000-engine sim holds GBs of
+    # per-round objects) and freeze the survivors out of gen-2 scans:
+    # the vectorized leg is a short allocation-heavy run, and full-heap
+    # collections otherwise dominate its wall time while staying
+    # invisible inside the ~100x-longer per-object leg — skewing the
+    # exact ratio this section exists to measure.
+    del sim, trajs, arrivals, cfg, st
+    gc.collect()
+    gc.freeze()
+    E = BURST_E
+    cfg = _fleet_cfg(E, BURST_BW_PER_ENGINE, BURST_BG_LOAD,
+                     bg_chunk=BURST_BG_CHUNK, quota_s=BURST_QUOTA_S)
+    trajs, arrivals, _ = _fleet_workload(
+        E, BURST_AGENTS_PER_ENGINE, BURST_ARRIVAL_WINDOW_S, seed=1)
+    horizon = BURST_HORIZON_S
+    vsim, v_wall = _run_engine(VectorSim, cfg, trajs, arrivals, horizon)
+    esim, e_wall = _run_engine(Sim, cfg, trajs, arrivals, horizon)
+    rv, re_ = vsim.results(), esim.results()
+    bad = [k for k in sorted(set(rv) | set(re_))
+           if not _same(rv.get(k), re_.get(k))]
+    assert not bad, (
+        f"burst-point engines disagree: "
+        f"{[(k, re_.get(k), rv.get(k)) for k in bad]}")
+    speedup = e_wall / v_wall
+    ev_s = esim.loop.n_events / v_wall
+    emit(f"fleet_burst_E{E}_vec", v_wall * 1e6,
+         f"peak_flows={vsim.pool.peak_flows} "
+         f"reshares={vsim.pool.n_reshares}")
+    emit(f"fleet_burst_E{E}_event", e_wall * 1e6,
+         f"events={esim.loop.n_events}")
+    emit("fleet_speedup", speedup, f"{speedup:.1f}x at E={E}; "
+         f"event-equivalent {ev_s:,.0f} events/s")
+    metrics["fleet_speedup_100"] = speedup
+    metrics["sim_events_per_sec"] = ev_s
+    # The hard >=50x wall-clock gate applies only to isolated runs (the
+    # dedicated CI `fleet` job): inside a shared-process suite run
+    # (run.py --smoke-all / perf_gate --collect) the heap left by
+    # earlier benchmarks slows the short vectorized leg far more than
+    # the ~200 s per-object leg, deflating the ratio for reasons that
+    # have nothing to do with either engine.  Suite runs still record
+    # the metric; the perf trajectory bands gate it suite-vs-suite.
+    if smoke and os.environ.get("REPRO_BENCH_SUITE") != "1":
+        assert speedup >= SPEEDUP_TARGET, (
+            f"fleet speedup {speedup:.1f}x < {SPEEDUP_TARGET}x at "
+            f"E={E} (vec {v_wall:.1f}s vs event {e_wall:.1f}s)")
+    return metrics
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Raw simulator engine throughput: events/sec, both engines.
+
+A single mid-size saturated configuration (one shared link carrying a
+few hundred standing flows) is run through the per-object event engine
+(``Sim``) and the struct-of-arrays engine (``VectorSim``) on the
+identical workload.  Reported rates are *event-equivalent*: both
+engines are normalized by the per-object engine's processed event
+count, so the vectorized rate reads as "events the per-object engine
+would have needed, per wall second" — the honest apples-to-apples
+number (the pool replaces per-flow check events with one boundary
+event, so its own ``n_events`` is deliberately far smaller).
+
+The fleet-scale operating points (and the gated >=50x headline) live in
+``fig_fleet``; this microbench is the small fast canary that catches
+engine-level throughput regressions without a multi-minute run.
+"""
+import argparse
+import os
+import sys
+import time
+
+if __package__ in (None, ""):
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit, header
+from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig, VectorSim
+from repro.sim.traces import generate_dataset
+
+def _same(a, b):
+    if isinstance(a, float) or isinstance(b, float):
+        return a == b or (a != a and b != b)          # NaN == NaN
+    return a == b
+
+
+N_ENGINES = 10
+N_AGENTS = 60
+ARRIVAL_WINDOW_S = 4.0
+HORIZON_S = 12.0
+BW_PER_ENGINE = 1e9          # ~saturated: flows pile onto the link
+BG_LOAD = 0.8
+BG_CHUNK = 64e6
+MAX_LEN = 8192
+
+
+def _workload(seed=0):
+    P = max(1, N_ENGINES // 4)
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B,
+                    P=P, D=N_ENGINES - P,
+                    nodes_per_pe_group=1, nodes_per_de_group=1,
+                    split_reads=True,
+                    net_bw=BW_PER_ENGINE * N_ENGINES,
+                    net_bg_load=BG_LOAD, net_bg_chunk_bytes=BG_CHUNK)
+    trajs = generate_dataset(N_AGENTS, MAX_LEN, seed=seed)
+    step = ARRIVAL_WINDOW_S / max(N_AGENTS - 1, 1)
+    arrivals = [i * step for i in range(N_AGENTS)]
+    return cfg, trajs, arrivals
+
+
+def _run(engine_cls, cfg, trajs, arrivals):
+    t0 = time.perf_counter()
+    sim = engine_cls(cfg, trajs).run(arrivals=list(arrivals),
+                                     until=HORIZON_S)
+    return sim, time.perf_counter() - t0
+
+
+def run(quick=False, smoke=False):
+    header()
+    cfg, trajs, arrivals = _workload()
+    esim, e_wall = _run(Sim, cfg, trajs, arrivals)
+    vsim, v_wall = _run(VectorSim, cfg, trajs, arrivals)
+    n_ev = esim.loop.n_events
+    e_rate = n_ev / e_wall
+    v_rate = n_ev / v_wall
+    speedup = e_wall / v_wall
+    emit("micro_event_engine", e_wall / n_ev * 1e6,
+         f"{e_rate:,.0f} ev/s over {n_ev} events")
+    emit("micro_vector_engine", v_wall / n_ev * 1e6,
+         f"{v_rate:,.0f} event-equiv/s ({vsim.loop.n_events} own events)")
+    emit("micro_speedup", 0.0, f"{speedup:.1f}x")
+    if smoke:
+        re_, rv = esim.results(), vsim.results()
+        bad = [k for k in sorted(set(re_) | set(rv))
+               if not _same(re_.get(k), rv.get(k))]
+        assert not bad, ("engine results diverged on the microbench "
+                         f"workload: {bad}")
+        assert speedup > 1.0, f"vectorized engine slower ({speedup:.2f}x)"
+    return {"micro_event_rate_ev_s": e_rate,
+            "micro_vec_rate_ev_s": v_rate,
+            "micro_speedup": speedup}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -76,11 +76,32 @@ DIRECTIONS = {
                        "max_decomp_err_s": -1,
                        "attr_ttft_rel_err": -1,
                        "trace_spans": 0},
+    # fleet engine: simulated SLO/throughput are deterministic (tight
+    # default bands); wall-clock-derived speedups get wide ABS_FLOOR
+    # slack below — the hard >=50x acceptance is asserted inside the
+    # fig_fleet smoke itself, the gate only tracks the trajectory
+    "microbench_sim": {"micro_event_rate_ev_s": 0,
+                       "micro_vec_rate_ev_s": +1,
+                       "micro_speedup": +1},
+    "fig_fleet": {"fleet_slo_10": +1, "fleet_slo_100": +1,
+                  "fleet_slo_1000": +1,
+                  "fleet_tput_10_tok_s": +1, "fleet_tput_100_tok_s": +1,
+                  "fleet_tput_1000_tok_s": +1,
+                  "fleet_1000_done": +1,
+                  "fleet_speedup_100": +1,
+                  "sim_events_per_sec": +1},
 }
 
 #: absolute slack added to every band, so near-zero baselines gate on
 #: "stayed near zero" instead of "within 5% of zero"
-ABS_FLOOR = {"vl_collective_stall_s": 1.0}
+ABS_FLOOR = {"vl_collective_stall_s": 1.0,
+             # wall-clock-derived metrics on shared CI runners: wide
+             # noise slack; the >=50x hard gate lives in the fig_fleet
+             # smoke assert, not in these trajectory bands
+             "fleet_speedup_100": 20.0,
+             "sim_events_per_sec": 40_000.0,
+             "micro_speedup": 4.0,
+             "micro_vec_rate_ev_s": 40_000.0}
 DEFAULT_ABS_FLOOR = 0.02
 
 

@@ -26,7 +26,9 @@ forward pass, matching "transfers overlap with computation".
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.traffic import TrafficClass
 
@@ -251,6 +253,97 @@ def hedge_water_fill(remainder: int, severity: float,
     assert severity >= 1.0, severity
     x = (severity * remainder - healthy_backlog) / (1.0 + severity)
     return max(0, min(int(x), int(remainder)))
+
+
+def hedge_water_fill_batch(remainder: np.ndarray, severity: np.ndarray,
+                           healthy_backlog: np.ndarray) -> np.ndarray:
+    """:func:`hedge_water_fill` over request arrays, element-exact.
+
+    ``int(x)`` truncates toward zero and so does ``astype(int64)`` for
+    the post-clamp range, so each element equals the scalar kernel
+    bit-for-bit (property-tested in tests/test_vectorized.py)."""
+    remainder = np.asarray(remainder, dtype=np.int64)
+    x = ((severity * remainder - healthy_backlog) /
+         (1.0 + np.asarray(severity, dtype=np.float64)))
+    return np.maximum(0, np.minimum(x.astype(np.int64), remainder))
+
+
+def resource_bytes_batch(mode: str, hit: np.ndarray, miss: np.ndarray,
+                         gen: np.ndarray,
+                         pe_snic: Optional[np.ndarray] = None,
+                         de_snic: Optional[np.ndarray] = None,
+                         pe_tier: Optional[np.ndarray] = None,
+                         de_tier: Optional[np.ndarray] = None,
+                         ) -> Dict[str, np.ndarray]:
+    """``resource_bytes(plan_for(...))`` closed over request arrays.
+
+    One call gives the per-resource byte ledger for a whole fleet of
+    requests at once — the quantity the fleet benchmark and the
+    byte-conservation property tests sum, without building ``Leg``
+    objects per request.  ``mode`` is the plan family:
+
+    * ``"dualpath"`` — the unified tiered/split algebra.  The hit
+      partition ``(pe_snic, de_snic, pe_tier, de_tier)`` must sum to
+      ``hit`` elementwise; pure Fig. 4a/4b paths are the degenerate
+      partitions (everything on one SNIC), plain splits have zero tier
+      columns, so one formula covers ``pe``/``de``/split/tiered plans.
+    * ``"basic"`` / ``"oracle"`` — the baselines (partition ignored).
+
+    Equality with the per-request ``resource_bytes(plan_for(...))``
+    dict, key by key and element by element, is the contract
+    (tests/test_vectorized.py checks it over randomized workloads).
+    Zero-valued entries are kept: absent resource == zero bytes.
+    """
+    hit = np.asarray(hit, dtype=np.int64)
+    miss = np.asarray(miss, dtype=np.int64)
+    gen = np.asarray(gen, dtype=np.int64)
+    z = np.zeros_like(hit)
+    full = hit + miss
+    persist = miss + gen
+    if mode == "oracle":
+        keys = ("pe_snic", "de_snic", "pe_dram", "de_dram", "pe_cnic_rd",
+                "pe_cnic_wr", "de_cnic_rd", "de_cnic_wr", "net",
+                "pe_tier", "de_tier")
+        return {k: z.copy() for k in keys}
+    if mode == "basic":
+        return {
+            "pe_snic": hit.copy(),
+            "pe_dram": 2 * hit,
+            "pe_cnic_rd": hit + full,
+            "pe_cnic_wr": hit.copy(),
+            "net": full.copy(),
+            "de_cnic_wr": full + persist,
+            "de_cnic_rd": persist.copy(),
+            "de_dram": persist.copy(),
+            "de_snic": persist.copy(),
+            "pe_tier": z.copy(),
+            "de_tier": z.copy(),
+        }
+    if mode != "dualpath":
+        raise ValueError(f"mode {mode!r} (valid: dualpath, basic, oracle)")
+    pe_snic = z if pe_snic is None else np.asarray(pe_snic, dtype=np.int64)
+    de_snic = z if de_snic is None else np.asarray(de_snic, dtype=np.int64)
+    pe_tier = z if pe_tier is None else np.asarray(pe_tier, dtype=np.int64)
+    de_tier = z if de_tier is None else np.asarray(de_tier, dtype=np.int64)
+    part = pe_snic + de_snic + pe_tier + de_tier
+    if not np.array_equal(part, hit):
+        raise ValueError("hit partition does not sum to hit_bytes")
+    pe_total = pe_snic + pe_tier
+    de_total = de_snic + de_tier
+    fwd = pe_total + miss                 # pe_hbm_to_de_buf leg
+    return {
+        "pe_snic": pe_snic.copy(),
+        "de_snic": de_snic + persist,
+        "pe_tier": pe_tier.copy(),
+        "de_tier": de_tier.copy(),
+        "pe_dram": pe_snic + pe_total,
+        "de_dram": de_snic + de_total + fwd + full + persist,
+        "pe_cnic_rd": pe_total + fwd,
+        "pe_cnic_wr": pe_total + de_total,
+        "de_cnic_rd": de_total + full + persist,
+        "de_cnic_wr": fwd + full + persist,
+        "net": de_total + fwd,
+    }
 
 
 PLANS = {

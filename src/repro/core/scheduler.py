@@ -380,12 +380,31 @@ class Scheduler:
     def de_phase1(self):
         """Drain the global DE queue into per-group private queues
         (group with minimum Σ tok_e wins each request)."""
-        de_groups = self.groups("de")
+        if not self.de_global_queue:
+            # nothing to drain: skip the O(engines) group scan below —
+            # phase 1 runs on *every* DE fetch, so at fleet scale this
+            # scan is the difference between O(E) and O(E^2) per
+            # scheduler tick.  With an empty global queue the body is a
+            # structural no-op (gtok is built and discarded untouched).
+            return
         # groups whose every member is draining cannot admit: requests
-        # routed there would be stranded until the flip
-        gtok = {g: sum(self.engines[e].tok for e in es)
-                for g, es in de_groups.items()
-                if not all(self.engines[e].draining for e in es)}
+        # routed there would be stranded until the flip.  One fused pass
+        # (inlining groups("de")) instead of three generator sweeps —
+        # this runs on every DE fetch and dominated fleet-scale ticks.
+        eng = self.engines
+        gtok = {}
+        for g, es in self._groups.items():
+            if not es or eng[es[0]].kind != "de":
+                continue
+            tot = 0
+            admits = False
+            for e in es:
+                st = eng[e]
+                tot += st.tok
+                if not st.draining:
+                    admits = True
+            if admits:
+                gtok[g] = tot
         if not gtok:
             return
         while self.de_global_queue:
@@ -779,3 +798,17 @@ class RoundRobinScheduler(Scheduler):
         side = self.engines[req.pe if req.read_path == "pe" else req.de]
         side.read_q += req.cached_tokens
         return req.read_path
+
+
+def water_fill_frac_batch(pe_q, de_q, h):
+    """:meth:`Scheduler._water_fill_frac` over request arrays.
+
+    Same expression, same IEEE doubles — ``clip((de_q - pe_q + h) /
+    (2h), 0, 1)`` elementwise equals the scalar min/max chain bit-for-
+    bit (property-tested in tests/test_vectorized.py).  ``h`` must be
+    positive, as in the scalar path."""
+    import numpy as np
+    pe_q = np.asarray(pe_q, dtype=np.float64)
+    de_q = np.asarray(de_q, dtype=np.float64)
+    h = np.asarray(h, dtype=np.float64)
+    return np.clip((de_q - pe_q + h) / (2.0 * h), 0.0, 1.0)

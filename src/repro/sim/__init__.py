@@ -15,3 +15,4 @@ from repro.sim.spec import (
     NodeSpec,
 )
 from repro.sim.traces import Trajectory, dataset_stats, generate_dataset
+from repro.sim.vectorized import VectorSim, VectorSimUnsupported

@@ -43,12 +43,30 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import List, Optional, Sequence, Tuple
 
 __all__ = ["SlowdownWindow", "EngineDeath", "StragglerModel",
            "FaultSchedule"]
 
 _RESOURCES = ("snic", "net")
+
+
+@lru_cache(maxsize=65536)
+def _straggle_draw(seed: int, rid: int, side: str) -> float:
+    """The uniform draw behind :meth:`StragglerModel.factor`, memoized.
+
+    The simulator asks for the same ``(rid, side)`` factor several times
+    per request (leg issue, hedging probes, recovery re-issues); the md5
+    is pure in ``(seed, rid, side)`` so the hash only ever needs to run
+    once per key.
+
+    md5, not crc32: crc is linear, so draws for keys differing only in
+    the side suffix would be XOR-correlated — both sides of one request
+    would (not) straggle together.
+    """
+    d = hashlib.md5(f"{seed}:{rid}:{side}".encode()).digest()
+    return int.from_bytes(d[:8], "big") / float(1 << 64)
 
 
 @dataclass(frozen=True)
@@ -107,12 +125,9 @@ class StragglerModel:
     def factor(self, rid: int, side: str) -> float:
         if self.prob <= 0.0:
             return 1.0
-        # md5, not crc32: crc is linear, so draws for keys differing
-        # only in the side suffix would be XOR-correlated — both sides
-        # of one request would (not) straggle together
-        d = hashlib.md5(f"{self.seed}:{rid}:{side}".encode()).digest()
-        u = int.from_bytes(d[:8], "big") / float(1 << 64)
-        return self.severity if u < self.prob else 1.0
+        return (self.severity
+                if _straggle_draw(self.seed, rid, side) < self.prob
+                else 1.0)
 
 
 @dataclass
@@ -165,12 +180,21 @@ class FaultSchedule:
         """Sorted unique window edges for ``resource`` — the instants a
         runtime must re-evaluate rates at (the sim re-shares the shared
         link at each ``net`` boundary)."""
-        ts = set()
-        for w in self.windows:
-            if w.resource == resource:
-                ts.add(w.t0)
-                ts.add(w.t1)
-        return sorted(ts)
+        return self.boundaries_array(resource).tolist()
+
+    def boundaries_array(self, resource: str) -> "np.ndarray":
+        """:meth:`boundaries` as a float64 ndarray (sorted, deduplicated).
+
+        Both runtimes consume this form: the event loop schedules one
+        re-share per edge, and the vectorized macro-stepper feeds it
+        straight into its next-boundary argmin without a list->array
+        conversion per step.  Kept as the single source of truth so the
+        two engines can never disagree on where a window edge falls.
+        """
+        import numpy as np
+        ts = [t for w in self.windows if w.resource == resource
+              for t in (w.t0, w.t1)]
+        return np.unique(np.asarray(ts, dtype=np.float64))
 
     # -- construction ------------------------------------------------------
     @classmethod

@@ -63,10 +63,29 @@ class EventLoop:
     def __init__(self):
         self.now = 0.0
         self._heap: List[Tuple[float, int, Callable]] = []
-        self._seq = itertools.count()
+        self._next_seq = 0
+        self.n_events = 0   # processed events — the events/sec numerator
+
+    def _take(self) -> int:
+        s = self._next_seq
+        self._next_seq = s + 1
+        return s
+
+    def reserve(self, n: int) -> int:
+        """Consume ``n`` sequence numbers without pushing events.
+
+        Same-timestamp events pop in seq order, so seq consumption IS
+        the tie-break.  The vectorized engine (sim/vectorized.py)
+        reserves one seq per pooled drain completion — the seqs the
+        per-flow check events would have consumed — and pushes its
+        single boundary event under the winner's seq, which keeps every
+        same-instant ordering bit-identical to the per-object loop."""
+        s = self._next_seq
+        self._next_seq = s + n
+        return s
 
     def at(self, t: float, fn: Callable):
-        heapq.heappush(self._heap, (t, next(self._seq), fn))
+        heapq.heappush(self._heap, (t, self._take(), fn))
 
     def after(self, dt: float, fn: Callable):
         self.at(self.now + dt, fn)
@@ -78,6 +97,7 @@ class EventLoop:
                 self.now = until
                 return
             self.now = t
+            self.n_events += 1
             fn()
 
 
@@ -522,17 +542,40 @@ class Sim:
     # ------------------------------------------------------------------
     # PS rate management
     # ------------------------------------------------------------------
+    def _flow(self, nbytes, resources, on_done,
+              tclass: TrafficClass = TrafficClass.KV_TRANSFER):
+        """Flow factory: every PS transfer leg the sim launches goes
+        through here, so the vectorized engine (sim/vectorized.py) can
+        allocate into its struct-of-arrays drain pool by overriding one
+        method instead of forking the request-lifecycle handlers."""
+        return Flow(self, nbytes, resources, on_done, tclass)
+
     def _reshare(self, resources):
         now = self.loop.now
         affected = set()
         for r in resources:
             affected.update(r.flows)
+        # A plain PS resource's share is class-blind (cap / n_flows) and
+        # membership cannot change mid-sweep (finishes are deferred via
+        # after(0.0)), so compute each resource's share once per sweep
+        # instead of once per member flow.  SharedLink shares are
+        # class-aware and stay on rate_of (it keeps its own caches).
+        shares: Dict[int, float] = {}
         # resource flow-sets are unordered; resettle in creation order so
         # the event heap's tie-breaking (and thus every downstream
         # timestamp) is independent of set iteration order
         for f in sorted(affected, key=lambda f: f.fid):
             f._settle(now)
-            new_rate = min(r.rate_of(f) for r in f.resources)
+            new_rate = INF
+            for r in f.resources:
+                if type(r) is PSResource:
+                    rate = shares.get(id(r))
+                    if rate is None:
+                        rate = shares[id(r)] = r.cap / max(len(r.flows), 1)
+                else:
+                    rate = r.rate_of(f)
+                if rate < new_rate:
+                    new_rate = rate
             f.rate = new_rate
             f.version += 1
             if f.nbytes_left <= 1.0 or math.isinf(new_rate):
@@ -584,7 +627,7 @@ class Sim:
                 if all(a.end_t >= 0 for a in self.agents):
                     return
                 self.net_bg_bytes += chunk
-                Flow(self, chunk, [self.net], lambda: None)
+                self._flow(chunk, [self.net], lambda: None)
                 self.loop.after(period, bg)
 
             self.loop.after(period, bg)
@@ -606,7 +649,8 @@ class Sim:
                     self.net._invalidate()
                     self._reshare([self.net])
 
-                for t in self.faults.boundaries("net"):
+                for t in self.faults.boundaries_array("net"):
+                    t = float(t)
                     self.loop.at(t, lambda t=t: flap(t))
         self.loop.run(until)
         return self
@@ -1017,16 +1061,23 @@ class Sim:
 
     def _sched_tick(self):
         self._sched_pending = False
+        kvpt = self.kv_per_token
         # DE admission first (HBM reservation), then PE assignment.
+        # Reports are built with explicit integer loops: the generator
+        # version spent more time in frame switches than in the adds
+        # once fleets grew past a few hundred standing decodes.
         for gid, members in self.de_groups.items():
             if not self.sched.de_private.get(gid) and \
                     not self.sched.de_global_queue:
                 continue
-            reports = {e.eid: (len(e.active_decode),
-                               sum(r.ctx + r.gen_left for r in e.active_decode),
-                               self.snic[e.node].queue_tokens(self.kv_per_token),
-                               e.kv_capacity_tokens - e.resident_tokens)
-                       for e in members}
+            reports = {}
+            for e in members:
+                tok = 0
+                for r in e.active_decode:
+                    tok += r.ctx + r.gen_left
+                reports[e.eid] = (len(e.active_decode), tok,
+                                  self.snic[e.node].queue_tokens(kvpt),
+                                  e.kv_capacity_tokens - e.resident_tokens)
             for asg in self.sched.on_de_fetch(gid, reports):
                 rs = asg.request._sim_round
                 e = self.engines[asg.engine]
@@ -1035,10 +1086,13 @@ class Sim:
         for gid, members in self.pe_groups.items():
             if not self.sched.pe_queue:
                 break
-            reports = {e.eid: (len(e.fifo),
-                               sum(w.remaining for w in e.fifo),
-                               self.snic[e.node].queue_tokens(self.kv_per_token))
-                       for e in members}
+            reports = {}
+            for e in members:
+                rem = 0
+                for w in e.fifo:
+                    rem += w.remaining
+                reports[e.eid] = (len(e.fifo), rem,
+                                  self.snic[e.node].queue_tokens(kvpt))
             for asg in self.sched.on_pe_fetch(gid, reports):
                 self._maybe_start_read(asg.request._sim_round)
 
@@ -1379,10 +1433,10 @@ class Sim:
         for leg in legs:
             rs.charge(leg)
             rs.flows.append(
-                Flow(self, leg.nbytes, [rmap[r] for r in leg.resources],
-                     self._traced_leg_cb(req.rid, leg.name, leg.nbytes,
-                                         leg_done),
-                     tclass=leg.tclass))
+                self._flow(leg.nbytes, [rmap[r] for r in leg.resources],
+                           self._traced_leg_cb(req.rid, leg.name,
+                                               leg.nbytes, leg_done),
+                           tclass=leg.tclass))
 
     # ------------------------------------------------------------------
     # PE group stepping
@@ -1467,8 +1521,8 @@ class Sim:
                 done()
 
         self.loop.after(t_compute, arm)
-        Flow(self, coll_bytes, [self.net], arm,
-             tclass=TrafficClass.MODEL_COLLECTIVE)
+        self._flow(coll_bytes, [self.net], arm,
+                   tclass=TrafficClass.MODEL_COLLECTIVE)
 
     def _pe_step_done(self, gid, work, t0):
         for e, batch in work:
@@ -1529,11 +1583,11 @@ class Sim:
             rs.charge(Leg("de_h2d", full,
                           ("de_cnic_rd", "de_cnic_wr", "de_dram")))
             rs.flows.append(
-                Flow(self, full,
-                     [self.cnic_rd[(dn, dr)], self.cnic_wr[(dn, dr)],
-                      self.dram[dn]],
-                     self._traced_leg_cb(req.rid, "de_h2d", full,
-                                         lambda: self._h2d_done(rs))))
+                self._flow(full,
+                           [self.cnic_rd[(dn, dr)], self.cnic_wr[(dn, dr)],
+                            self.dram[dn]],
+                           self._traced_leg_cb(req.rid, "de_h2d", full,
+                                               lambda: self._h2d_done(rs))))
             return
         pending = [len(legs)]
 
@@ -1545,10 +1599,10 @@ class Sim:
         for leg in legs:
             rs.charge(leg)
             rs.flows.append(
-                Flow(self, leg.nbytes, [rmap[r] for r in leg.resources],
-                     self._traced_leg_cb(req.rid, leg.name, leg.nbytes,
-                                         leg_done),
-                     tclass=leg.tclass))
+                self._flow(leg.nbytes, [rmap[r] for r in leg.resources],
+                           self._traced_leg_cb(req.rid, leg.name,
+                                               leg.nbytes, leg_done),
+                           tclass=leg.tclass))
 
     def _h2d_done(self, rs: RoundSim):
         rs.h2d_done = True

@@ -209,6 +209,32 @@ def test_chaos_sim_completes_under_any_schedule(draw, snic_rate,
     assert sim.slo_attainment(ttft_slo_s=1e9, tpot_slo_s=1e9) == 1.0
 
 
+def test_boundaries_array_pins_window_crossing():
+    """Regression pin for :meth:`FaultSchedule.boundaries_array` — both
+    engines schedule one re-share per edge off this array, so its exact
+    contents (sorted, deduplicated, per-resource, float64) decide where
+    a flow crossing a slowdown window switches drain rate."""
+    import numpy as np
+    fs = FaultSchedule(windows=[
+        SlowdownWindow("net", 5.0, 9.0, 2.0),
+        SlowdownWindow("net", 7.0, 15.0, 1.5),   # overlaps the first
+        SlowdownWindow("net", 9.0, 20.0, 3.0),   # t0 == prior t1: dedup
+        SlowdownWindow("snic", 2.0, 20.0, 3.0, node=0),
+    ])
+    edges = fs.boundaries_array("net")
+    assert edges.dtype == np.float64
+    assert edges.tolist() == [5.0, 7.0, 9.0, 15.0, 20.0]
+    # list form stays a view of the same truth
+    assert fs.boundaries("net") == edges.tolist()
+    # per-resource isolation: snic edges never leak into net
+    assert fs.boundaries_array("snic").tolist() == [2.0, 20.0]
+    assert fs.boundaries_array("dram").size == 0
+    # the piecewise factor the edges delimit: nested windows multiply
+    for t, f in ((4.9, 1.0), (5.0, 2.0), (7.5, 3.0), (9.5, 4.5),
+                 (15.5, 3.0), (20.0, 1.0)):
+        assert fs.net_factor(t) == f, (t, f)
+
+
 def test_chaos_sim_death_under_elastic_backfill():
     """Death + elastic controller: the lost DE role is backfillable via
     a compensating flip and the run still completes every round."""

@@ -1,0 +1,293 @@
+"""VectorSim == Sim: the vectorized engine's results contract.
+
+The struct-of-arrays engine (sim/vectorized.py) re-expresses the
+processor-sharing drain plane as array kernels but *shares* every other
+subsystem with ``Sim`` (it is a ``Sim``).  The contract this suite pins:
+
+* on any supported config, ``VectorSim.results()`` equals
+  ``Sim.results()`` — **exactly** for counters/bytes/tokens, and within
+  ``TIME_RTOL`` for time-valued keys (docs/testing.md).  In practice
+  the settle arithmetic is the same IEEE ops at the same instants, so
+  the time keys come out bit-identical too; the tolerance is the
+  *documented* contract, the exactness is an observed (and asserted,
+  for the zero-fault arm) property;
+* two runs of either engine are bit-identical (determinism);
+* the pooled byte ledgers conserve: per-round charged bytes equal the
+  loading-plan sums, and the batch plan kernels
+  (``resource_bytes_batch`` / ``hedge_water_fill_batch`` /
+  ``water_fill_frac_batch``) equal their scalar counterparts
+  element-for-element;
+* unsupported features refuse loudly (``VectorSimUnsupported``) instead
+  of silently mis-simulating.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.loading import (hedge_water_fill, hedge_water_fill_batch,
+                                plan_for, resource_bytes,
+                                resource_bytes_batch)
+from repro.core.scheduler import Scheduler, water_fill_frac_batch
+from repro.sim import (DS_660B, HOPPER_NODE, Sim, SimConfig, VectorSim,
+                       VectorSimUnsupported, generate_dataset)
+from repro.sim.faults import (EngineDeath, FaultSchedule, SlowdownWindow,
+                              StragglerModel)
+
+#: results() keys that are simulated *times* (or derived from them):
+#: the equivalence contract allows TIME_RTOL relative error here and
+#: demands exactness everywhere else (counters, bytes, tokens, ratios
+#: over counters).  See docs/testing.md.
+TIME_KEYS = frozenset({
+    "jct_mean", "jct_max", "ttft_mean", "ttft_p99", "ttst_mean",
+    "tpot_mean", "tpot_p99", "sim_time", "collective_stall_s",
+    "transfer_backlog_s", "net_collective_delay_s",
+})
+TIME_RTOL = 1e-9
+
+
+def _cfg(**kw):
+    kw.setdefault("P", 1)
+    kw.setdefault("D", 2)
+    return SimConfig(node=HOPPER_NODE, model=DS_660B, **kw)
+
+
+def _assert_equivalent(cfg, trajs, arrivals=None, exact_times=False):
+    r0 = Sim(cfg, trajs).run(arrivals=arrivals).results()
+    r1 = VectorSim(cfg, trajs).run(arrivals=arrivals).results()
+    assert set(r0) == set(r1), (set(r0) ^ set(r1))
+    for k in sorted(r0):
+        a, b = r0[k], r1[k]
+        if isinstance(a, float) and math.isnan(a):
+            assert isinstance(b, float) and math.isnan(b), (k, a, b)
+        elif k in TIME_KEYS and not exact_times:
+            assert b == pytest.approx(a, rel=TIME_RTOL), (k, a, b)
+        else:
+            assert a == b, (k, a, b)
+    return r0, r1
+
+
+FAULTS = FaultSchedule(
+    windows=[SlowdownWindow("snic", 2.0, 20.0, 3.0, node=0),
+             SlowdownWindow("net", 5.0, 9.0, 2.0),
+             SlowdownWindow("net", 7.0, 15.0, 1.5)],
+    straggler=StragglerModel(0.3, 4.0, seed=7))
+
+
+# --------------------------------------------------------------------------
+# engine equivalence
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                    # dualpath, infinite net
+    dict(mode="basic"),
+    dict(mode="oracle"),
+    dict(split_reads=True),
+    dict(dram_tier_bytes=64e9, prefetch=True),
+    dict(dram_tier_bytes=64e9, tier_policy="agentic-ttl", tier_ttl_s=30.0),
+    dict(net_bw=400e9, net_bg_load=0.4),       # VL arbiter + collectives
+    dict(net_bw=400e9, net_arbiter="fifo", net_bg_load=0.4),
+    dict(faults=FAULTS),
+    dict(faults=FAULTS, net_bw=300e9, net_bg_load=0.3),
+    dict(online=True),
+    dict(layerwise=False),
+    dict(scheduler="rr"),
+    dict(P=2, D=4, split_reads=True, dram_tier_bytes=32e9, net_bw=300e9,
+         net_bg_load=0.3, nodes_per_pe_group=1, nodes_per_de_group=1),
+], ids=lambda kw: ",".join(sorted(kw)) or "dualpath")
+def test_engine_equivalence_matrix(kw):
+    """Every supported feature axis: results() key-for-key."""
+    trajs = generate_dataset(5, 8192, seed=3)
+    _assert_equivalent(_cfg(**kw), trajs)
+
+
+@given(data=st.data())
+@settings(max_examples=5, deadline=None)
+def test_engine_equivalence_randomized(data):
+    """Property arm: randomized small configs x workloads.  Keeps the
+    matrix honest between the hand-picked axes."""
+    n_agents = data.draw(st.integers(2, 6), label="n_agents")
+    max_len = data.draw(st.sampled_from([2048, 8192, 16384]),
+                        label="max_len")
+    seed = data.draw(st.integers(0, 2 ** 10), label="seed")
+    kw = {}
+    kw["mode"] = data.draw(st.sampled_from(["dualpath", "basic"]),
+                           label="mode")
+    if data.draw(st.booleans(), label="split"):
+        kw["split_reads"] = True
+    if data.draw(st.booleans(), label="tier"):
+        kw["dram_tier_bytes"] = 32e9
+    if data.draw(st.booleans(), label="net"):
+        kw["net_bw"] = data.draw(st.sampled_from([200e9, 400e9]),
+                                 label="net_bw")
+        kw["net_bg_load"] = data.draw(st.sampled_from([0.0, 0.5]),
+                                      label="bg")
+    if data.draw(st.booleans(), label="online"):
+        kw["online"] = True
+    trajs = generate_dataset(n_agents, max_len, seed=seed)
+    _assert_equivalent(_cfg(**kw), trajs)
+
+
+def test_zero_fault_schedule_is_bit_identical():
+    """Empty schedule == faults=None == event engine, all exactly."""
+    trajs = generate_dataset(4, 8192, seed=5)
+    cfg_none = _cfg(net_bw=300e9)
+    cfg_empty = _cfg(net_bw=300e9, faults=FaultSchedule())
+    r_none, r_vec = _assert_equivalent(cfg_none, trajs, exact_times=True)
+    _, r_vec_empty = _assert_equivalent(cfg_empty, trajs, exact_times=True)
+    assert r_vec == r_vec_empty
+
+
+def test_vectorized_engine_is_deterministic():
+    trajs = generate_dataset(4, 8192, seed=9)
+    cfg = _cfg(split_reads=True, net_bw=300e9, net_bg_load=0.4)
+    r1 = VectorSim(cfg, trajs).run().results()
+    r2 = VectorSim(cfg, trajs).run().results()
+    assert r1 == r2
+
+
+def test_equivalence_with_staggered_arrivals_and_horizon():
+    """until= cutoff + arrivals: the fleet benchmark's exact shape."""
+    trajs = generate_dataset(6, 8192, seed=11)
+    arrivals = [0.3 * i for i in range(6)]
+    cfg = _cfg(net_bw=200e9, net_bg_load=0.6)
+    s0 = Sim(cfg, trajs).run(arrivals=list(arrivals), until=20.0)
+    s1 = VectorSim(cfg, trajs).run(arrivals=list(arrivals), until=20.0)
+    assert s0.results() == s1.results()
+
+
+# --------------------------------------------------------------------------
+# byte conservation
+# --------------------------------------------------------------------------
+
+def test_pooled_charges_match_loading_plans_to_the_byte():
+    """Same ledger test the event engine passes (test_sim), on the
+    pool: per-round charged bytes == core/loading plan sums."""
+    trajs = generate_dataset(5, 16384, seed=2)
+    for split, tier in ((False, 0.0), (True, 0.0), (True, 2e9)):
+        cfg = _cfg(split_reads=split, dram_tier_bytes=tier)
+        sim = VectorSim(cfg, trajs).run()
+        checked = 0
+        for rs in sim.rounds:
+            if rs.done_t < 0 or rs.req.read_path is None:
+                continue
+            legs = [leg for leg in sim._request_legs(rs.req)
+                    if leg.phase != "decode"]
+            exp = {k: v for k, v in resource_bytes(legs).items() if v}
+            got = {k: v for k, v in rs.charged.items() if v}
+            assert got == exp, (split, tier, rs.req.rid, got, exp)
+            checked += 1
+        assert checked > 0
+
+
+def test_request_table_matches_round_objects():
+    trajs = generate_dataset(5, 8192, seed=4)
+    sim = VectorSim(_cfg(split_reads=True), trajs).run()
+    t = sim.request_table()
+    n = len(sim.rounds)
+    assert all(len(v) == n for v in t.values())
+    for i, rs in enumerate(sim.rounds):
+        assert t["rid"][i] == rs.req.rid
+        assert t["done_t"][i] == rs.done_t
+        assert t["gen_tokens"][i] == rs.gen_total
+    assert int(t["cached_tokens"].sum()) == \
+        sum(rs.req.cached_tokens for rs in sim.rounds)
+
+
+# --------------------------------------------------------------------------
+# batch plan kernels == scalar kernels
+# --------------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_resource_bytes_batch_matches_plan_sums(data):
+    n = data.draw(st.integers(1, 40), label="n")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 20),
+                                          label="seed"))
+    hit = rng.integers(0, 1 << 32, n)
+    miss = rng.integers(0, 1 << 30, n)
+    gen = rng.integers(0, 1 << 28, n)
+    cuts = np.sort((rng.random((n, 3)) * hit[:, None]).astype(np.int64),
+                   axis=1)
+    part = (cuts[:, 0], cuts[:, 1] - cuts[:, 0], cuts[:, 2] - cuts[:, 1],
+            hit - cuts[:, 2])
+    batch = resource_bytes_batch("dualpath", hit, miss, gen, *part)
+    for i in range(n):
+        tier = tuple(int(p[i]) for p in part)
+        rb = resource_bytes(plan_for("pe", 1.0, int(hit[i]), int(miss[i]),
+                                     int(gen[i]), tier=tier))
+        for k, arr in batch.items():
+            assert rb.get(k, 0) == arr[i], (i, k)
+    for mode in ("basic", "oracle"):
+        b = resource_bytes_batch(mode, hit, miss, gen)
+        for i in range(0, n, 7):
+            rb = resource_bytes(plan_for(mode, 1.0, int(hit[i]),
+                                         int(miss[i]), int(gen[i])))
+            for k, arr in b.items():
+                assert rb.get(k, 0) == arr[i], (mode, i, k)
+
+
+def test_resource_bytes_batch_rejects_bad_partition():
+    one = np.asarray([10])
+    with pytest.raises(ValueError):
+        resource_bytes_batch("dualpath", one, one, one,
+                             pe_snic=np.asarray([3]))
+    with pytest.raises(ValueError):
+        resource_bytes_batch("nope", one, one, one)
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_hedge_water_fill_batch_matches_scalar(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 20),
+                                          label="seed"))
+    n = 64
+    rem = rng.integers(0, 1 << 30, n)
+    sev = 1.0 + rng.random(n) * 9.0
+    back = rng.integers(0, 1 << 30, n)
+    out = hedge_water_fill_batch(rem, sev, back)
+    for i in range(n):
+        assert out[i] == hedge_water_fill(int(rem[i]), float(sev[i]),
+                                          int(back[i])), i
+
+
+@given(data=st.data())
+@settings(max_examples=20, deadline=None)
+def test_water_fill_frac_batch_matches_scalar(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 20),
+                                          label="seed"))
+    n = 64
+    pe_q = rng.integers(0, 1 << 20, n)
+    de_q = rng.integers(0, 1 << 20, n)
+    h = rng.integers(1, 1 << 16, n)
+    out = water_fill_frac_batch(pe_q, de_q, h)
+    scalar = Scheduler.__dict__["_water_fill_frac"]
+    stub = object.__new__(Scheduler)
+    for i in range(n):
+        assert out[i] == scalar(stub, int(pe_q[i]), int(de_q[i]),
+                                int(h[i])), i
+    assert np.all((out >= 0.0) & (out <= 1.0))
+
+
+# --------------------------------------------------------------------------
+# gating
+# --------------------------------------------------------------------------
+
+def test_unsupported_configs_refuse_loudly():
+    trajs = generate_dataset(2, 2048, seed=0)
+    deaths = FaultSchedule(deaths=[EngineDeath(5.0, (0, 0))])
+    for kw in (dict(elastic=True),
+               dict(hedge_reads=True),
+               dict(faults=deaths)):
+        with pytest.raises(VectorSimUnsupported):
+            VectorSim(_cfg(**kw), trajs)
+    # an *empty* death list is supported (structurally invisible)
+    VectorSim(_cfg(faults=FaultSchedule()), trajs)
+
+
+def test_pool_flow_cancel_refuses():
+    from repro.sim.vectorized import _PoolFlow
+    f = _PoolFlow()
+    with pytest.raises(VectorSimUnsupported):
+        f.cancel()
