@@ -64,14 +64,16 @@ def _workload():
 
 def _sim_arm(P: int, D: int, elastic: bool, trajs, arrivals,
              drain_policy: str = "idlest"):
+    from repro.core.config import ElasticConfig
     from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
     cfg = SimConfig(node=replace(HOPPER_NODE, g=1), model=DS_660B,
                     P=P, D=D, mode="dualpath",
                     nodes_per_pe_group=1, nodes_per_de_group=1,
                     kv_hbm_frac=KV_HBM_FRAC,
-                    elastic=elastic, drain_policy=drain_policy,
-                    reconfig_interval_s=RECONFIG_INTERVAL_S,
-                    reconfig_patience=2)
+                    elastic=ElasticConfig(
+                        enabled=elastic, drain_policy=drain_policy,
+                        reconfig_interval_s=RECONFIG_INTERVAL_S,
+                        reconfig_patience=2))
     sim = Sim(cfg, trajs).run(arrivals=arrivals)
     r = sim.results()
     r["tput"] = (r["prompt_tokens"] + r["gen_tokens"]) / r["sim_time"]
@@ -84,6 +86,7 @@ def _serving_identity():
     the elastic arm performs at least one live engine flip."""
     import jax
     from repro.configs import get_config
+    from repro.core.config import ElasticConfig
     from repro.models import init_params
     from repro.serving import ServingSystem
     from repro.sim.spec import REDUCED_TEST_NODE
@@ -102,9 +105,11 @@ def _serving_identity():
         sys_ = ServingSystem(cfg, params, n_pe=2, n_de=2, block_tokens=16,
                              max_seq=96, de_slots=1, seed=0, pipelined=True,
                              node=REDUCED_TEST_NODE,
-                             elastic=(arm == "elastic"),
-                             reconfig_interval_s=0.05, reconfig_patience=2,
-                             reconfig_idle_floor_s=1e-4)
+                             elastic=ElasticConfig(
+                                 enabled=(arm == "elastic"),
+                                 reconfig_interval_s=0.05,
+                                 reconfig_patience=2,
+                                 reconfig_idle_floor_s=1e-4))
         sessions = sys_.run_online(trajs, arrivals)
         out[arm] = dict(tokens=[s.context for s in sessions],
                         st=sys_.stats())

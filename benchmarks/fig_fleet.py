@@ -94,12 +94,15 @@ SPEEDUP_TARGET = 50.0
 
 
 def _fleet_cfg(E, bw_per_engine, bg_load, bg_chunk=512e6, **kw):
+    from repro.core.config import NetworkConfig
     from repro.sim import DS_660B, HOPPER_NODE, SimConfig
     P = max(1, E // 4)
     return SimConfig(node=HOPPER_NODE, model=DS_660B, P=P, D=E - P,
                      nodes_per_pe_group=1, nodes_per_de_group=1,
-                     split_reads=True, net_bw=bw_per_engine * E,
-                     net_bg_load=bg_load, net_bg_chunk_bytes=bg_chunk,
+                     split_reads=True,
+                     net=NetworkConfig(net_bw=bw_per_engine * E,
+                                       net_bg_load=bg_load,
+                                       net_bg_chunk_bytes=bg_chunk),
                      **kw)
 
 
@@ -153,6 +156,8 @@ def _equivalence_matrix(quick):
     match exactly (the full randomized matrix lives in
     tests/test_vectorized.py; this is the benchmark's own guard that
     the speedup being measured is a speedup of the *same* model)."""
+    from repro.core.config import (NetworkConfig, ResilienceConfig,
+                                   TierConfig)
     from repro.sim import (DS_660B, HOPPER_NODE, Sim, SimConfig,
                            VectorSim, generate_dataset)
     from repro.sim.faults import (FaultSchedule, SlowdownWindow,
@@ -163,12 +168,16 @@ def _equivalence_matrix(quick):
         straggler=StragglerModel(0.3, 4.0, seed=7))
     matrix = [
         ("dualpath", dict()),
-        ("split+tier", dict(split_reads=True, dram_tier_bytes=64e9,
-                            prefetch=True)),
-        ("net-vl-bg", dict(net_bw=400e9, net_bg_load=0.4)),
-        ("net-fifo-bg", dict(net_bw=400e9, net_arbiter="fifo",
-                             net_bg_load=0.4)),
-        ("faults", dict(faults=faults, net_bw=300e9, net_bg_load=0.3)),
+        ("split+tier", dict(split_reads=True,
+                            tier=TierConfig(dram_tier_bytes=64e9,
+                                            prefetch=True))),
+        ("net-vl-bg", dict(net=NetworkConfig(net_bw=400e9,
+                                             net_bg_load=0.4))),
+        ("net-fifo-bg", dict(net=NetworkConfig(net_bw=400e9,
+                                               net_arbiter="fifo",
+                                               net_bg_load=0.4))),
+        ("faults", dict(resilience=ResilienceConfig(faults=faults),
+                        net=NetworkConfig(net_bw=300e9, net_bg_load=0.3))),
         ("basic-rr", dict(mode="basic", scheduler="rr")),
     ]
     if quick:

@@ -50,13 +50,16 @@ SLO_TPOT_S = 0.020
 
 
 def _sim_arm(arbiter: str, load: float, n_agents: int):
+    from repro.core.config import NetworkConfig
     from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig, \
         generate_dataset
     trajs = generate_dataset(n_agents, 32768, seed=0)
     cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
-                    mode="dualpath", net_bw=NET_BW, net_arbiter=arbiter,
-                    collective_bytes_per_token=COLL_BYTES_PER_TOKEN,
-                    net_bg_load=load)
+                    mode="dualpath",
+                    net=NetworkConfig(
+                        net_bw=NET_BW, net_arbiter=arbiter,
+                        collective_bytes_per_token=COLL_BYTES_PER_TOKEN,
+                        net_bg_load=load))
     sim = Sim(cfg, trajs).run()
     r = sim.results()
     r["slo"] = sim.slo_attainment(SLO_TTFT_S, SLO_TPOT_S)
@@ -85,12 +88,14 @@ def _serving_identity(arbiter: str):
         trajs = [Trajectory(i, [Round(24 + 8 * i, 4 + 2 * i),
                                 Round(16 + 4 * i, 4), Round(8, 4)])
                  for i in range(4)]
+        from repro.core.config import NetworkConfig
         sys_ = ServingSystem(cfg, params, n_pe=1, n_de=2, block_tokens=16,
                              max_seq=200, de_slots=2, seed=0,
                              split_reads=True,
                              pipelined=(arm == "pipelined"),
-                             node=REDUCED_TEST_NODE, net_arbiter=arbiter,
-                             collective_group_size=8)
+                             node=REDUCED_TEST_NODE,
+                             net=NetworkConfig(net_arbiter=arbiter,
+                                               collective_group_size=8))
         sessions = sys_.run_offline(trajs)
         out[arm] = dict(tokens=[s.context for s in sessions],
                         st=sys_.stats())

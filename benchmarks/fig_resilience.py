@@ -88,14 +88,17 @@ def _schedule(scale: float):
 
 
 def _sim_arm(faults, hedge: bool, elastic: bool, trajs):
+    from repro.core.config import ElasticConfig, ResilienceConfig
     from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
     cfg = SimConfig(node=replace(HOPPER_NODE, g=1, snic_bw=SNIC_BW),
                     model=DS_660B, P=2, D=2, mode="dualpath",
                     nodes_per_pe_group=1, nodes_per_de_group=1,
                     split_reads=True, kv_hbm_frac=KV_HBM_FRAC,
-                    faults=faults, hedge_reads=hedge,
-                    elastic=elastic, reconfig_interval_s=4.0,
-                    reconfig_patience=2)
+                    resilience=ResilienceConfig(faults=faults,
+                                                hedge_reads=hedge),
+                    elastic=ElasticConfig(enabled=elastic,
+                                          reconfig_interval_s=4.0,
+                                          reconfig_patience=2))
     fresh = [type(t)(t.tid, list(t.rounds)) for t in trajs]
     sim = Sim(cfg, fresh).run()
     r = sim.results()
@@ -123,11 +126,14 @@ def _serving_resilience():
     cfg = get_config("qwen1.5-0.5b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
 
-    def run(**kw):
+    def run(faults=None, hedge_reads=False):
+        from repro.core.config import ResilienceConfig
         sys_ = ServingSystem(cfg, params, n_pe=2, n_de=2, block_tokens=16,
                              max_seq=160, de_slots=2, seed=0,
                              pipelined=True, split_reads=True,
-                             node=REDUCED_TEST_NODE, **kw)
+                             node=REDUCED_TEST_NODE,
+                             resilience=ResilienceConfig(
+                                 faults=faults, hedge_reads=hedge_reads))
         trajs = [Trajectory(i, [Round(24, 4), Round(16, 4), Round(8, 4)])
                  for i in range(4)]
         sessions = sys_.run_online(trajs, [0.0, 0.1, 0.2, 0.3])

@@ -1,0 +1,157 @@
+"""Online SLO layer (PR 10): arrival-rate sweep of the three serving
+mechanisms behind ``SloConfig`` — admission control, chunked prefill,
+SLO-class scheduling — individually and composed.
+
+Motivation: BENCH_8's ``fig_online_serving.slo_attainment`` sits at
+0.17 — the serving stack admits everything, packs whole prompts, and
+treats a human-facing round and a background sweep identically.  This
+figure runs the event simulator at paper scale (DS 660B on a Hopper
+node, 1 PE / 2 DEs, dualpath) under a mixed Poisson workload:
+
+* **interactive** half — short-prompt agents (6 k ctx, appends x0.5),
+  SLO TTFT <= 0.5 s;
+* **batch** half — long-prompt agents (16 k ctx, appends x2.0) whose
+  re-reads + prefills oversubscribe the PE.
+
+Arms (all knobs live in ``repro.core.config.SloConfig``):
+
+* ``baseline``     — the pre-PR system: everything structurally off.
+* ``+admission``   — the load-aware gate defers/rejects rounds whose
+  queueing-delay-aware TTFT estimate already blows the SLO.
+* ``+chunked``     — ``prefill_chunk_tokens`` slices long prompts so
+  a multi-second forward batch can no longer head-of-line block.
+* ``+classes``     — ``class_aware`` priority in every queue an
+  interactive round crosses (global queue, SNIC read queue, PE fifo).
+  Alone it is bounded by batch granularity: priority cannot preempt a
+  forward batch already in flight, so its headline contribution is
+  small — but composed with chunking (which creates the preemption
+  points) it pins interactive TTFT p99 inside the SLO.
+* ``all``          — the three composed.
+
+Acceptance, asserted in ``--smoke`` mode (CI):
+
+* the composed arm's attainment is >= 3x the motivating 0.17 (>= 0.51)
+  at the headline arrival rate;
+* every mechanism arm >= baseline (no mechanism hurts);
+* the composed arm's interactive TTFT p99 is inside the SLO.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.config import SloConfig
+from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
+from repro.sim.traces import generate_dataset
+
+from benchmarks.common import emit, header, timed
+
+SLO_TTFT_S = 0.5
+SLO_TPOT_S = 0.050
+HEADLINE_APS = 4.0
+MOTIVATING_ATTAINMENT = 0.17        # BENCH_8 fig_online_serving
+ADMISSION = dict(admission=True, admission_ttft_slo_s=SLO_TTFT_S,
+                 admission_defer_s=0.25, admission_max_defers=12)
+CHUNK = 512
+
+ARMS = (
+    ("baseline", None),
+    ("admission", SloConfig(**ADMISSION)),
+    ("chunked", SloConfig(prefill_chunk_tokens=CHUNK)),
+    ("classes", SloConfig(class_aware=True)),
+    ("all", SloConfig(prefill_chunk_tokens=CHUNK, class_aware=True,
+                      **ADMISSION)),
+)
+
+
+def workload(n: int):
+    """Half interactive (short ctx, light appends), half batch (long
+    ctx, heavy appends) — the batch half's storage re-reads and long
+    prefills are what oversubscribe the single PE."""
+    inter = generate_dataset(n // 2, 6000, seed=1)
+    batch = generate_dataset(n - n // 2, 16384, seed=2)
+    trajs = []
+    for t in inter:
+        t = t.scaled(append_scale=0.5, gen_scale=0.4)
+        t.slo_class = "interactive"
+        trajs.append(t)
+    for t in batch:
+        t = t.scaled(append_scale=2.0, gen_scale=0.5)
+        t.slo_class = "batch"
+        trajs.append(t)
+    for i, t in enumerate(trajs):
+        t.tid = i
+    return trajs
+
+
+def run_arm(slo: SloConfig | None, aps: float, n: int):
+    trajs = workload(n)
+    rng = np.random.default_rng(0)
+    arrivals = list(np.cumsum(rng.exponential(1 / aps, size=len(trajs))))
+    kw = {} if slo is None else dict(slo=slo)
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
+                    mode="dualpath", online=True, beta_compute_s=1.0, **kw)
+    sim = Sim(cfg, trajs)
+    sim.run(arrivals=arrivals)
+    return sim.results(), sim.slo_attainment(SLO_TTFT_S, SLO_TPOT_S)
+
+
+def run(quick: bool = False, smoke: bool = False):
+    header()
+    metrics = {}
+    n = 384
+    rates = (HEADLINE_APS,) if (quick or smoke) else (2.0, HEADLINE_APS, 6.0)
+    for aps in rates:
+        att = {}
+        for name, slo in ARMS:
+            with timed(f"fig_slo/aps{aps:g}/{name}") as box:
+                r, a = run_arm(slo, aps, n)
+                att[name] = a
+                cls = {c: round(v["ttft_p99"], 2)
+                       for c, v in r["latency_by_class"].items()}
+                box["derived"] = (
+                    f"att={a:.3f} fin={r['finished_rounds']} "
+                    f"def={r['deferred_rounds']} rej={r['rejected_rounds']} "
+                    f"chunks={r['prefill_chunks']} "
+                    f"ttft_p99={r['ttft_p99']:.2f}s "
+                    f"cls_ttft_p99={cls}")
+            if aps == HEADLINE_APS:
+                metrics[f"slo_attainment_{name}"] = a
+                if name == "all":
+                    metrics["slo_attainment"] = a
+                    metrics["slo_interactive_ttft_p99_s"] = \
+                        r["latency_by_class"]["interactive"]["ttft_p99"]
+                    metrics["slo_rejected_rounds"] = float(
+                        r["rejected_rounds"])
+        emit(f"fig_slo/aps{aps:g}/summary", 0.0,
+             " ".join(f"{k}={v:.3f}" for k, v in att.items()) +
+             f" gain={att['all'] / max(att['baseline'], 1e-9):.2f}x")
+        if aps == HEADLINE_APS:
+            metrics["slo_gain"] = att["all"] / max(att["baseline"], 1e-9)
+            if smoke:
+                assert att["all"] >= 3 * MOTIVATING_ATTAINMENT, (
+                    f"composed attainment {att['all']:.3f} < 3x the "
+                    f"motivating {MOTIVATING_ATTAINMENT}")
+                for name, _ in ARMS:
+                    assert att[name] >= att["baseline"] - 1e-9, (
+                        f"{name} ({att[name]:.3f}) regresses baseline "
+                        f"({att['baseline']:.3f})")
+                assert (metrics["slo_interactive_ttft_p99_s"]
+                        <= SLO_TTFT_S), (
+                    f"composed interactive TTFT p99 "
+                    f"{metrics['slo_interactive_ttft_p99_s']:.2f}s "
+                    f"outside the {SLO_TTFT_S}s SLO")
+    return metrics
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

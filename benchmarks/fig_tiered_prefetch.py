@@ -66,10 +66,12 @@ def run(quick: bool = False, smoke: bool = False):
     trajs = generate_dataset(n_agents, 32768, seed=0, think_mean_s=think_s)
     res = {}
     for label, tier_on, policy, prefetch in ARMS:
+        from repro.core.config import TierConfig
         cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
                         mode="dualpath",
-                        dram_tier_bytes=tier_bytes if tier_on else 0.0,
-                        tier_policy=policy, prefetch=prefetch)
+                        tier=TierConfig(
+                            dram_tier_bytes=tier_bytes if tier_on else 0.0,
+                            tier_policy=policy, prefetch=prefetch))
         with timed(f"fig_tiered/{label}") as box:
             sim = Sim(cfg, trajs).run()
             r = sim.results()

@@ -45,12 +45,14 @@ MAX_LEN = 8192
 
 def _workload(seed=0):
     P = max(1, N_ENGINES // 4)
+    from repro.core.config import NetworkConfig
     cfg = SimConfig(node=HOPPER_NODE, model=DS_660B,
                     P=P, D=N_ENGINES - P,
                     nodes_per_pe_group=1, nodes_per_de_group=1,
                     split_reads=True,
-                    net_bw=BW_PER_ENGINE * N_ENGINES,
-                    net_bg_load=BG_LOAD, net_bg_chunk_bytes=BG_CHUNK)
+                    net=NetworkConfig(net_bw=BW_PER_ENGINE * N_ENGINES,
+                                      net_bg_load=BG_LOAD,
+                                      net_bg_chunk_bytes=BG_CHUNK))
     trajs = generate_dataset(N_AGENTS, MAX_LEN, seed=seed)
     step = ARRIVAL_WINDOW_S / max(N_AGENTS - 1, 1)
     arrivals = [i * step for i in range(N_AGENTS)]

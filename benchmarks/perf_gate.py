@@ -55,6 +55,17 @@ DIRECTIONS = {
                    "jct_max_s": -1},
     "fig_online_serving": {"offline_tok_s": +1, "slo_attainment": +1,
                            "overlap_gain": +1},
+    # online SLO layer: attainments are deterministic sim outputs
+    # (tight bands); the >=3x-over-0.17 hard acceptance is asserted in
+    # the fig_slo smoke itself, the gate tracks the trajectory
+    "fig_slo": {"slo_attainment": +1, "slo_attainment_baseline": 0,
+                "slo_attainment_admission": +1,
+                "slo_attainment_chunked": +1,
+                "slo_attainment_classes": +1,
+                "slo_attainment_all": +1,
+                "slo_gain": +1,
+                "slo_interactive_ttft_p99_s": -1,
+                "slo_rejected_rounds": 0},
     "fig_interference": {"vl_collective_stall_s": -1,
                          "vl_slo_at_top_load": +1,
                          "fifo_slo_at_top_load": 0},

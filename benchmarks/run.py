@@ -26,7 +26,7 @@ def suite():
                             fig10_online, fig12_ablation, fig13_balance,
                             fig_bottleneck, fig_elastic, fig_fleet,
                             fig_interference, fig_online_serving,
-                            fig_resilience, fig_tiered_prefetch,
+                            fig_resilience, fig_slo, fig_tiered_prefetch,
                             kernel_bench, micro_submit, microbench_sim,
                             roofline, table1_cache_compute, table3_scale)
     return {
@@ -41,6 +41,7 @@ def suite():
         "fig13": fig13_balance.run,
         "fig_tiered": fig_tiered_prefetch.run,
         "fig_online_serving": fig_online_serving.run,
+        "fig_slo": fig_slo.run,
         "fig_interference": fig_interference.run,
         "fig_elastic": fig_elastic.run,
         "fig_resilience": fig_resilience.run,

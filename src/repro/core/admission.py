@@ -1,0 +1,89 @@
+"""Load-aware admission control (the online SLO layer's front gate).
+
+Sits in front of ``core.scheduler.Scheduler`` in both runtimes: every
+round arrival is first shown to :class:`AdmissionGate`, which holds a
+queueing-delay-aware TTFT estimate built from the same per-role
+seconds-of-service signals (:class:`core.autoscale.LoadSignals`) that
+feed the elastic controller.  An arrival whose estimated TTFT exceeds
+the admission SLO is *deferred* — resubmitted ``admission_defer_s``
+later, when the backlog it would have joined has partly drained — and
+after ``admission_max_defers`` consecutive deferrals it is *rejected*
+(load shedding: the client's trajectory ends rather than occupying
+queue slots it can never serve within budget).
+
+The TTFT estimate is deliberately the simple queueing-network one:
+
+    est = (queued + busy + read-backlog seconds) / admitting PEs
+          + own storage-read seconds + own prefill seconds
+
+i.e. "the work ahead of me, divided by the servers, plus my own
+service time".  Both runtimes already maintain every term for the
+elastic controller, so admission adds no new accounting.
+
+With ``SloConfig.admission`` unset the gate is never constructed and
+arrivals flow straight to ``Scheduler.submit`` — the admission-off
+configuration is structurally identical to the pre-SLO runtimes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable
+
+from repro.core.autoscale import LoadSignals
+from repro.core.config import SloConfig
+
+#: decisions returned by :meth:`AdmissionGate.decide`
+ADMIT = "admit"
+DEFER = "defer"
+REJECT = "reject"
+
+
+class AdmissionGate:
+    """SLO-budget gate over round arrivals.
+
+    ``key`` identifies one logical arrival across its re-submissions
+    (the runtimes use ``(trajectory id, round index)``), so the defer
+    counter survives the deferral round-trips and the gate can escalate
+    to rejection.
+    """
+
+    def __init__(self, slo: SloConfig):
+        self.slo = slo
+        self.admitted_rounds = 0
+        self.deferred_rounds = 0
+        self.rejected_rounds = 0
+        self._defers: Dict[Hashable, int] = {}
+
+    def ttft_estimate(self, sig: LoadSignals, read_s: float,
+                      prefill_s: float) -> float:
+        """Queueing-delay-aware TTFT estimate for a new arrival.
+
+        ``read_s``/``prefill_s`` are the arrival's own storage-read and
+        prefill service times; the queueing term is the prefill-side
+        backlog already in the system, amortised over admitting PEs.
+        """
+        backlog = sig.pe_queued_s + sig.pe_busy_s + sig.pe_read_q_s
+        return backlog / max(sig.n_pe, 1) + read_s + prefill_s
+
+    def decide(self, key: Hashable, ttft_est: float) -> str:
+        """ADMIT / DEFER / REJECT one arrival given its TTFT estimate."""
+        if ttft_est <= self.slo.admission_ttft_slo_s:
+            self._defers.pop(key, None)
+            self.admitted_rounds += 1
+            return ADMIT
+        n = self._defers.get(key, 0)
+        if n >= self.slo.admission_max_defers:
+            self._defers.pop(key, None)
+            self.rejected_rounds += 1
+            return REJECT
+        self._defers[key] = n + 1
+        self.deferred_rounds += 1
+        return DEFER
+
+    def counters(self) -> Dict[str, int]:
+        """The three obs-schema counters, ready to merge into results."""
+        return dict(admitted_rounds=self.admitted_rounds,
+                    deferred_rounds=self.deferred_rounds,
+                    rejected_rounds=self.rejected_rounds)
+
+
+__all__ = ["AdmissionGate", "ADMIT", "DEFER", "REJECT"]

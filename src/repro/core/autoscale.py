@@ -63,17 +63,29 @@ class LoadSignals:
     de_read_q_s: float = 0.0        # DE-side disk reading queue backlog
     net_congestion: float = 0.0     # SharedLink.congestion() in [0, 1]
     dram_hit_ratio: float = 0.0     # tier hits / (tier hits + SNIC reads)
+    # SLO-class signals (core/config.SloConfig class_aware): the share
+    # of each role's *queued* seconds owed to interactive-class rounds.
+    # Interactive backlog is double-counted into the pressure so the
+    # elastic controller reacts to an interactive pile-up before the
+    # aggregate queue alone would trip the hysteresis band.  Both stay
+    # 0.0 when class-aware scheduling is off — pressures then reduce
+    # exactly to the legacy expressions.
+    pe_queued_interactive_s: float = 0.0
+    de_queued_interactive_s: float = 0.0
 
     @property
     def pe_pressure(self) -> float:
         """Seconds of outstanding prefill-side work per admitting PE
-        (storage reads feed the prefill, so their backlog counts)."""
-        tot = self.pe_queued_s + self.pe_busy_s + self.pe_read_q_s
+        (storage reads feed the prefill, so their backlog counts;
+        interactive-class backlog counts twice)."""
+        tot = self.pe_queued_s + self.pe_busy_s + self.pe_read_q_s \
+            + self.pe_queued_interactive_s
         return tot / max(self.n_pe, 1)
 
     @property
     def de_pressure(self) -> float:
-        tot = self.de_queued_s + self.de_busy_s + self.de_read_q_s
+        tot = self.de_queued_s + self.de_busy_s + self.de_read_q_s \
+            + self.de_queued_interactive_s
         return tot / max(self.n_de, 1)
 
 

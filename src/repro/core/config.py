@@ -1,0 +1,285 @@
+"""Shared grouped runtime configuration (the config-API redesign).
+
+The two runtimes' entry points grew the same knobs twice: ``SimConfig``
+(sim/simulator.py) accumulated ~40 flat dataclass fields while
+``ServingSystem.__init__`` (serving/system.py) mirrored ~22 of them as
+flat kwargs — and the copies drifted (``reconfig_interval_s`` 10.0 vs
+5.0, ``tier_ttl_s`` 120.0 vs None).  This module is the single
+definition both consume by composition:
+
+* :class:`TierConfig`        — node-local DRAM KV tier + prefetcher
+* :class:`NetworkConfig`     — finite compute network / collectives
+* :class:`ElasticConfig`     — PE<->DE role reconfiguration
+* :class:`ResilienceConfig`  — fault injection + hedged reads
+* :class:`SloConfig`         — online SLO layer: admission control,
+  chunked prefill, priority classes (new in this module)
+
+``SimConfig`` and ``ServingSystem`` each hold one instance of every
+group; a future knob lands in exactly one place.  The old flat kwargs
+keep working for one release through :func:`resolve_groups`, which
+folds them into the right group and emits a
+:class:`ConfigDeprecationWarning` (turned into an error for internal
+code by the test suite — only the shim tests may trigger it).
+
+Default-drift resolution (documented here, asserted by
+tests/test_config.py):
+
+* ``reconfig_interval_s`` — **5.0 wins** (the serving runtime's
+  default).  The simulator's old 10.0 was never load-bearing: every
+  elastic-enabled benchmark and test passes the interval explicitly,
+  and the tighter loop is the safer default for the small-scale
+  deployments both runtimes construct by default.
+* ``tier_ttl_s`` — **None wins** (the serving runtime's default),
+  meaning "the policy's own default" (AgenticTTLPolicy's 120 s).  The
+  simulator's old explicit 120.0 equalled that policy default, so the
+  unification is behaviour-neutral.
+* ``block_tokens`` — intentionally NOT unified (64 sim vs 16 serving):
+  the simulator models the paper's production block size while the
+  real-bytes runtime runs reduced test models whose trie needs finer
+  granularity.  It stays a per-runtime core field, listed in
+  :data:`PARITY_EXCLUSIONS`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+
+class ConfigDeprecationWarning(DeprecationWarning):
+    """Flat runtime-config kwargs (pre-grouped API) were used."""
+
+
+# ---------------------------------------------------------------------------
+# the groups
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TierConfig:
+    """Node-local DRAM KV tier over the remote store (kvcache/tiers.py).
+
+    ``dram_tier_bytes == 0`` disables the tier entirely (both runtimes'
+    legacy behaviour).  ``tier_ttl_s=None`` defers to the policy's own
+    default (agentic-ttl: 120 s)."""
+
+    dram_tier_bytes: float = 0.0      # per-node tier capacity [bytes]
+    tier_policy: str = "lru"          # lru | agentic-ttl
+    tier_ttl_s: Optional[float] = None  # None = policy default (120 s)
+    prefetch: bool = False            # think-time prefetcher
+    prefetch_chunk_blocks: int = 32   # blocks per staged prefetch chunk
+
+
+@dataclass
+class NetworkConfig:
+    """Finite compute network + model collectives (repro.network).
+
+    ``net_bw``/``net_bg_*``/``model_collectives`` drive the simulator's
+    SharedLink; ``collective_group_size`` is the serving runtime's knob
+    for the same mechanism (its link model derives volumes from the
+    group size) — each is ignored by the other runtime (see
+    PARITY_EXCLUSIONS)."""
+
+    net_bw: Optional[float] = None    # shared PE<->DE link [B/s]; None = inf
+    net_arbiter: str = "vl"           # 'vl' (paper) | 'fifo' (ablation)
+    model_collectives: Optional[bool] = None   # None: on iff net finite
+    collective_dtype_bytes: int = 2
+    collective_bytes_per_token: Optional[float] = None
+    net_bg_load: float = 0.0          # background traffic, frac of net_bw
+    net_bg_chunk_bytes: float = 512e6
+    collective_group_size: int = 0    # serving: >1 puts collectives on CN
+
+
+@dataclass
+class ElasticConfig:
+    """Elastic PE<->DE role reconfiguration (core/autoscale.py).
+
+    Truthiness follows ``enabled`` so ``if cfg.elastic:`` reads the
+    same whether ``elastic`` holds the legacy bool or this group."""
+
+    enabled: bool = False
+    reconfig_interval_s: float = 5.0  # unified default (was 10.0 in sim)
+    drain_policy: str = "idlest"      # idlest | rotate
+    reconfig_hi: float = 2.0          # pressure-ratio hysteresis band
+    reconfig_lo: float = 0.5
+    reconfig_patience: int = 2
+    reconfig_cooldown_s: float = 0.0
+    reconfig_idle_floor_s: float = 1e-3
+    elastic_min_pe: int = 1           # simulator-only floors
+    elastic_min_de: int = 1
+
+    def __bool__(self) -> bool:
+        return self.enabled
+
+
+@dataclass
+class ResilienceConfig:
+    """Fault injection + hedged split reads (sim/faults.py)."""
+
+    faults: Optional[object] = None   # FaultSchedule (or None)
+    hedge_reads: bool = False
+    hedge_threshold_s: float = 0.25   # simulator-only (mid-flight hedge)
+    hedge_min_severity: float = 2.0
+
+
+@dataclass
+class SloConfig:
+    """Online SLO layer: admission control, chunked prefill, priority
+    classes.  Every knob's default keeps the feature structurally off —
+    an all-default SloConfig is event-identical to the pre-SLO
+    runtimes (pinned by the conservation/identity tests).
+
+    * **Admission control** — when ``admission`` is set, arrivals pass
+      a load-aware gate (core/admission.AdmissionGate) fed by the same
+      per-role seconds-of-service signals the elastic controller uses:
+      a queueing-delay-aware TTFT estimate above
+      ``admission_ttft_slo_s`` defers the round by
+      ``admission_defer_s`` (up to ``admission_max_defers`` times,
+      then rejects — load shedding).  Offline serving admits
+      unconditionally (there is no arrival process to shed).
+    * **Chunked prefill** — ``prefill_chunk_tokens`` caps each packed
+      prefill slice (core/intra.QuotaPacker) so a long-prompt round
+      can no longer head-of-line-block decode steps for a whole
+      quota; requests mid-chunk surface as the PREFILL_CHUNKED
+      lifecycle sub-state in the serving runtime.
+    * **Priority classes** — ``class_aware`` orders the scheduler's
+      global queues by (class rank, arrival): ``interactive`` rounds
+      overtake ``batch`` rounds at submission, in DE phase-1 routing
+      and in every drain/recovery re-sort, and per-class queue
+      pressure feeds the elastic controller.
+    """
+
+    admission: bool = False
+    admission_ttft_slo_s: float = 0.5
+    admission_defer_s: float = 0.05
+    admission_max_defers: int = 40
+    prefill_chunk_tokens: Optional[int] = None  # None = quota-only packing
+    class_aware: bool = False
+
+
+#: the group field names, in declaration order
+GROUP_FIELDS: Tuple[str, ...] = ("tier", "net", "elastic", "resilience",
+                                 "slo")
+
+_GROUP_TYPES = dict(tier=TierConfig, net=NetworkConfig,
+                    elastic=ElasticConfig, resilience=ResilienceConfig,
+                    slo=SloConfig)
+
+#: flat (pre-redesign) kwarg -> (group, field).  ``elastic`` as a bool
+#: is special-cased by resolve_groups (it collides with the group name).
+FLAT_FIELDS: Dict[str, Tuple[str, str]] = {
+    # --- tier ---------------------------------------------------------
+    "dram_tier_bytes": ("tier", "dram_tier_bytes"),
+    "tier_policy": ("tier", "tier_policy"),
+    "tier_ttl_s": ("tier", "tier_ttl_s"),
+    "prefetch": ("tier", "prefetch"),
+    "prefetch_chunk_blocks": ("tier", "prefetch_chunk_blocks"),
+    # --- network ------------------------------------------------------
+    "net_bw": ("net", "net_bw"),
+    "net_arbiter": ("net", "net_arbiter"),
+    "model_collectives": ("net", "model_collectives"),
+    "collective_dtype_bytes": ("net", "collective_dtype_bytes"),
+    "collective_bytes_per_token": ("net", "collective_bytes_per_token"),
+    "net_bg_load": ("net", "net_bg_load"),
+    "net_bg_chunk_bytes": ("net", "net_bg_chunk_bytes"),
+    "collective_group_size": ("net", "collective_group_size"),
+    # --- elastic ------------------------------------------------------
+    "reconfig_interval_s": ("elastic", "reconfig_interval_s"),
+    "drain_policy": ("elastic", "drain_policy"),
+    "reconfig_hi": ("elastic", "reconfig_hi"),
+    "reconfig_lo": ("elastic", "reconfig_lo"),
+    "reconfig_patience": ("elastic", "reconfig_patience"),
+    "reconfig_cooldown_s": ("elastic", "reconfig_cooldown_s"),
+    "reconfig_idle_floor_s": ("elastic", "reconfig_idle_floor_s"),
+    "elastic_min_pe": ("elastic", "elastic_min_pe"),
+    "elastic_min_de": ("elastic", "elastic_min_de"),
+    # --- resilience ---------------------------------------------------
+    "faults": ("resilience", "faults"),
+    "hedge_reads": ("resilience", "hedge_reads"),
+    "hedge_threshold_s": ("resilience", "hedge_threshold_s"),
+    "hedge_min_severity": ("resilience", "hedge_min_severity"),
+}
+
+#: shared-looking fields deliberately NOT held to cross-runtime default
+#: parity, with the reason — the config-parity test consumes this.
+PARITY_EXCLUSIONS: Dict[str, str] = {
+    "block_tokens": "sim models the paper's production 64-token "
+                    "FullBlocks; serving runs reduced test models whose "
+                    "trie needs 16-token granularity",
+    "elastic_min_pe": "simulator-only floor (serving derives its floor "
+                      "from the admitting set)",
+    "elastic_min_de": "simulator-only floor",
+    "hedge_threshold_s": "simulator-only: gates the mid-flight hedge; "
+                         "serving hedges at issue time",
+    "net_bw": "simulator-only: serving's link model derives capacity "
+              "from the node spec",
+    "model_collectives": "simulator-only switch",
+    "collective_bytes_per_token": "simulator-only override",
+    "collective_dtype_bytes": "simulator-only",
+    "net_bg_load": "simulator-only background traffic",
+    "net_bg_chunk_bytes": "simulator-only",
+    "collective_group_size": "serving-only: >1 enables collectives "
+                             "there (sim uses net_bw/model_collectives)",
+}
+
+
+def resolve_groups(flat: Dict[str, object], *,
+                   tier: Optional[TierConfig] = None,
+                   net: Optional[NetworkConfig] = None,
+                   elastic=None,
+                   resilience: Optional[ResilienceConfig] = None,
+                   slo: Optional[SloConfig] = None,
+                   stacklevel: int = 3) -> Dict[str, object]:
+    """Resolve grouped + deprecated-flat kwargs into the five groups.
+
+    ``flat`` is the caller's ``**legacy`` dict.  Unknown keys raise
+    TypeError (exactly like a wrong kwarg on the old signatures); known
+    keys emit one :class:`ConfigDeprecationWarning` and are folded into
+    a *copy* of the corresponding group (explicit groups passed by the
+    caller are never mutated).  ``elastic`` may arrive as the legacy
+    bool switch — it is routed to ``ElasticConfig.enabled``."""
+    if isinstance(elastic, bool):
+        flat = dict(flat)
+        flat["elastic"] = elastic
+        elastic = None
+    groups = {
+        "tier": tier if tier is not None else TierConfig(),
+        "net": net if net is not None else NetworkConfig(),
+        "elastic": elastic if elastic is not None else ElasticConfig(),
+        "resilience": resilience if resilience is not None
+        else ResilienceConfig(),
+        "slo": slo if slo is not None else SloConfig(),
+    }
+    if not flat:
+        return groups
+    unknown = sorted(k for k in flat
+                     if k not in FLAT_FIELDS and k != "elastic")
+    if unknown:
+        raise TypeError(f"unexpected config kwargs: {unknown}")
+    warnings.warn(
+        f"flat config kwargs {sorted(flat)} are deprecated; pass the "
+        f"grouped dataclasses from repro.core.config instead "
+        f"(TierConfig/NetworkConfig/ElasticConfig/ResilienceConfig/"
+        f"SloConfig) — the flat spelling is removed next release",
+        ConfigDeprecationWarning, stacklevel=stacklevel)
+    overrides: Dict[str, Dict[str, object]] = {}
+    for k, v in flat.items():
+        grp, fld = FLAT_FIELDS.get(k, ("elastic", "enabled"))
+        overrides.setdefault(grp, {})[fld] = v
+    for grp, kw in overrides.items():
+        groups[grp] = dataclasses.replace(groups[grp], **kw)
+    return groups
+
+
+def group_defaults(name: str):
+    """A fresh all-default instance of group ``name``."""
+    return _GROUP_TYPES[name]()
+
+
+__all__ = [
+    "TierConfig", "NetworkConfig", "ElasticConfig", "ResilienceConfig",
+    "SloConfig", "ConfigDeprecationWarning", "FLAT_FIELDS",
+    "GROUP_FIELDS", "PARITY_EXCLUSIONS", "resolve_groups",
+    "group_defaults", "field",
+]

@@ -18,7 +18,7 @@ fitted affine in FLOPs (profiled in advance, as in PrefillOnly/Sarathi).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 
@@ -86,10 +86,29 @@ class PrefillWork:
     rid: int
     cached: int                     # tokens whose KV exists already
     remaining: int                  # append tokens still to compute
+    rank: int = 0                   # SLO-class rank (0 = interactive)
+    arrival: float = 0.0            # round arrival time (tie-break)
 
     def advance(self, bsz: int):
         self.cached += bsz
         self.remaining -= bsz
+
+    def key(self) -> Tuple[int, float, int]:
+        return (self.rank, self.arrival, self.rid)
+
+
+def class_insert_index(keys: Sequence[Tuple[int, float, int]],
+                       new_key: Tuple[int, float, int]) -> int:
+    """Stable insertion point for class-aware prefill fifos: after the
+    last entry whose (rank, arrival, rid) key is <= ``new_key``.  Global
+    queue priority alone is a no-op for TTFT — the wait accrues *inside*
+    the engine (read queue + this fifo), so the class order must extend
+    here.  An interactive round may land ahead of a partially-prefilled
+    batch head; the preempted work just resumes on a later pack."""
+    i = len(keys)
+    while i > 0 and keys[i - 1] > new_key:
+        i -= 1
+    return i
 
 
 @dataclass
@@ -101,14 +120,25 @@ class BatchItem:
 
 
 class QuotaPacker:
-    """FIFO packing under a compute quota with binary-search chunking."""
+    """FIFO packing under a compute quota with binary-search chunking.
+
+    ``chunk_tokens`` (SloConfig.prefill_chunk_tokens) additionally caps
+    any single request's contribution to one batch, independent of the
+    quota: a long-prompt round is sliced into ≤chunk_tokens pieces so
+    decode steps interleave between the slices instead of waiting a
+    whole quota behind it.  ``None`` (the default) preserves the
+    quota-only arithmetic bit-for-bit.
+    """
 
     def __init__(self, cfg: ModelConfig, time_model: AttnTimeModel,
-                 quota_s: float = 0.300, min_chunk: int = 16):
+                 quota_s: float = 0.300, min_chunk: int = 16,
+                 chunk_tokens: Optional[int] = None):
         self.cfg = cfg
         self.time_model = time_model
         self.quota_s = quota_s
         self.min_chunk = min_chunk
+        self.chunk_tokens = None if chunk_tokens is None \
+            else max(int(chunk_tokens), min_chunk)
 
     def predict_batch_seconds(self, items: Sequence[Tuple[int, int]]) -> float:
         return self.time_model.seconds(attn_flops(self.cfg, items))
@@ -120,15 +150,23 @@ class QuotaPacker:
         items: List[Tuple[int, int]] = []
         while fifo:
             w = fifo[0]
-            cand = items + [(w.cached, w.remaining)]
+            take = w.remaining if self.chunk_tokens is None \
+                else min(w.remaining, self.chunk_tokens)
+            cand = items + [(w.cached, take)]
             if self.predict_batch_seconds(cand) <= self.quota_s:
-                items.append((w.cached, w.remaining))
-                batch.append(BatchItem(w.rid, w.cached, w.remaining))
-                w.advance(w.remaining)
-                fifo.pop(0)
-                continue
+                if take == w.remaining:
+                    items.append((w.cached, w.remaining))
+                    batch.append(BatchItem(w.rid, w.cached, w.remaining))
+                    w.advance(w.remaining)
+                    fifo.pop(0)
+                    continue
+                # capped slice: a chunked item always closes the batch so
+                # the engine's step (and any interleaved decode) runs now
+                batch.append(BatchItem(w.rid, w.cached, take, chunked=True))
+                w.advance(take)
+                break
             # straddling request: binary search the largest bsz' that fits
-            lo, hi = 0, w.remaining
+            lo, hi = 0, take
             while lo < hi:
                 mid = (lo + hi + 1) // 2
                 if self.predict_batch_seconds(

@@ -50,6 +50,9 @@ class Request:
     new_tokens: int                 # appended tokens (prefill compute)
     gen_tokens: int                 # expected generation length
     arrival: float = 0.0
+    # SLO class (core/config.SloConfig): 'interactive' rounds overtake
+    # 'batch' rounds in every class-aware queue order
+    slo_class: str = "batch"
     # filled by the scheduler:
     pe: Optional[EngineId] = None
     de: Optional[EngineId] = None
@@ -62,6 +65,11 @@ class Request:
     dram_side: Optional[str] = None   # 'pe' | 'de'
     dram_tokens: int = 0
     snic_tokens: Optional[Dict[str, int]] = None
+
+    @property
+    def class_rank(self) -> int:
+        """Priority rank: interactive (0) ahead of batch (1)."""
+        return 0 if self.slo_class == "interactive" else 1
 
     @property
     def prompt_tokens(self) -> int:
@@ -181,11 +189,18 @@ class Scheduler:
     tracer = None
 
     def __init__(self, alpha: int, beta: int, *, z_factor: float = 1.05,
-                 split_reads: bool = False):
+                 split_reads: bool = False, class_aware: bool = False):
         self.alpha = alpha
         self.beta = beta
         self.z_factor = z_factor
         self.split_reads = split_reads
+        # SLO-class-differentiated scheduling (core/config.SloConfig):
+        # when set, every queue order becomes (class rank, arrival, rid)
+        # so interactive rounds overtake batch rounds at submission, in
+        # DE phase-1 routing and in drain/recovery re-sorts.  Off (the
+        # default) the rank term is a constant 0 and every order reduces
+        # to the legacy (arrival, rid) — structurally identical queues.
+        self.class_aware = class_aware
         # read-path tie-breaker state (see _shorter_queue_side): False so
         # the first tie goes to the PE side
         self._tie_toggle = False
@@ -211,9 +226,28 @@ class Scheduler:
         return {g: es for g, es in self._groups.items()
                 if es and self.engines[es[0]].kind == kind}
 
+    def _order_key(self, r: Request):
+        """The queue order: (class rank, arrival, rid) when class-aware,
+        degenerating to (0, arrival, rid) == submission order otherwise."""
+        return (r.class_rank if self.class_aware else 0, r.arrival, r.rid)
+
+    def _priority_insert(self, q: Deque[Request], req: Request):
+        """Stable insert before the first lower-priority queued request
+        (FIFO within a class).  Arrivals come in time order, so the scan
+        from the right is O(number of lower-priority requests)."""
+        k = self._order_key(req)
+        idx = len(q)
+        while idx > 0 and self._order_key(q[idx - 1]) > k:
+            idx -= 1
+        q.insert(idx, req)
+
     def submit(self, req: Request):
-        self.pe_queue.append(req)
-        self.de_global_queue.append(req)
+        if not self.class_aware:
+            self.pe_queue.append(req)
+            self.de_global_queue.append(req)
+            return
+        self._priority_insert(self.pe_queue, req)
+        self._priority_insert(self.de_global_queue, req)
 
     # ------------------------------------------------------------------
     # elastic role reconfiguration (core/autoscale.py drives this)
@@ -320,12 +354,11 @@ class Scheduler:
             # order without duplicates
             if st.kind == "pe":
                 self.pe_queue = deque(sorted(
-                    list(self.pe_queue) + back,
-                    key=lambda r: (r.arrival, r.rid)))
+                    list(self.pe_queue) + back, key=self._order_key))
             else:
                 self.de_global_queue = deque(sorted(
                     list(self.de_global_queue) + back,
-                    key=lambda r: (r.arrival, r.rid)))
+                    key=self._order_key))
         return back
 
     def rebalance_de_private(self):
@@ -340,7 +373,7 @@ class Scheduler:
         for q in self.de_private.values():
             while q:
                 pend.append(q.popleft())
-        pend.sort(key=lambda r: (r.arrival, r.rid))
+        pend.sort(key=self._order_key)
         self.de_global_queue = deque(pend)
 
     # ------------------------------------------------------------------
@@ -682,7 +715,7 @@ class Scheduler:
             if q:
                 # orphaned private queue: back to global for re-routing
                 pend = sorted(list(self.de_global_queue) + list(q),
-                              key=lambda r: (r.arrival, r.rid))
+                              key=self._order_key)
                 self.de_global_queue = deque(pend)
         del self.engines[engine]
         return st

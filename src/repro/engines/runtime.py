@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.blocks import BlockLayout
-from repro.core.intra import AttnTimeModel, BatchItem, PrefillWork, QuotaPacker
+from repro.core.intra import (AttnTimeModel, BatchItem, PrefillWork,
+                              QuotaPacker, class_insert_index)
 from repro.core.scheduler import Request
 from repro.core.traffic import TrafficClass, TrafficManager
 from repro.engines import kvio
@@ -65,7 +66,9 @@ class EngineRequest:
 class PrefillEngine:
     def __init__(self, eid, cfg: ModelConfig, params, store: MemoryKVStore,
                  layout: BlockLayout, max_seq: int,
-                 quota_s: float = 0.300, layerwise: bool = True):
+                 quota_s: float = 0.300, layerwise: bool = True,
+                 chunk_tokens: Optional[int] = None,
+                 class_aware: bool = False):
         self.eid = eid
         self.cfg = cfg
         self.params = params
@@ -75,12 +78,17 @@ class PrefillEngine:
         self.layerwise = layerwise
         self.tm = TrafficManager()
         self.packer = QuotaPacker(cfg, AttnTimeModel.from_config(cfg),
-                                  quota_s=quota_s)
+                                  quota_s=quota_s, chunk_tokens=chunk_tokens)
+        self.class_aware = class_aware
         self.fifo: List[Tuple[PrefillWork, EngineRequest]] = []
         self.prefill_tokens = 0
         # (cached, bsz) items of the batch the last step() executed — the
         # serving clock's compute-duration input (events.ServingTimeModel)
         self.last_step_items: List[Tuple[int, int]] = []
+        # requests whose last-step batch item was a partial (chunked)
+        # slice and whose prefill is still unfinished — the serving
+        # runtime's PREFILL_CHUNKED sub-state + chunk-counter source
+        self.last_step_chunked: List[EngineRequest] = []
 
     # -- loading ---------------------------------------------------------
     def install_hit_kv(self, er: EngineRequest, payload):
@@ -110,14 +118,22 @@ class PrefillEngine:
                 er.state = kvio.deserialize_kv(self.cfg, er.state, 0, 0,
                                                kv_bytes[:, :hit])
         er.length = hit
-        self.fifo.append((PrefillWork(er.req.rid, hit,
-                                      len(er.append_tokens)), er))
+        work = PrefillWork(er.req.rid, hit, len(er.append_tokens),
+                           rank=er.req.class_rank, arrival=er.req.arrival)
+        if self.class_aware:
+            # the serving-side mirror of the sim's class-ordered fifo:
+            # TTFT wait accrues here, not in the scheduler's global queue
+            self.fifo.insert(class_insert_index(
+                [w.key() for w, _ in self.fifo], work.key()), (work, er))
+        else:
+            self.fifo.append((work, er))
 
     # -- compute ---------------------------------------------------------
     def step(self) -> List[EngineRequest]:
         """Run one quota-packed forward batch; returns requests whose
         prefill completed this step."""
         self.last_step_items = []
+        self.last_step_chunked = []
         if not self.fifo:
             return []
         works = [w for w, _ in self.fifo]
@@ -148,6 +164,8 @@ class PrefillEngine:
             if er.length == er.prompt_len:
                 er.first_token = int(jnp.argmax(logits[0, -1]))
                 done.append(er)
+            elif bi.chunked:
+                self.last_step_chunked.append(er)
         return done
 
 

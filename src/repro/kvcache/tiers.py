@@ -38,8 +38,8 @@ from __future__ import annotations
 import itertools
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, Hashable, Iterable, Iterator, List, Optional, \
-    Sequence, Set
+from typing import Callable, Dict, Hashable, Iterable, Iterator, List, \
+    Optional, Sequence, Set
 
 
 @dataclass
@@ -154,6 +154,12 @@ class DramTier:
         self._owner_alive: Dict[Hashable, float] = {}
         self._done_owners: Set[Hashable] = set()
         self._tick = itertools.count()
+        # owner-provided wall clock (e.g. ServingSystem._tier_now):
+        # consulted before the per-operation tick fallback, so call
+        # sites that cannot thread ``now`` through (engine persists via
+        # the plain store interface) still stamp modelled seconds —
+        # otherwise ``tier_ttl_s`` silently means *operations* there
+        self.clock_fn: Optional[Callable[[], float]] = None
         self.used_bytes = 0
         self._pinned_bytes = 0
         # --- accounting -------------------------------------------------
@@ -252,7 +258,11 @@ class DramTier:
     # admission / eviction
     # ------------------------------------------------------------------
     def _now(self, now: Optional[float]) -> float:
-        return float(next(self._tick)) if now is None else float(now)
+        if now is not None:
+            return float(now)
+        if self.clock_fn is not None:
+            return float(self.clock_fn())
+        return float(next(self._tick))
 
     def touch(self, refs: Iterable, now: Optional[float] = None) -> None:
         t = self._now(now)

@@ -195,3 +195,16 @@ register("hedged_reads", "counter", "count", _BOTH,
          "read legs hedged to the healthy side")
 register("hedge_moved_tokens", "counter", "tokens", _BOTH,
          "tokens re-water-filled by hedges")
+
+# --- online SLO layer (core/config.SloConfig) -----------------------------
+register("admitted_rounds", "counter", "count", _BOTH,
+         "arrivals passed by the admission gate (== submissions when "
+         "admission control is off)")
+register("deferred_rounds", "counter", "count", _BOTH,
+         "admission-gate deferrals (one arrival may defer repeatedly)")
+register("rejected_rounds", "counter", "count", _BOTH,
+         "arrivals shed after exhausting admission deferrals")
+register("prefill_chunks", "counter", "count", _BOTH,
+         "partial (chunked) prefill batch items executed")
+register("latency_by_class", "mixed", "mixed", _BOTH,
+         "per-SLO-class latency summaries (interactive | batch)")

@@ -52,6 +52,12 @@ class ReqState(Enum):
     SCHEDULED = "scheduled"      # submitted, awaiting (PE, DE) + read path
     READING = "reading"          # storage/tier read legs in flight
     PREFILL = "prefill"          # hit KV installed, in the PE's fifo
+    # chunked-prefill sub-state (core/config.SloConfig
+    # prefill_chunk_tokens): some slices computed, more to come —
+    # decode steps interleave between them.  Entered only when the
+    # chunk cap is configured, so unchunked runs keep the legacy
+    # PREFILL-only lifecycle event-for-event.
+    PREFILL_CHUNKED = "prefill_chunked"
     PD_TRANSFER = "pd_transfer"  # prompt state PE→DE on the compute net
     DECODE = "decode"            # slot-batched decode on the DE
     PERSIST = "persist"          # new FullBlocks persisting to storage
@@ -94,6 +100,9 @@ class RoundMetrics:
     first_decode_t: float = -1.0
     second_token_t: float = -1.0     # TTST
     done_t: float = -1.0
+    # SLO class of the round (core/config.SloConfig): feeds the
+    # per-class latency summaries in both runtimes' results
+    slo_class: str = "batch"
 
     @property
     def finished(self) -> bool:
@@ -142,6 +151,21 @@ def latency_summary(metrics: Iterable[RoundMetrics]) -> dict:
         ttst_mean=mean(ttsts),
         tpot_mean=mean(tpots), tpot_p99=pct(tpots, 99),
     )
+
+
+def latency_by_class(metrics: Iterable[RoundMetrics]) -> dict:
+    """Per-SLO-class latency summaries (the ``latency_by_class`` obs
+    key): one :func:`latency_summary` dict per class.  Classes with no
+    *finished* rounds are omitted (their summary would be all-NaN, and
+    NaN != NaN breaks the runtimes' results()-equality contracts —
+    e.g. a horizon-truncated run where no round completes)."""
+    ms = list(metrics)
+    out = {}
+    for c in ("interactive", "batch"):
+        sub = [m for m in ms if m.slo_class == c]
+        if any(m.finished for m in sub):
+            out[c] = latency_summary(sub)
+    return out
 
 
 def slo_attainment(metrics: Iterable[RoundMetrics], ttft_slo_s: float,

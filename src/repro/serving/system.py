@@ -52,9 +52,13 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.admission import AdmissionGate
 from repro.core.autoscale import (DE_TO_PE, DrainTracker, LoadSignals,
                                   PDController, pick_victim)
 from repro.core.blocks import layout_for
+from repro.core.config import (ElasticConfig, NetworkConfig,
+                               ResilienceConfig, SloConfig, TierConfig,
+                               resolve_groups)
 from repro.core.scheduler import Request, Scheduler
 from repro.core.traffic import TrafficClass, TrafficManager
 from repro.engines import kvio
@@ -92,23 +96,30 @@ class ServingSystem:
                  block_tokens: int = 16, max_seq: int = 512,
                  de_slots: int = 8, quota_s: float = 0.3, seed: int = 0,
                  split_reads: bool = False, layerwise: bool = True,
-                 dram_tier_bytes: float = 0, tier_policy: str = "lru",
-                 tier_ttl_s: Optional[float] = None, prefetch: bool = False,
                  pe_group_size: Optional[int] = None,
                  de_group_size: Optional[int] = None,
                  pipelined: bool = True, node: Optional[NodeSpec] = None,
-                 net_arbiter: str = "vl", collective_group_size: int = 0,
-                 elastic: bool = False, reconfig_interval_s: float = 5.0,
-                 drain_policy: str = "idlest",
-                 reconfig_hi: float = 2.0, reconfig_lo: float = 0.5,
-                 reconfig_patience: int = 2,
-                 reconfig_cooldown_s: float = 0.0,
-                 reconfig_idle_floor_s: float = 1e-3,
-                 faults: Optional[FaultSchedule] = None,
-                 hedge_reads: bool = False,
-                 hedge_min_severity: float = 2.0,
-                 tracer=None):
+                 tracer=None,
+                 tier: Optional[TierConfig] = None,
+                 net: Optional[NetworkConfig] = None,
+                 elastic=None,
+                 resilience: Optional[ResilienceConfig] = None,
+                 slo: Optional[SloConfig] = None,
+                 **legacy):
         assert mode in ("dualpath", "basic")
+        # --- shared config groups (repro.core.config) ------------------
+        # The same five groups SimConfig holds; subsystem knobs arrive
+        # here (tier=TierConfig(...), elastic=ElasticConfig(...), ...).
+        # The old flat kwargs (dram_tier_bytes=..., elastic=True, ...)
+        # are folded in through the one-release deprecation shim.
+        groups = resolve_groups(legacy, tier=tier, net=net,
+                                elastic=elastic, resilience=resilience,
+                                slo=slo)
+        tcfg = self.tier_cfg = groups["tier"]
+        ncfg = self.net_cfg = groups["net"]
+        ecfg = self.elastic_cfg = groups["elastic"]
+        rcfg = self.resilience_cfg = groups["resilience"]
+        scfg = self.slo_cfg = groups["slo"]
         self.cfg = cfg
         self.params = params            # role flips build new engines
         self.mode = mode
@@ -119,34 +130,38 @@ class ServingSystem:
         self.blob_store = StateBlobStore()
         self.trie = BlockTrie(block_tokens)
         self.sched = Scheduler(alpha=1 << 30, beta=1 << 30,
-                               split_reads=split_reads)
+                               split_reads=split_reads,
+                               class_aware=scfg.class_aware)
         # the runtime's wall clock (serving/events.py): modelled seconds,
         # advanced per tick, jumped over idle gaps in online mode.
         # ``collective_group_size > 1`` puts per-layer model collectives
         # on the compute network (repro.network) and makes the clock's
         # cn charges contention-aware under ``net_arbiter``.
         self.time_model = ServingTimeModel.for_model(
-            cfg, node, net_arbiter=net_arbiter,
-            collective_group_size=collective_group_size)
+            cfg, node, net_arbiter=ncfg.net_arbiter,
+            collective_group_size=ncfg.collective_group_size)
         self.clock = VirtualClock()
         self.loop = EventLoop(self.clock)
         self.metrics: Dict[int, RoundMetrics] = {}
         self._online = False
         # node-local DRAM tiers over the remote store (kvcache/tiers.py):
         # reads served from a tier never reach the store (= the SNIC).
-        # NOTE: offline serving passes no timestamps — the tier's internal
-        # tick counter supplies "time", so an agentic-ttl ``tier_ttl_s``
-        # is measured in tier operations there; online serving passes the
-        # wall clock's real seconds (as the simulator does).
+        # Tier timestamps come from the modelled wall clock in BOTH
+        # offline and online serving (_tier_now), so an agentic-ttl
+        # ``tier_ttl_s`` always means seconds — matching the simulator.
         self.tiers: Dict[int, DramTier] = {}
-        if dram_tier_bytes:
+        if tcfg.dram_tier_bytes:
             for node_id in range(n_pe + n_de):
-                self.tiers[node_id] = DramTier(dram_tier_bytes,
-                                               policy=tier_policy,
-                                               ttl_s=tier_ttl_s,
-                                               backing=self.store)
-        self.prefetcher = ThinkTimePrefetcher() \
-            if (prefetch and self.tiers) else None
+                tier = DramTier(tcfg.dram_tier_bytes,
+                                policy=tcfg.tier_policy,
+                                ttl_s=tcfg.tier_ttl_s,
+                                backing=self.store)
+                # clock-agnostic call sites (DE persists through the
+                # plain store interface) still stamp modelled seconds
+                tier.clock_fn = self._tier_now
+                self.tiers[node_id] = tier
+        self.prefetcher = ThinkTimePrefetcher(tcfg.prefetch_chunk_blocks) \
+            if (tcfg.prefetch and self.tiers) else None
         # engine groups: ``*_group_size`` engines per scheduler group
         # (default: one group spanning all engines of that kind); the
         # fetch loop visits every group, so DE phase-1 balancing across
@@ -159,9 +174,11 @@ class ServingSystem:
             eid = (i, 0)
             self.sched.register_engine(eid, node=i, kind="pe",
                                        group=i // pe_gsz)
-            self.pes[eid] = PrefillEngine(eid, cfg, params, self.store,
-                                          self.layout, max_seq, quota_s,
-                                          layerwise=layerwise)
+            self.pes[eid] = PrefillEngine(
+                eid, cfg, params, self.store, self.layout, max_seq,
+                quota_s, layerwise=layerwise,
+                chunk_tokens=scfg.prefill_chunk_tokens,
+                class_aware=scfg.class_aware)
         for j in range(n_de):
             eid = (n_pe + j, 0)
             st = self.sched.register_engine(eid, node=n_pe + j, kind="de",
@@ -180,21 +197,22 @@ class ServingSystem:
         # runtime; the controller/tracker plumbing exists even when
         # elastic is off (zero-cost, zero state drift) so stats() always
         # reports the reconfiguration columns.
-        if drain_policy not in ("idlest", "rotate"):
-            raise ValueError(f"unknown drain_policy {drain_policy!r}")
-        self.elastic = elastic
-        self.reconfig_interval_s = reconfig_interval_s
-        self.drain_policy = drain_policy
+        if ecfg.drain_policy not in ("idlest", "rotate"):
+            raise ValueError(f"unknown drain_policy {ecfg.drain_policy!r}")
+        self.elastic = bool(ecfg)
+        self.reconfig_interval_s = ecfg.reconfig_interval_s
+        self.drain_policy = ecfg.drain_policy
         self.drains = DrainTracker()
         self.controller = PDController(
-            hi=reconfig_hi, lo=reconfig_lo, patience=reconfig_patience,
-            cooldown_s=reconfig_cooldown_s,
-            idle_floor_s=reconfig_idle_floor_s)
+            hi=ecfg.reconfig_hi, lo=ecfg.reconfig_lo,
+            patience=ecfg.reconfig_patience,
+            cooldown_s=ecfg.reconfig_cooldown_s,
+            idle_floor_s=ecfg.reconfig_idle_floor_s)
         self.engine_lifecycle: Dict[Tuple[int, int], EngineLifecycle] = {
             eid: EngineLifecycle.ACTIVE
             for eid in (*self.pes, *self.des)}
         self._next_gid = itertools.count(5000)
-        self._next_obs_t = reconfig_interval_s
+        self._next_obs_t = ecfg.reconfig_interval_s
         self._drain_rotation = 0
         self._reconfig_ready: List = []   # drained DrainRecords to flip
         self._quota_s = quota_s
@@ -229,16 +247,23 @@ class ServingSystem:
         # An empty schedule is normalised to None so every fault hook is
         # a structural no-op on the happy path: zero-rate runs stay
         # bit-identical to faults=None (pinned by tests/test_faults.py).
+        faults = rcfg.faults
         self.faults = faults if (faults is not None
                                  and not faults.empty) else None
-        self.hedge_reads = hedge_reads
-        self.hedge_min_severity = hedge_min_severity
+        self.hedge_reads = rcfg.hedge_reads
+        self.hedge_min_severity = rcfg.hedge_min_severity
         self._deaths_pending = list(self.faults.deaths) \
             if self.faults is not None else []
         self.dead_engines: List[Tuple[int, int]] = []
         self.recovered_rounds = 0
         self.hedged_reads = 0
         self.hedge_moved_tokens = 0
+        # --- online SLO layer (core/config.SloConfig) ------------------
+        # gate is None when admission is off (or in offline serving,
+        # where there is no arrival process to shed) — arrivals then go
+        # straight to sched.submit, structurally identical to pre-SLO
+        self.gate = AdmissionGate(scfg) if scfg.admission else None
+        self.prefill_chunks = 0
         # --- flight recorder (repro.obs) -------------------------------
         # Optional; ``tracer=None`` keeps every hook a structural no-op
         # so untraced runs stay bit-identical.  Lifecycle spans are
@@ -266,11 +291,16 @@ class ServingSystem:
         for de in self.des.values():
             yield de.tm
 
-    def _tier_now(self) -> Optional[float]:
-        """Tier timestamps: wall-clock seconds online, None (the tier's
-        own tick counter) offline — keeping offline runs bit-compatible
-        with the pre-clock behaviour."""
-        return self.clock.now if self._online else None
+    def _tier_now(self) -> float:
+        """Tier timestamps: the modelled wall clock, in BOTH modes.
+        The clock advances by modelled seconds every tick whether or not
+        an arrival process drives the loop, so offline runs get real
+        seconds too — an agentic-ttl ``tier_ttl_s`` means seconds
+        everywhere, matching the simulator (it used to fall back to the
+        tier's internal operation counter offline, so the same TTL
+        meant 'operations' there; regression-pinned in
+        tests/test_config.py)."""
+        return self.clock.now
 
     # ------------------------------------------------------------------
     # fault-aware service times: the schedule's multipliers compose onto
@@ -310,9 +340,31 @@ class ServingSystem:
             hit, refs = self.trie.match(prompt)
             blob = None
         new_tokens = len(prompt) - hit
+        if self.gate is not None and self._online:
+            # load-aware admission (core/admission.py); offline serving
+            # admits unconditionally — no arrival process to shed, and a
+            # deferral event would never fire outside the online loop
+            sig = self._elastic_signals()
+            read_s = self.time_model.snic_seconds(
+                hit * self.layout.n_layers *
+                self.layout.bytes_per_token_layer)
+            prefill_s = self.time_model.pe_step_seconds(
+                [(hit, max(new_tokens, 1))])
+            verdict = self.gate.decide(
+                (sess.traj.tid, sess.next_round),
+                self.gate.ttft_estimate(sig, read_s, prefill_s))
+            if verdict == "defer":
+                self.loop.after(self.slo_cfg.admission_defer_s,
+                                lambda s=sess: self._submit_round(s))
+                return
+            if verdict == "reject":
+                # shed the load: the session's trajectory ends here
+                sess.next_round = sess.traj.n_rounds
+                sess.current = None
+                return
         req = Request(rid=next(self._rid), cached_tokens=hit,
                       new_tokens=new_tokens, gen_tokens=rnd.gen,
-                      arrival=self.clock.now)
+                      arrival=self.clock.now, slo_class=sess.traj.slo_class)
         er = EngineRequest(req=req, context_tokens=prompt[:hit],
                            append_tokens=prompt[hit:], hit_refs=refs)
         er._blob = blob
@@ -327,7 +379,8 @@ class ServingSystem:
         self._inflight[req.rid] = er
         self.metrics[req.rid] = RoundMetrics(rid=req.rid,
                                              gen_tokens=rnd.gen,
-                                             submit_t=self.clock.now)
+                                             submit_t=self.clock.now,
+                                             slo_class=sess.traj.slo_class)
         for tier in self.tiers.values():
             tier.note_alive(sess.traj.tid, now=self._tier_now())
         self.sched.submit(req)
@@ -654,6 +707,16 @@ class ServingSystem:
             self._charge_collectives(
                 pe.eid[0], sum(b for _, b in pe.last_step_items))
             act += (pe.prefill_tokens - before) + len(done)
+            if self.slo_cfg.prefill_chunk_tokens is not None:
+                # chunked-prefill sub-state: a capped slice ran and the
+                # round stays in the PE fifo for its next slice; decode
+                # steps interleave in the meantime.  Entered only when
+                # the chunk cap is configured, so unchunked runs keep
+                # the legacy PREFILL-only lifecycle event-for-event.
+                for er in pe.last_step_chunked:
+                    self.prefill_chunks += 1
+                    if er.lifecycle != ReqState.PREFILL_CHUNKED:
+                        self._set_state(er, ReqState.PREFILL_CHUNKED)
             for er in done:
                 self.sched.on_request_done(er.req.pe, er.req)
                 self._stamp(er.req.rid, "prefill_done_t")
@@ -991,6 +1054,17 @@ class ServingSystem:
         tiers = list(self.tiers.values())
         dram_hit = sum(t.dram_hit_bytes for t in tiers)
         denom = dram_hit + sum(self.read_bytes_by_side.values())
+        # class-aware signals: interactive queue depth feeds the elastic
+        # controller extra pressure (core/autoscale.LoadSignals); 0.0
+        # whenever class scheduling is off so pressures stay identical
+        pe_q_int = de_q_int = 0.0
+        if sched.class_aware:
+            pe_q_int = sum(r.new_tokens for r in sched.pe_queue
+                           if r.class_rank == 0) / pe_rate
+            de_q_int = sum(r.gen_tokens
+                           for q in (sched.de_global_queue,
+                                     *sched.de_private.values())
+                           for r in q if r.class_rank == 0) / de_rate
         return LoadSignals(
             n_pe=len(sched.admitting("pe")),
             n_de=len(sched.admitting("de")),
@@ -1002,6 +1076,8 @@ class ServingSystem:
             de_read_q_s=de_rq / snic_tok_rate,
             net_congestion=self.net_congestion,
             dram_hit_ratio=(dram_hit / denom) if denom else 0.0,
+            pe_queued_interactive_s=pe_q_int,
+            de_queued_interactive_s=de_q_int,
         )
 
     def _begin_reconfig(self, action: str):
@@ -1052,7 +1128,9 @@ class ServingSystem:
             del self.des[eid]
             self.pes[eid] = PrefillEngine(
                 eid, self.cfg, self.params, self.store, self.layout,
-                self.max_seq, self._quota_s, layerwise=self._layerwise)
+                self.max_seq, self._quota_s, layerwise=self._layerwise,
+                chunk_tokens=self.slo_cfg.prefill_chunk_tokens,
+                class_aware=self.slo_cfg.class_aware)
             self.sched.finish_drain(eid, kind="pe", group=gid)
         else:
             del self.pes[eid]
@@ -1217,7 +1295,8 @@ class ServingSystem:
         req2 = Request(rid=next(self._rid), cached_tokens=hit,
                        new_tokens=len(prompt) - hit,
                        gen_tokens=req.gen_tokens,
-                       arrival=req.arrival)   # original queue priority
+                       arrival=req.arrival,   # original queue priority
+                       slo_class=req.slo_class)
         er2 = EngineRequest(req=req2, context_tokens=prompt[:hit],
                             append_tokens=prompt[hit:], hit_refs=refs)
         er2._blob = blob
@@ -1377,6 +1456,15 @@ class ServingSystem:
             recovered_rounds=self.recovered_rounds,
             hedged_reads=self.hedged_reads,
             hedge_moved_tokens=self.hedge_moved_tokens,
+            # --- online SLO layer (zeros/defaults when off) --------------
+            admitted_rounds=(self.gate.admitted_rounds
+                             if self.gate is not None else len(self.metrics)),
+            deferred_rounds=(self.gate.deferred_rounds
+                             if self.gate is not None else 0),
+            rejected_rounds=(self.gate.rejected_rounds
+                             if self.gate is not None else 0),
+            prefill_chunks=self.prefill_chunks,
+            latency_by_class=events.latency_by_class(self.metrics.values()),
         ), "serving")
 
     def slo_attainment(self, ttft_slo_s: float = 4.0,

@@ -36,11 +36,17 @@ import itertools
 import math
 from collections import defaultdict, deque
 from dataclasses import dataclass
+from dataclasses import field as dc_field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core.admission import AdmissionGate
 from repro.core.autoscale import (DE_TO_PE, DrainTracker, LoadSignals,
                                   PDController, pick_victim)
-from repro.core.intra import AttnTimeModel, PrefillWork, QuotaPacker
+from repro.core.config import (FLAT_FIELDS, ElasticConfig, NetworkConfig,
+                               ResilienceConfig, SloConfig, TierConfig,
+                               resolve_groups)
+from repro.core.intra import (AttnTimeModel, PrefillWork, QuotaPacker,
+                              class_insert_index)
 from repro.core.loading import Leg, PLANS, plan_for
 from repro.core.scheduler import Request, RoundRobinScheduler, Scheduler
 from repro.core.traffic import TrafficClass
@@ -189,8 +195,18 @@ class Flow:
             self.sim._reshare(self.resources)
 
 
-@dataclass
+@dataclass(init=False)
 class SimConfig:
+    """Simulator entry point: core fields + the five shared config
+    groups from :mod:`repro.core.config` (held by composition, same as
+    ``ServingSystem``).  Subsystem knobs live in the groups —
+    ``SimConfig(..., tier=TierConfig(dram_tier_bytes=1e9))`` — while
+    the old flat spellings (``dram_tier_bytes=1e9``, ``elastic=True``)
+    still construct an identical config through the deprecation shim
+    for one release (ConfigDeprecationWarning).  Flat *reads*
+    (``cfg.dram_tier_bytes``) stay available as delegating properties
+    so downstream analysis code keeps working unchanged."""
+
     node: NodeSpec
     model: ModelSimSpec
     P: int
@@ -210,66 +226,71 @@ class SimConfig:
     kv_dtype_bytes: int = 1           # fp8 KV (paper default)
     online: bool = False
     seed: int = 0
-    # --- node-local DRAM KV tier (kvcache/tiers.py; 0 = off) ------------
-    dram_tier_bytes: float = 0.0      # per-node tier capacity [bytes]
-    tier_policy: str = "lru"          # lru | agentic-ttl
-    tier_ttl_s: float = 120.0         # agentic-ttl idle threshold
-    prefetch: bool = False            # think-time prefetcher
-    prefetch_chunk_blocks: int = 32   # blocks per staged prefetch chunk
-    # --- finite compute network (repro.network; None = infinite) --------
-    net_bw: Optional[float] = None    # shared PE<->DE link capacity [B/s]
-    net_arbiter: str = "vl"           # 'vl' (paper) | 'fifo' (ablation)
-    # inject per-layer model collectives onto the shared link; default:
-    # on exactly when the network is finite (an infinite link cannot
-    # contend, so the legacy configuration stays event-identical)
-    model_collectives: Optional[bool] = None
-    collective_dtype_bytes: int = 2
-    # override the analytic per-token collective volume [bytes/token]
-    # (None = CollectiveVolumeModel.from_spec).  The analytic estimate
-    # assumes ALL TP collectives cross the modelled link; on real nodes
-    # most ride the intra-node fabric (NVLink/ICI) and only a slice
-    # (EP dispatch, PD handoff) reaches the inter-node network, so
-    # interference studies set the slice explicitly.
-    collective_bytes_per_token: Optional[float] = None
-    # background KV/PD transfer traffic offered on the shared link, as a
-    # fraction of net_bw (other tenants' dual-path reads, PD
-    # rebalancing, tier staging).  The interference benchmark sweeps
-    # this: under FIFO sharing it dilutes the collectives' bandwidth
-    # share; under the VL arbiter it only backlogs itself.
-    net_bg_load: float = 0.0
-    net_bg_chunk_bytes: float = 512e6
-    # --- elastic PE<->DE role reconfiguration (core/autoscale.py) -------
-    # With ``elastic`` the sim runs a control loop every
-    # ``reconfig_interval_s`` modelled seconds: observe per-role load,
-    # let the hysteresis PDController propose at most one role flip, and
-    # execute it via the safe drain protocol (stop admitting, finish
-    # in-flight, reload the new role's weight shard over the node's
-    # storage NIC, flip kind).  Off (the default) is event-identical to
-    # the pre-elastic simulator.
-    elastic: bool = False
-    reconfig_interval_s: float = 10.0
-    drain_policy: str = "idlest"      # idlest | rotate (victim selection)
-    reconfig_hi: float = 2.0          # pressure-ratio hysteresis band
-    reconfig_lo: float = 0.5
-    reconfig_patience: int = 2        # consecutive out-of-band intervals
-    reconfig_cooldown_s: float = 0.0
-    reconfig_idle_floor_s: float = 1e-3
-    elastic_min_pe: int = 1
-    elastic_min_de: int = 1
-    # --- fault injection & hedged reads (sim/faults.py) -----------------
-    # ``faults`` carries SNIC-degradation windows, link flaps, engine
-    # deaths and per-leg stragglers.  An absent or *empty* schedule is
-    # structurally invisible: zero-fault runs are event-identical to
-    # the pre-fault simulator (pinned by tests/test_faults.py).
-    faults: Optional[FaultSchedule] = None
-    # hedged split reads: when exactly one storage leg of a request is
-    # observed straggling (fault-induced slowdown >= hedge_min_severity
-    # relative to the healthy side) and its remainder is worth at least
-    # hedge_threshold_s of service time, re-water-fill the unserved
-    # remainder onto the healthy side's NIC mid-read
-    hedge_reads: bool = False
-    hedge_threshold_s: float = 0.25
-    hedge_min_severity: float = 2.0
+    # --- shared config groups (repro.core.config) -----------------------
+    tier: TierConfig = dc_field(default_factory=TierConfig)
+    net: NetworkConfig = dc_field(default_factory=NetworkConfig)
+    elastic: ElasticConfig = dc_field(default_factory=ElasticConfig)
+    resilience: ResilienceConfig = dc_field(default_factory=ResilienceConfig)
+    slo: SloConfig = dc_field(default_factory=SloConfig)
+
+    def __init__(self, node: NodeSpec, model: ModelSimSpec, P: int, D: int,
+                 mode: str = "dualpath", scheduler: str = "adaptive",
+                 nodes_per_pe_group: Optional[int] = None,
+                 nodes_per_de_group: Optional[int] = None,
+                 quota_s: float = 0.300, block_tokens: int = 64,
+                 decode_block: int = 64, kv_hbm_frac: float = 0.55,
+                 layerwise: bool = True, alpha_read_s: float = 3.0,
+                 beta_compute_s: float = 5.0, split_reads: bool = False,
+                 kv_dtype_bytes: int = 1, online: bool = False,
+                 seed: int = 0,
+                 tier: Optional[TierConfig] = None,
+                 net: Optional[NetworkConfig] = None,
+                 elastic=None,
+                 resilience: Optional[ResilienceConfig] = None,
+                 slo: Optional[SloConfig] = None,
+                 **legacy):
+        self.node = node
+        self.model = model
+        self.P = P
+        self.D = D
+        self.mode = mode
+        self.scheduler = scheduler
+        self.nodes_per_pe_group = nodes_per_pe_group
+        self.nodes_per_de_group = nodes_per_de_group
+        self.quota_s = quota_s
+        self.block_tokens = block_tokens
+        self.decode_block = decode_block
+        self.kv_hbm_frac = kv_hbm_frac
+        self.layerwise = layerwise
+        self.alpha_read_s = alpha_read_s
+        self.beta_compute_s = beta_compute_s
+        self.split_reads = split_reads
+        self.kv_dtype_bytes = kv_dtype_bytes
+        self.online = online
+        self.seed = seed
+        g = resolve_groups(legacy, tier=tier, net=net, elastic=elastic,
+                           resilience=resilience, slo=slo)
+        self.tier = g["tier"]
+        self.net = g["net"]
+        self.elastic = g["elastic"]
+        self.resilience = g["resilience"]
+        self.slo = g["slo"]
+
+
+# Flat-name read/write compatibility: ``cfg.dram_tier_bytes`` etc.
+# delegate to the owning group, so the simulator's internals and any
+# downstream analysis keep the old spelling while the storage moved
+# into the shared groups.  ``elastic`` is excluded — the attribute IS
+# the ElasticConfig group, whose __bool__ keeps ``if cfg.elastic:``
+# reading the legacy switch.
+def _flat_alias(grp: str, fld: str) -> property:
+    return property(lambda self: getattr(getattr(self, grp), fld),
+                    lambda self, v: setattr(getattr(self, grp), fld, v))
+
+
+for _flat, (_grp, _fld) in FLAT_FIELDS.items():
+    if _flat != "elastic" and not hasattr(SimConfig, _flat):
+        setattr(SimConfig, _flat, _flat_alias(_grp, _fld))
 
 
 class _EngineSim:
@@ -415,6 +436,7 @@ class Sim:
                 self.tiers[n] = DramTier(cfg.dram_tier_bytes,
                                          policy=cfg.tier_policy,
                                          ttl_s=cfg.tier_ttl_s)
+                self.tiers[n].clock_fn = lambda: self.loop.now
                 if tracer is not None:
                     self.tiers[n].tracer = tracer
                     self.tiers[n].track = f"tier/node{n}"
@@ -435,7 +457,8 @@ class Sim:
             max(self.model.linear_flops_per_token(), 1.0)
         beta = int(cfg.beta_compute_s * tok_rate)
         self.sched = sched_cls(alpha=alpha, beta=beta,
-                               split_reads=cfg.split_reads)
+                               split_reads=cfg.split_reads,
+                               class_aware=cfg.slo.class_aware)
         if tracer is not None:
             self.sched.tracer = tracer
 
@@ -448,7 +471,7 @@ class Sim:
             self.model,
             AttnTimeModel(effective_flops=cfg.node.gpu.flops *
                           cfg.node.gpu.mfu_prefill),
-            cfg.quota_s)
+            cfg.quota_s, chunk_tokens=cfg.slo.prefill_chunk_tokens)
 
         for n in range(cfg.P):
             grp = n // npg
@@ -456,7 +479,8 @@ class Sim:
                 e = _EngineSim((n, r), n, "pe", grp)
                 tm = AttnTimeModel(effective_flops=cfg.node.gpu.flops *
                                    cfg.node.gpu.mfu_prefill)
-                e.packer = _SimPacker(self.model, tm, cfg.quota_s)
+                e.packer = _SimPacker(self.model, tm, cfg.quota_s,
+                                      chunk_tokens=cfg.slo.prefill_chunk_tokens)
                 self.engines[(n, r)] = e
                 self.pe_groups[grp].append(e)
                 self.sched.register_engine((n, r), node=n, kind="pe", group=grp)
@@ -538,6 +562,11 @@ class Sim:
         self.recovered_rounds = 0
         self.hedged_reads = 0
         self.hedge_moved_tokens = 0
+        # --- online SLO layer (core/config.SloConfig) ----------------------
+        # gate is None when admission control is off: arrivals then flow
+        # straight to sched.submit, structurally identical to pre-SLO
+        self.gate = AdmissionGate(cfg.slo) if cfg.slo.admission else None
+        self.prefill_chunks = 0
 
     # ------------------------------------------------------------------
     # PS rate management
@@ -724,6 +753,17 @@ class Sim:
         tiers = list(self.tiers.values())
         dram_hit = sum(t.dram_hit_bytes for t in tiers)
         denom = dram_hit + self.snic_hit_read_bytes
+        # class signals: interactive share of the queued seconds, fed to
+        # the elastic controller only under class-aware scheduling (both
+        # stay 0.0 otherwise — legacy pressures unchanged)
+        pe_q_int = de_q_int = 0.0
+        if sched.class_aware:
+            pe_q_int = sum(r.new_tokens for r in sched.pe_queue
+                           if r.class_rank == 0) / self._pe_tok_rate
+            de_q_int = sum(r.gen_tokens
+                           for q in (sched.de_global_queue,
+                                     *sched.de_private.values())
+                           for r in q if r.class_rank == 0) / de_rate
         return LoadSignals(
             n_pe=len(sched.admitting("pe")),
             n_de=len(sched.admitting("de")),
@@ -735,6 +775,8 @@ class Sim:
             de_read_q_s=de_rq / snic_tok_rate,
             net_congestion=self.net.congestion(),
             dram_hit_ratio=(dram_hit / denom) if denom else 0.0,
+            pe_queued_interactive_s=pe_q_int,
+            de_queued_interactive_s=de_q_int,
         )
 
     def _reconfig_tick(self):
@@ -991,7 +1033,7 @@ class Sim:
         new_req = Request(rid=next(self._rid), cached_tokens=cached,
                           new_tokens=max(ctx - cached, 1),
                           gen_tokens=max(rs.gen_left, 1),
-                          arrival=req.arrival)
+                          arrival=req.arrival, slo_class=req.slo_class)
         del self._by_rid[req.rid]
         self._by_rid[new_req.rid] = rs
         new_req._sim_round = rs
@@ -1040,9 +1082,29 @@ class Sim:
         bt = self.cfg.block_tokens
         cached_blocks = (cached // bt) * bt
         new_tokens = rnd.append + (cached - cached_blocks)
+        if self.gate is not None:
+            # load-aware admission (core/admission.py): queueing-delay-
+            # aware TTFT estimate from the elastic controller's signals
+            # plus this arrival's own read + prefill service time
+            sig = self._elastic_signals()
+            read_s = cached_blocks * self.kv_per_token / \
+                max(self.cfg.node.snic_bw, 1.0)
+            prefill_s = max(new_tokens, 1) / self._pe_tok_rate
+            verdict = self.gate.decide(
+                (traj.tid, i), self.gate.ttft_estimate(sig, read_s,
+                                                       prefill_s))
+            if verdict == "defer":
+                self.loop.after(self.cfg.slo.admission_defer_s,
+                                lambda a=agent: self._submit_round(a))
+                return
+            if verdict == "reject":
+                # shed the load: the client's trajectory ends here
+                # rather than holding queue slots it cannot meet SLO in
+                agent.end_t = self.loop.now
+                return
         req = Request(rid=next(self._rid), cached_tokens=cached_blocks,
                       new_tokens=max(new_tokens, 1), gen_tokens=rnd.gen,
-                      arrival=self.loop.now)
+                      arrival=self.loop.now, slo_class=traj.slo_class)
         rs = RoundSim(req, traj, i, agent)
         rs.submit_t = self.loop.now
         self.rounds.append(rs)
@@ -1181,8 +1243,8 @@ class Sim:
                         "entry": None, "refs": [], "release": 0,
                         "done": False, "job": None}
                 rs.read_recs.append(brec)
-                brec["job"] = self.snic[node].enqueue(extra, finish,
-                                                      tag="blob")
+                brec["job"] = self.snic[node].enqueue(
+                    extra, finish, tag="blob", rank=self._read_rank(req))
                 return
             finish()
             return
@@ -1202,7 +1264,8 @@ class Sim:
                     "done": False, "job": None}
             rs.read_recs.append(brec)
             brec["job"] = self.snic[node].enqueue(
-                extra, lambda: self._read_leg_done(rs, brec), tag="blob")
+                extra, lambda: self._read_leg_done(rs, brec), tag="blob",
+                rank=self._read_rank(req))
         for leg in snic_legs:
             side = "pe" if "pe_snic" in leg.resources else "de"
             engine = req.pe if side == "pe" else req.de
@@ -1221,7 +1284,8 @@ class Sim:
                 read=True,
                 on_start=lambda t, entry=entry: entry.__setitem__(2, t),
                 factor=(self.faults.leg_factor(rid, side)
-                        if self.faults is not None else 1.0))
+                        if self.faults is not None else 1.0),
+                rank=self._read_rank(req))
         if extra > 0:
             rs.hedged = True    # opaque blob rides a leg: byte-exact
             #                     remainder accounting impossible
@@ -1344,7 +1408,17 @@ class Sim:
         hrec["job"] = h_nic.enqueue(
             moved_bytes, lambda: self._read_leg_done(rs, hrec), read=True,
             on_start=lambda t, entry=entry: entry.__setitem__(2, t),
-            factor=self.faults.leg_factor(rid, h))
+            factor=self.faults.leg_factor(rid, h),
+            rank=self._read_rank(rs.req))
+
+    def _read_rank(self, req: Request) -> int:
+        """SNIC-queue rank of a demand read: the request's class rank
+        when class-aware, the neutral 1 (pure FIFO) otherwise.  The
+        class-aware SLO layer must reach the storage NIC queue — under
+        prefill overload an interactive round's TTFT is dominated by
+        its KV read waiting behind multi-GB batch reads, not by the
+        scheduler's global queue."""
+        return req.class_rank if self.cfg.slo.class_aware else 1
 
     def _read_done(self, rs: RoundSim):
         rs.read_done_t = self.loop.now
@@ -1359,7 +1433,13 @@ class Sim:
                              min(starts) if starts else self.loop.now)
         req = rs.req
         pe = self.engines[req.pe]
-        pe.fifo.append(PrefillWork(req.rid, req.cached_tokens, req.new_tokens))
+        work = PrefillWork(req.rid, req.cached_tokens, req.new_tokens,
+                           rank=req.class_rank, arrival=req.arrival)
+        if self.cfg.slo.class_aware:
+            pe.fifo.insert(class_insert_index([w.key() for w in pe.fifo],
+                                              work.key()), work)
+        else:
+            pe.fifo.append(work)
         rs.prefill_left = req.new_tokens
         if self.cfg.layerwise:
             # layerwise streaming + PD transfer legs overlap the prefill
@@ -1469,8 +1549,11 @@ class Sim:
                     resid += bi.cached + bi.bsz
                     if kept and resid > kv_cap:
                         # push back unprocessed work
+                        rq = self._by_rid[bi.rid].req
                         e.fifo.insert(0, PrefillWork(bi.rid, bi.cached,
-                                                     bi.bsz))
+                                                     bi.bsz,
+                                                     rank=rq.class_rank,
+                                                     arrival=rq.arrival))
                         continue
                     kept.append(bi)
                 batch = kept
@@ -1537,6 +1620,11 @@ class Sim:
                     self.tracer.span(f"req/{bi.rid}", "prefill", t0,
                                      self.loop.now, engine=list(e.eid),
                                      tokens=bi.bsz)
+                if bi.chunked:
+                    # partial slice (quota straddler or SloConfig chunk
+                    # cap) — the sim's PREFILL_CHUNKED sub-state: more
+                    # slices of this round follow in later batches
+                    self.prefill_chunks += 1
                 rs.prefill_left -= bi.bsz
                 self.prompt_tokens_done += bi.bsz
                 if rs.prefill_left <= 0 and rs.prefill_done_t < 0:
@@ -1805,7 +1893,8 @@ class Sim:
                              prefill_done_t=rs.prefill_done_t,
                              first_decode_t=rs.first_decode_t,
                              second_token_t=rs.second_token_t,
-                             done_t=rs.done_t)
+                             done_t=rs.done_t,
+                             slo_class=rs.req.slo_class)
                 for rs in self.rounds]
 
     def slo_attainment(self, ttft_slo_s: float = 4.0,
@@ -1816,6 +1905,7 @@ class Sim:
         return slo_attainment(self.round_metrics(), ttft_slo_s, tpot_slo_s)
 
     def results(self) -> dict:
+        from repro.serving.events import latency_by_class
         done_rounds = [r for r in self.rounds if r.done_t >= 0]
         jcts = [a.end_t - a.start_t for a in self.agents if a.end_t >= 0]
         ttfts = [r.prefill_done_t - r.submit_t for r in done_rounds]
@@ -1873,6 +1963,17 @@ class Sim:
             recovered_rounds=self.recovered_rounds,
             hedged_reads=self.hedged_reads,
             hedge_moved_tokens=self.hedge_moved_tokens,
+            # --- online SLO layer (core/config.SloConfig; admitted ==
+            # submitted rounds and deferred/rejected are 0 when the
+            # admission gate is off) ------------------------------------
+            admitted_rounds=(self.gate.admitted_rounds
+                             if self.gate is not None else len(self.rounds)),
+            deferred_rounds=(self.gate.deferred_rounds
+                             if self.gate is not None else 0),
+            rejected_rounds=(self.gate.rejected_rounds
+                             if self.gate is not None else 0),
+            prefill_chunks=self.prefill_chunks,
+            latency_by_class=latency_by_class(self.round_metrics()),
         ), "sim")
 
 
@@ -1881,10 +1982,14 @@ class _NicJob:
     reads can shrink it mid-flight and fault recovery can abort it."""
 
     __slots__ = ("nbytes", "cb", "read", "on_start", "prefetch", "factor",
-                 "t_start", "rate", "version", "state", "tag")
+                 "t_start", "rate", "version", "state", "tag", "rank")
 
     def __init__(self, nbytes, cb, read, on_start, prefetch, factor,
-                 tag=""):
+                 tag="", rank=1):
+        # SLO-class rank (scheduler.Request.class_rank): only demand
+        # reads of interactive rounds carry 0; all other traffic stays
+        # at the neutral 1, so a non-class-aware run is pure FIFO
+        self.rank = rank
         self.nbytes = nbytes
         self.cb = cb
         self.read = read
@@ -1938,13 +2043,21 @@ class _FifoNic:
 
     def enqueue(self, nbytes: float, on_done, read=True, on_start=None,
                 prefetch=False, factor: float = 1.0,
-                tag: str = "") -> _NicJob:
+                tag: str = "", rank: int = 1) -> _NicJob:
         if not tag:
             tag = "prefetch" if prefetch else ("read" if read
                                                else "persist")
         job = _NicJob(nbytes, on_done, read, on_start, prefetch, factor,
-                      tag)
-        self.queue.append(job)
+                      tag, rank)
+        if rank < 1 and any(j.rank > rank for j in self.queue):
+            # class-aware: an interactive demand read overtakes queued
+            # lower-priority traffic (stable among equals; the job in
+            # service is never preempted)
+            idx = next(i for i, j in enumerate(self.queue)
+                       if j.rank > rank)
+            self.queue.insert(idx, job)
+        else:
+            self.queue.append(job)
         self.queued_bytes += nbytes
         if not self.busy:
             self._serve()
@@ -2067,11 +2180,13 @@ class _FifoNic:
 
 class _SimPacker(QuotaPacker):
     def __init__(self, model: ModelSimSpec, time_model: AttnTimeModel,
-                 quota_s: float):
+                 quota_s: float, chunk_tokens: Optional[int] = None):
         self.model = model
         self.time_model = time_model
         self.quota_s = quota_s
         self.min_chunk = 16
+        self.chunk_tokens = None if chunk_tokens is None \
+            else max(int(chunk_tokens), self.min_chunk)
 
     def predict_batch_seconds(self, items) -> float:
         return self.time_model.seconds(attn_flops_sim(self.model, items))

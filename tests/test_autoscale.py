@@ -9,6 +9,7 @@ bit-identical-generation invariant and exactly-once tier-pin release.
 """
 import pytest
 
+from repro.core.config import ElasticConfig, TierConfig
 from repro.core.autoscale import (DE_TO_PE, PE_TO_DE, DrainTracker,
                                   LoadSignals, PDController, pick_victim)
 from repro.core.scheduler import Request, Scheduler
@@ -245,8 +246,10 @@ def _two_phase_sim(elastic, drain_policy="idlest"):
     cfg = SimConfig(node=replace(HOPPER_NODE, g=1), model=DS_660B,
                     P=2, D=2, mode="dualpath", nodes_per_pe_group=1,
                     nodes_per_de_group=1, kv_hbm_frac=0.04,
-                    elastic=elastic, drain_policy=drain_policy,
-                    reconfig_interval_s=4.0, reconfig_patience=2)
+                    elastic=ElasticConfig(enabled=elastic,
+                                          drain_policy=drain_policy,
+                                          reconfig_interval_s=4.0,
+                                          reconfig_patience=2))
     return Sim(cfg, trajs).run(arrivals=arrivals)
 
 
@@ -335,7 +338,7 @@ def test_sim_rejects_unknown_drain_policy():
     from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
 
     cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
-                    drain_policy="bogus")
+                    elastic=ElasticConfig(drain_policy="bogus"))
     with pytest.raises(ValueError):
         Sim(cfg, [])
 
@@ -367,10 +370,12 @@ def test_serving_elastic_identity_and_tier_pin_release():
         sys_ = ServingSystem(cfg, params, n_pe=2, n_de=2, block_tokens=16,
                              max_seq=96, de_slots=1, seed=0, pipelined=True,
                              node=REDUCED_TEST_NODE,
-                             dram_tier_bytes=64e3,
-                             elastic=elastic, reconfig_interval_s=0.05,
-                             reconfig_patience=2,
-                             reconfig_idle_floor_s=1e-4)
+                             tier=TierConfig(dram_tier_bytes=64e3),
+                             elastic=ElasticConfig(
+                                 enabled=elastic,
+                                 reconfig_interval_s=0.05,
+                                 reconfig_patience=2,
+                                 reconfig_idle_floor_s=1e-4))
         sessions = sys_.run_online(trajs, arrivals)
         return sys_, [s.context for s in sessions]
 

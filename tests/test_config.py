@@ -1,0 +1,202 @@
+"""The grouped config API (repro.core.config): cross-runtime default
+parity, the flat-kwarg deprecation shim, and the tier-clock regression.
+
+These tests pin the api_redesign contracts:
+
+* both runtimes hold the SAME five group dataclasses by composition, so
+  a default can no longer drift between them — every flat field is
+  either identical-by-construction or listed (with a reason) in
+  ``PARITY_EXCLUSIONS``;
+* the old flat kwargs still construct bit-identical systems for one
+  release, warning with ``ConfigDeprecationWarning`` (which the suite
+  turns into an error everywhere else — only this module may trigger
+  it, via ``pytest.warns``);
+* tier timestamps come from the modelled wall clock in BOTH serving
+  modes (offline used to fall back to the tier's internal operation
+  counter, silently redefining ``tier_ttl_s`` as "operations").
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.config import (PARITY_EXCLUSIONS, FLAT_FIELDS, GROUP_FIELDS,
+                               ConfigDeprecationWarning, ElasticConfig,
+                               NetworkConfig, ResilienceConfig, SloConfig,
+                               TierConfig, group_defaults, resolve_groups)
+from repro.models import init_params
+from repro.serving import ServingSystem
+from repro.sim.simulator import SimConfig
+from repro.sim.spec import REDUCED_TEST_NODE, HOPPER_NODE, ModelSimSpec
+from repro.sim.traces import Round, Trajectory
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _sim_cfg(**kw):
+    spec = ModelSimSpec(name="toy", n_layers=2, kv_bytes_per_token=1024,
+                        active_param_bytes=1e6, active_params=5e5,
+                        n_heads=4, qk_head_dim=32)
+    return SimConfig(node=HOPPER_NODE, model=spec, P=1, D=1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# config parity
+# ---------------------------------------------------------------------------
+
+
+def test_both_runtimes_hold_identical_default_groups():
+    """The decisive anti-drift property: an all-default SimConfig and an
+    all-default ServingSystem hold equal group instances — the single
+    shared definition, not two copies that happen to agree today."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, block_tokens=16,
+                         max_seq=64, de_slots=2, seed=0)
+    sim_cfg = _sim_cfg()
+    serving_groups = dict(tier=sys_.tier_cfg, net=sys_.net_cfg,
+                          elastic=sys_.elastic_cfg,
+                          resilience=sys_.resilience_cfg, slo=sys_.slo_cfg)
+    for name in GROUP_FIELDS:
+        assert getattr(sim_cfg, name) == serving_groups[name] \
+            == group_defaults(name), name
+
+
+def test_parity_exclusions_are_documented_and_not_stale():
+    """Every exclusion names a real field (a flat-shim field or the one
+    per-runtime core field) and carries a non-empty reason."""
+    known = set(FLAT_FIELDS) | {"block_tokens"}
+    for name, reason in PARITY_EXCLUSIONS.items():
+        assert name in known, f"stale exclusion {name!r}"
+        assert reason.strip(), f"undocumented exclusion {name!r}"
+
+
+def test_resolved_drift_defaults():
+    """The documented winners of the historical default drift."""
+    assert ElasticConfig().reconfig_interval_s == 5.0
+    assert TierConfig().tier_ttl_s is None
+    # block_tokens stays per-runtime — the one excluded core field
+    assert _sim_cfg().block_tokens == 64
+    assert "block_tokens" in PARITY_EXCLUSIONS
+
+
+# ---------------------------------------------------------------------------
+# the deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_flat_kwargs_fold_into_groups_with_warning():
+    with pytest.warns(ConfigDeprecationWarning):
+        cfg = _sim_cfg(dram_tier_bytes=1e9, prefetch=True,
+                       reconfig_interval_s=7.5, hedge_reads=True)
+    assert cfg.tier == TierConfig(dram_tier_bytes=1e9, prefetch=True)
+    assert cfg.elastic == ElasticConfig(reconfig_interval_s=7.5)
+    assert cfg.resilience == ResilienceConfig(hedge_reads=True)
+    # flat reads still work (delegating properties)
+    assert cfg.dram_tier_bytes == 1e9 and cfg.reconfig_interval_s == 7.5
+
+
+def test_legacy_elastic_bool_routes_to_enabled():
+    with pytest.warns(ConfigDeprecationWarning):
+        cfg = _sim_cfg(elastic=True)
+    assert isinstance(cfg.elastic, ElasticConfig) and cfg.elastic.enabled
+    assert bool(cfg.elastic)
+    assert not bool(_sim_cfg().elastic)
+
+
+def test_explicit_groups_are_never_mutated_by_flat_overrides():
+    tier = TierConfig(dram_tier_bytes=5.0)
+    with pytest.warns(ConfigDeprecationWarning):
+        g = resolve_groups({"prefetch": True}, tier=tier)
+    assert g["tier"].prefetch and g["tier"].dram_tier_bytes == 5.0
+    assert not tier.prefetch            # caller's instance untouched
+
+
+def test_unknown_kwargs_raise_type_error():
+    with pytest.raises(TypeError, match="bogus_knob"):
+        _sim_cfg(bogus_knob=1)
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    with pytest.raises(TypeError, match="bogus_knob"):
+        ServingSystem(cfg, params, n_pe=1, n_de=1, block_tokens=16,
+                      max_seq=64, de_slots=2, bogus_knob=1)
+
+
+def test_grouped_and_flat_serving_systems_are_bit_identical():
+    """The shim round-trip: the old flat spelling must construct a
+    system whose generation (and stats) are bit-identical to the
+    grouped spelling — deprecation changes the API, not the events."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+
+    def run(**kw):
+        s = ServingSystem(cfg, params, n_pe=1, n_de=1, block_tokens=16,
+                          max_seq=96, de_slots=2, seed=0,
+                          node=REDUCED_TEST_NODE, **kw)
+        sessions = s.run_offline([Trajectory(0, [Round(20, 4, 0.1),
+                                                 Round(12, 4)])])
+        return sessions[0].context, s.stats()
+
+    grouped_ctx, grouped_stats = run(
+        tier=TierConfig(dram_tier_bytes=1 << 30, prefetch=True))
+    with pytest.warns(ConfigDeprecationWarning):
+        flat_ctx, flat_stats = run(dram_tier_bytes=1 << 30, prefetch=True)
+    assert flat_ctx == grouped_ctx
+    assert flat_stats == grouped_stats
+
+
+def test_sim_flat_and_grouped_runs_match():
+    from repro.sim import DS_660B, Sim, generate_dataset
+
+    trajs = generate_dataset(8, 8192, seed=3)
+    base = dict(node=HOPPER_NODE, model=DS_660B, P=1, D=2, seed=0)
+    grouped = Sim(SimConfig(tier=TierConfig(dram_tier_bytes=1e9), **base),
+                  trajs).run()
+    with pytest.warns(ConfigDeprecationWarning):
+        flat_cfg = SimConfig(dram_tier_bytes=1e9, **base)
+    flat = Sim(flat_cfg, trajs).run()
+    assert flat.results() == grouped.results()
+
+
+# ---------------------------------------------------------------------------
+# tier clock regression (the offline op-counter bug)
+# ---------------------------------------------------------------------------
+
+
+def test_offline_tier_timestamps_use_modelled_clock():
+    """Offline serving used to let DramTier fall back to its internal
+    per-operation counter (``now=None``), so an agentic ``tier_ttl_s``
+    meant *operations* offline but *seconds* online.  Every tier call
+    must now pass the modelled wall clock: the fallback counter stays
+    untouched across a full tiered offline run."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, KEY)
+    sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, block_tokens=16,
+                         max_seq=96, de_slots=2, seed=0,
+                         node=REDUCED_TEST_NODE,
+                         tier=TierConfig(dram_tier_bytes=1 << 30,
+                                         tier_policy="agentic-ttl",
+                                         tier_ttl_s=60.0))
+    sys_.run_offline([Trajectory(0, [Round(20, 4, 0.1), Round(12, 4)])])
+    assert sys_.clock.now > 0.0         # the modelled clock did advance
+    for tier in sys_.tiers.values():
+        # itertools.count() only advances via the now=None fallback —
+        # first observation being 0 proves no tier call ever took it
+        assert next(tier._tick) == 0
+    assert sys_._tier_now() == sys_.clock.now
+
+
+def test_group_dataclasses_are_plain_and_replaceable():
+    """The groups must stay dataclasses.replace-able (the shim relies
+    on it) and hashable-field-only on the comparison path."""
+    for name in GROUP_FIELDS:
+        g = group_defaults(name)
+        assert dataclasses.replace(g) == g
+
+
+def test_slo_defaults_keep_the_layer_structurally_off():
+    s = SloConfig()
+    assert not s.admission and s.prefill_chunk_tokens is None \
+        and not s.class_aware
+    assert NetworkConfig().net_bw is None

@@ -28,6 +28,7 @@ from dataclasses import replace
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.config import ElasticConfig, ResilienceConfig
 from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
 from repro.sim.faults import (EngineDeath, FaultSchedule, SlowdownWindow,
                               StragglerModel)
@@ -140,8 +141,11 @@ def _sim_run(faults=None, hedge=False, elastic=False):
     cfg = SimConfig(node=_NODE, model=DS_660B, P=2, D=2, mode="dualpath",
                     nodes_per_pe_group=1, nodes_per_de_group=1,
                     split_reads=True, kv_hbm_frac=0.04,
-                    faults=faults, hedge_reads=hedge, elastic=elastic,
-                    reconfig_interval_s=4.0, reconfig_patience=2)
+                    resilience=ResilienceConfig(faults=faults,
+                                                hedge_reads=hedge),
+                    elastic=ElasticConfig(enabled=elastic,
+                                          reconfig_interval_s=4.0,
+                                          reconfig_patience=2))
     trajs = [Trajectory(i, [Round(8192, 16), Round(2048, 32)])
              for i in range(_N_AGENTS)]
     return Sim(cfg, trajs).run()
@@ -266,11 +270,13 @@ def cfg_params():
     return cfg, init_params(cfg, jax.random.PRNGKey(0))
 
 
-def _serve(cfg_params, **kw):
+def _serve(cfg_params, faults=None, hedge_reads=False):
     cfg, params = cfg_params
     sys_ = ServingSystem(cfg, params, n_pe=2, n_de=2, block_tokens=16,
                          max_seq=160, de_slots=2, seed=0, pipelined=True,
-                         split_reads=True, node=REDUCED_TEST_NODE, **kw)
+                         split_reads=True, node=REDUCED_TEST_NODE,
+                         resilience=ResilienceConfig(
+                             faults=faults, hedge_reads=hedge_reads))
     trajs = [Trajectory(i, [Round(24, 4), Round(16, 4), Round(8, 4)])
              for i in range(4)]
     sessions = sys_.run_online(trajs, [0.0, 0.1, 0.2, 0.3])

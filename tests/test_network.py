@@ -254,9 +254,12 @@ def _run_sim(arbiter, load, n_agents=8, **kw):
     from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig, \
         generate_dataset
     trajs = generate_dataset(n_agents, 32768, seed=0)
+    from repro.core.config import NetworkConfig
     cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
-                    mode="dualpath", net_bw=25e9, net_arbiter=arbiter,
-                    collective_bytes_per_token=0.4e6, net_bg_load=load,
+                    mode="dualpath",
+                    net=NetworkConfig(net_bw=25e9, net_arbiter=arbiter,
+                                      collective_bytes_per_token=0.4e6,
+                                      net_bg_load=load),
                     **kw)
     return Sim(cfg, trajs).run()
 
@@ -283,8 +286,10 @@ def test_collectives_on_infinite_link_terminate():
     from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
     from repro.sim.traces import Round, Trajectory
     trajs = [Trajectory(0, [Round(256, 8)])]
+    from repro.core.config import NetworkConfig
     cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
-                    mode="dualpath", model_collectives=True)
+                    mode="dualpath",
+                    net=NetworkConfig(model_collectives=True))
     r = Sim(cfg, trajs).run().results()
     assert r["finished_agents"] == 1
     assert r["collective_stall_s"] == 0.0

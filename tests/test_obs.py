@@ -28,6 +28,7 @@ from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
                        TraceAuditError, Tracer, attribute_ttft,
                        audit_sim, bottleneck_report, conforming, orphans,
                        registered_keys)
+from repro.core.config import ResilienceConfig
 from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
 from repro.sim.faults import EngineDeath, FaultSchedule, SlowdownWindow
 from repro.sim.traces import Round, Trajectory
@@ -39,7 +40,8 @@ def _trajs(n=6, rounds=((2048, 16), (256, 16), (256, 16))):
 
 def _sim(tracer=None, faults=None, **kw):
     cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
-                    mode="dualpath", faults=faults, **kw)
+                    mode="dualpath",
+                    resilience=ResilienceConfig(faults=faults), **kw)
     return Sim(cfg, _trajs(), tracer=tracer).run()
 
 

@@ -645,9 +645,10 @@ def test_rr_tiered_sim_serves_dram_hits():
     trajs = generate_dataset(6, 32768, seed=0, think_mean_s=1.0)
     res = {}
     for scheduler in ("adaptive", "rr"):
+        from repro.core.config import TierConfig
         cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
                         mode="dualpath", scheduler=scheduler,
-                        dram_tier_bytes=2e9)
+                        tier=TierConfig(dram_tier_bytes=2e9))
         r = Sim(cfg, trajs).run().results()
         assert r["finished_agents"] == 6, scheduler
         res[scheduler] = r

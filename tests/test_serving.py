@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.config import TierConfig
 from repro.models import decode_step, forward, init_decode_state, init_params
 from repro.serving import ServingSystem
 from repro.sim.traces import Round, Trajectory
@@ -56,10 +57,11 @@ def test_generation_with_cache_reuse_matches_reference(mode):
     traj = Trajectory(0, rounds)
     tier_kw = {}
     if mode == "tiered":
-        tier_kw = dict(dram_tier_bytes=1 << 30, prefetch=True)
+        tier_kw = dict(tier=TierConfig(dram_tier_bytes=1 << 30,
+                                       prefetch=True))
     elif mode == "tiered-small":
-        tier_kw = dict(dram_tier_bytes=32768, prefetch=True,
-                       tier_policy="agentic-ttl")
+        tier_kw = dict(tier=TierConfig(dram_tier_bytes=32768, prefetch=True,
+                                       tier_policy="agentic-ttl"))
     sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1,
                          mode="basic" if mode == "basic" else "dualpath",
                          split_reads=(mode == "split"),
@@ -150,7 +152,8 @@ def test_tiered_serving_serves_hits_from_dram_and_conserves():
              for i in range(3)]
     sys_ = ServingSystem(cfg, params, n_pe=1, n_de=1, mode="dualpath",
                          block_tokens=16, max_seq=160, de_slots=4, seed=0,
-                         dram_tier_bytes=1 << 30, prefetch=True)
+                         tier=TierConfig(dram_tier_bytes=1 << 30,
+                                         prefetch=True))
     sys_.run_offline(trajs)
     st = sys_.stats()
     assert st["dram_hit_bytes"] > 0, "tier never served a hit"

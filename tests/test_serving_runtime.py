@@ -15,6 +15,7 @@ import jax
 import pytest
 
 from repro.configs import get_config
+from repro.core.config import TierConfig
 from repro.models import init_params
 from repro.serving import ServingSystem
 from repro.sim.spec import REDUCED_TEST_NODE as SLOW_NODE
@@ -54,7 +55,8 @@ BYTE_KEYS = ("read_bytes_pe_side", "read_bytes_de_side",
     # mixed tier/split: a tier of a few blocks (constant eviction churn)
     # with split reads, so DRAM-served prefixes, split SNIC reads and
     # admission pressure all happen at once
-    dict(split_reads=True, dram_tier_bytes=32768, prefetch=True),
+    dict(split_reads=True,
+         tier=TierConfig(dram_tier_bytes=32768, prefetch=True)),
     # pure split, no tier: every hit byte water-fills across both SNICs
     dict(split_reads=True),
 ], ids=["tier+split", "split"])
@@ -77,7 +79,7 @@ def test_pipelined_equals_blocking_tokens_and_bytes(cfg_params, tier_kw):
     for st in (st_b, st_p):
         assert st["dram_hit_bytes"] == (st["dram_bytes_pe_side"] +
                                         st["dram_bytes_de_side"])
-        if tier_kw.get("dram_tier_bytes"):
+        if tier_kw.get("tier") is not None:
             assert st["tier_miss_bytes"] == (st["read_bytes_pe_side"] +
                                              st["read_bytes_de_side"])
     if tier_kw == dict(split_reads=True):
@@ -169,8 +171,11 @@ def test_online_tier_ttl_uses_wall_seconds(cfg_params):
     sys_, sessions = _run(cfg, params, trajs, pipelined=True,
                           arrivals=[0.0, 0.1, 0.2],
                           n_pe=1, n_de=1, block_tokens=16, max_seq=160,
-                          de_slots=4, dram_tier_bytes=32768, prefetch=True,
-                          tier_policy="agentic-ttl", tier_ttl_s=0.05,
+                          de_slots=4,
+                          tier=TierConfig(dram_tier_bytes=32768,
+                                          prefetch=True,
+                                          tier_policy="agentic-ttl",
+                                          tier_ttl_s=0.05),
                           node=SLOW_NODE)
     assert all(s.done() for s in sessions)
     st = sys_.stats()

@@ -1,6 +1,7 @@
 """Discrete-event simulator: paper-claim directionality + invariants."""
 import numpy as np
 
+from repro.core.config import TierConfig
 from repro.sim import (DS_660B, HOPPER_NODE, Sim, SimConfig,
                        generate_dataset)
 
@@ -148,7 +149,7 @@ def test_sim_charges_match_loading_plans_to_the_byte():
                         (True, 2e9)):
         cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
                         mode="dualpath", split_reads=split,
-                        dram_tier_bytes=tier)
+                        tier=TierConfig(dram_tier_bytes=tier))
         sim = Sim(cfg, trajs).run()
         checked = tiered = 0
         for rs in sim.rounds:
@@ -181,7 +182,8 @@ def test_tiered_sim_conserves_bytes_and_saves_snic_reads():
     for label, tier, pf in (("off", 0.0, False), ("lru", 1.5e9, False),
                             ("lru+pf", 1.5e9, True)):
         cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
-                        mode="dualpath", dram_tier_bytes=tier, prefetch=pf)
+                        mode="dualpath",
+                        tier=TierConfig(dram_tier_bytes=tier, prefetch=pf))
         sim = Sim(cfg, trajs).run()
         r = sim.results()
         assert r["finished_agents"] == 16, (label, r)
@@ -211,8 +213,9 @@ def test_tiered_sim_pins_never_exceed_capacity_and_policies_run():
     for policy in ("lru", "agentic-ttl"):
         trajs = generate_dataset(8, 32768, seed=3, think_mean_s=1.0)
         cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
-                        mode="dualpath", dram_tier_bytes=1e9,
-                        tier_policy=policy, prefetch=True)
+                        mode="dualpath",
+                        tier=TierConfig(dram_tier_bytes=1e9,
+                                        tier_policy=policy, prefetch=True))
         sim = Sim(cfg, trajs).run()
         assert sim.results()["finished_agents"] == 8
         for tier in sim.tiers.values():

@@ -1,0 +1,272 @@
+"""The online SLO layer (PR 10): admission control, chunked prefill,
+and SLO-class scheduling — unit contracts plus the conservation and
+bit-identity properties that let every knob default to "structurally
+off".
+
+* ``AdmissionGate``: the queueing-network TTFT estimate, the
+  admit/defer/reject escalation, and the per-arrival defer counter.
+* Chunked prefill: slicing changes *when* tokens are computed, never
+  *how many* — token totals and finished counts are conservation-exact
+  against the unchunked run in the sim, and the serving runtime's
+  generation is bit-identical offline (chunking only reorders compute
+  inside one engine's deterministic fifo).
+* Class-aware scheduling: priority ordering in the global queues, the
+  PE prefill fifo, and the storage-NIC queue; the interactive share
+  reported to the elastic controller double-counts into the pressure.
+"""
+import numpy as np
+import pytest
+
+from repro.core.admission import ADMIT, DEFER, REJECT, AdmissionGate
+from repro.core.autoscale import LoadSignals
+from repro.core.config import SloConfig, TierConfig
+from repro.core.intra import PrefillWork, class_insert_index
+from repro.core.scheduler import Request, Scheduler
+from repro.sim import DS_660B, HOPPER_NODE, Sim, SimConfig
+from repro.sim.spec import ModelSimSpec
+from repro.sim.traces import Round, Trajectory, generate_dataset
+
+SLO_TTFT = 0.5
+SLO_TPOT = 0.050
+
+
+def _mixed_workload(n):
+    """Half interactive / half batch, batch heavy enough to contend."""
+    inter = generate_dataset(n // 2, 6000, seed=1)
+    batch = generate_dataset(n - n // 2, 16384, seed=2)
+    trajs = []
+    for t in inter:
+        t = t.scaled(append_scale=0.5, gen_scale=0.4)
+        t.slo_class = "interactive"
+        trajs.append(t)
+    for t in batch:
+        t = t.scaled(append_scale=2.0, gen_scale=0.5)
+        t.slo_class = "batch"
+        trajs.append(t)
+    for i, t in enumerate(trajs):
+        t.tid = i
+    return trajs
+
+
+def _run_online(slo, n=96, aps=4.0):
+    trajs = _mixed_workload(n)
+    rng = np.random.default_rng(0)
+    arr = list(np.cumsum(rng.exponential(1 / aps, size=len(trajs))))
+    kw = {} if slo is None else dict(slo=slo)
+    cfg = SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=2,
+                    mode="dualpath", online=True, beta_compute_s=1.0, **kw)
+    sim = Sim(cfg, trajs)
+    sim.run(arrivals=arr)
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# admission gate
+# ---------------------------------------------------------------------------
+
+
+def test_admission_estimate_is_backlog_over_servers_plus_own_service():
+    gate = AdmissionGate(SloConfig(admission=True))
+    sig = LoadSignals(n_pe=2, n_de=1, pe_queued_s=3.0, pe_busy_s=1.0,
+                      de_queued_s=0.0, de_busy_s=0.0, pe_read_q_s=2.0)
+    assert gate.ttft_estimate(sig, read_s=0.5, prefill_s=0.25) == \
+        pytest.approx((3.0 + 1.0 + 2.0) / 2 + 0.5 + 0.25)
+
+
+def test_admission_escalates_defer_to_reject():
+    slo = SloConfig(admission=True, admission_ttft_slo_s=1.0,
+                    admission_max_defers=3)
+    gate = AdmissionGate(slo)
+    key = (7, 0)
+    assert gate.decide(key, 0.8) == ADMIT
+    for _ in range(3):
+        assert gate.decide(key, 2.0) == DEFER
+    assert gate.decide(key, 2.0) == REJECT
+    # the counter resets with the rejection: a fresh round starts over
+    assert gate.decide(key, 2.0) == DEFER
+    assert (gate.admitted_rounds, gate.deferred_rounds,
+            gate.rejected_rounds) == (1, 4, 1)
+
+
+def test_admission_clears_counter_on_admit():
+    slo = SloConfig(admission=True, admission_ttft_slo_s=1.0,
+                    admission_max_defers=2)
+    gate = AdmissionGate(slo)
+    assert gate.decide("k", 5.0) == DEFER
+    assert gate.decide("k", 0.5) == ADMIT
+    # post-admit the escalation starts from zero again
+    assert gate.decide("k", 5.0) == DEFER
+    assert gate.decide("k", 5.0) == DEFER
+    assert gate.decide("k", 5.0) == REJECT
+
+
+def test_sim_admission_sheds_load_and_lifts_attainment():
+    base = _run_online(None)
+    gated = _run_online(SloConfig(admission=True,
+                                  admission_ttft_slo_s=SLO_TTFT,
+                                  admission_defer_s=0.25,
+                                  admission_max_defers=12))
+    rb, rg = base.results(), gated.results()
+    assert rb["deferred_rounds"] == rb["rejected_rounds"] == 0
+    assert rg["deferred_rounds"] > 0 and rg["rejected_rounds"] > 0
+    # shedding trades finished rounds for SLO attainment
+    assert rg["finished_rounds"] < rb["finished_rounds"]
+    assert gated.slo_attainment(SLO_TTFT, SLO_TPOT) > \
+        base.slo_attainment(SLO_TTFT, SLO_TPOT)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def test_sim_chunked_prefill_is_conservation_exact():
+    def run(**kw):
+        trajs = generate_dataset(6, 8192, seed=4)
+        return Sim(SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
+                             mode="dualpath", **kw), trajs).run()
+
+    plain = run()
+    chunked = run(slo=SloConfig(prefill_chunk_tokens=512))
+    rp, rc = plain.results(), chunked.results()
+    assert rp["prefill_chunks"] == 0
+    assert rc["prefill_chunks"] > 0
+    # slicing moves prefill compute in time, never in amount
+    for key in ("finished_agents", "finished_rounds", "prompt_tokens"):
+        assert rc[key] == rp[key], key
+    # every round still decodes its full requested generation (decode
+    # block rounding may overshoot, in both runs alike — gen_left<=0)
+    for sim in (plain, chunked):
+        assert all(r.gen_left <= 0 for r in sim.rounds)
+    assert sum(r.gen_total for r in chunked.rounds) == \
+        sum(r.gen_total for r in plain.rounds)
+
+
+def test_serving_chunked_prefill_is_bit_identical_and_enters_substate():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import ServingSystem
+    from repro.serving.events import ReqState
+    from repro.sim.spec import REDUCED_TEST_NODE
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    traj = [Trajectory(0, [Round(40, 4, 0.0)])]
+
+    def run(slo, record=None):
+        s = ServingSystem(cfg, params, n_pe=1, n_de=1, block_tokens=16,
+                          max_seq=96, de_slots=2, seed=0,
+                          node=REDUCED_TEST_NODE,
+                          **({} if slo is None else dict(slo=slo)))
+        if record is not None:
+            orig = s._set_state
+            s._set_state = lambda er, st: (record.append(st), orig(er, st))
+        out = s.run_offline([Trajectory(t.tid, list(t.rounds))
+                             for t in traj])
+        return out[0].context, s.stats()
+
+    plain_ctx, plain_stats = run(None)
+    states = []
+    chunk_ctx, chunk_stats = run(SloConfig(prefill_chunk_tokens=16), states)
+    assert chunk_ctx == plain_ctx          # generation is untouched
+    assert plain_stats["prefill_chunks"] == 0
+    assert chunk_stats["prefill_chunks"] > 0
+    assert ReqState.PREFILL_CHUNKED in states
+
+
+# ---------------------------------------------------------------------------
+# class-aware scheduling
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, slo_class, arrival):
+    return Request(rid=rid, cached_tokens=0, new_tokens=8, gen_tokens=4,
+                   arrival=arrival, slo_class=slo_class)
+
+
+def test_scheduler_global_queue_orders_by_class_then_arrival():
+    fifo = Scheduler(alpha=1, beta=1)
+    aware = Scheduler(alpha=1, beta=1, class_aware=True)
+    reqs = [_req(0, "batch", 0.0), _req(1, "batch", 1.0),
+            _req(2, "interactive", 2.0), _req(3, "interactive", 0.5)]
+    for s in (fifo, aware):
+        for r in reqs:
+            s.submit(r)
+    assert [r.rid for r in fifo.pe_queue] == [0, 1, 2, 3]
+    assert [r.rid for r in aware.pe_queue] == [3, 2, 0, 1]
+    assert [r.rid for r in aware.de_global_queue] == [3, 2, 0, 1]
+
+
+def test_class_insert_index_is_stable_and_rank_ordered():
+    keys = [(0, 1.0, 1), (1, 0.0, 2), (1, 2.0, 3)]
+    # equal-priority appends at the end of its rank band (stability)
+    assert class_insert_index(keys, (1, 2.0, 4)) == 3
+    assert class_insert_index(keys, (0, 5.0, 5)) == 1
+    assert class_insert_index(keys, (0, 0.5, 6)) == 0
+    assert class_insert_index([], (1, 0.0, 0)) == 0
+    w = PrefillWork(9, 0, 8, rank=1, arrival=3.0)
+    assert w.key() == (1, 3.0, 9)
+
+
+def test_snic_queue_serves_interactive_reads_first():
+    spec = ModelSimSpec(name="toy", n_layers=2, kv_bytes_per_token=1024,
+                        active_param_bytes=1e6, active_params=5e5,
+                        n_heads=4, qk_head_dim=32)
+    sim = Sim(SimConfig(node=HOPPER_NODE, model=spec, P=1, D=1),
+              [Trajectory(0, [Round(8, 4)])])
+    nic = sim.snic[0]
+    nic.enqueue(1e6, lambda: None)             # occupies the server
+    nic.enqueue(1e6, lambda: None, rank=1)
+    nic.enqueue(1e6, lambda: None, rank=1)
+    nic.enqueue(1e6, lambda: None, rank=0)     # interactive demand read
+    assert [j.rank for j in nic.queue] == [0, 1, 1]
+    # neutral-rank traffic stays pure FIFO (the bit-identity default)
+    nic.enqueue(1e6, lambda: None, rank=1)
+    assert [j.rank for j in nic.queue] == [0, 1, 1, 1]
+
+
+def test_sim_class_aware_protects_interactive_ttft_under_chunking():
+    """Priority alone cannot preempt an in-flight forward batch; with
+    chunking providing the preemption points, class-aware scheduling
+    must pull interactive TTFT p99 well below the batch class."""
+    chunk = _run_online(SloConfig(prefill_chunk_tokens=512))
+    both = _run_online(SloConfig(prefill_chunk_tokens=512,
+                                 class_aware=True))
+    lat_c = chunk.results()["latency_by_class"]
+    lat_b = both.results()["latency_by_class"]
+    assert lat_b["interactive"]["ttft_p99"] < \
+        lat_c["interactive"]["ttft_p99"]
+    assert lat_b["interactive"]["ttft_p99"] < lat_b["batch"]["ttft_p99"]
+
+
+def test_load_signals_double_count_interactive_backlog():
+    sig = LoadSignals(n_pe=2, n_de=2, pe_queued_s=4.0, pe_busy_s=1.0,
+                      de_queued_s=2.0, de_busy_s=1.0,
+                      pe_queued_interactive_s=3.0,
+                      de_queued_interactive_s=1.0)
+    assert sig.pe_pressure == pytest.approx((4.0 + 1.0 + 3.0) / 2)
+    assert sig.de_pressure == pytest.approx((2.0 + 1.0 + 1.0) / 2)
+    # class-aware off: the fields default to 0 and the legacy
+    # expressions come back exactly
+    off = LoadSignals(n_pe=2, n_de=2, pe_queued_s=4.0, pe_busy_s=1.0,
+                      de_queued_s=2.0, de_busy_s=1.0)
+    assert off.pe_pressure == pytest.approx(2.5)
+
+
+def test_sim_reports_class_signals_only_when_aware():
+    def build(slo):
+        kw = {} if slo is None else dict(slo=slo)
+        sim = Sim(SimConfig(node=HOPPER_NODE, model=DS_660B, P=1, D=1,
+                            mode="dualpath", **kw),
+                  [Trajectory(0, [Round(8, 4)])])
+        sim.sched.submit(_req(0, "interactive", 0.0))
+        sim.sched.submit(_req(1, "batch", 0.1))
+        return sim._elastic_signals()
+
+    aware = build(SloConfig(class_aware=True))
+    assert 0.0 < aware.pe_queued_interactive_s <= aware.pe_queued_s
+    off = build(None)
+    assert off.pe_queued_interactive_s == 0.0
+    assert off.de_queued_interactive_s == 0.0
+    assert off.pe_queued_s == aware.pe_queued_s

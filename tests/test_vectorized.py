@@ -26,6 +26,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.config import (ElasticConfig, NetworkConfig,
+                               ResilienceConfig, TierConfig)
 from repro.core.loading import (hedge_water_fill, hedge_water_fill_batch,
                                 plan_for, resource_bytes,
                                 resource_bytes_batch)
@@ -84,17 +86,22 @@ FAULTS = FaultSchedule(
     dict(mode="basic"),
     dict(mode="oracle"),
     dict(split_reads=True),
-    dict(dram_tier_bytes=64e9, prefetch=True),
-    dict(dram_tier_bytes=64e9, tier_policy="agentic-ttl", tier_ttl_s=30.0),
-    dict(net_bw=400e9, net_bg_load=0.4),       # VL arbiter + collectives
-    dict(net_bw=400e9, net_arbiter="fifo", net_bg_load=0.4),
-    dict(faults=FAULTS),
-    dict(faults=FAULTS, net_bw=300e9, net_bg_load=0.3),
+    dict(tier=TierConfig(dram_tier_bytes=64e9, prefetch=True)),
+    dict(tier=TierConfig(dram_tier_bytes=64e9, tier_policy="agentic-ttl",
+                         tier_ttl_s=30.0)),
+    dict(net=NetworkConfig(net_bw=400e9, net_bg_load=0.4)),  # VL + coll
+    dict(net=NetworkConfig(net_bw=400e9, net_arbiter="fifo",
+                           net_bg_load=0.4)),
+    dict(resilience=ResilienceConfig(faults=FAULTS)),
+    dict(resilience=ResilienceConfig(faults=FAULTS),
+         net=NetworkConfig(net_bw=300e9, net_bg_load=0.3)),
     dict(online=True),
     dict(layerwise=False),
     dict(scheduler="rr"),
-    dict(P=2, D=4, split_reads=True, dram_tier_bytes=32e9, net_bw=300e9,
-         net_bg_load=0.3, nodes_per_pe_group=1, nodes_per_de_group=1),
+    dict(P=2, D=4, split_reads=True,
+         tier=TierConfig(dram_tier_bytes=32e9),
+         net=NetworkConfig(net_bw=300e9, net_bg_load=0.3),
+         nodes_per_pe_group=1, nodes_per_de_group=1),
 ], ids=lambda kw: ",".join(sorted(kw)) or "dualpath")
 def test_engine_equivalence_matrix(kw):
     """Every supported feature axis: results() key-for-key."""
@@ -117,12 +124,12 @@ def test_engine_equivalence_randomized(data):
     if data.draw(st.booleans(), label="split"):
         kw["split_reads"] = True
     if data.draw(st.booleans(), label="tier"):
-        kw["dram_tier_bytes"] = 32e9
+        kw["tier"] = TierConfig(dram_tier_bytes=32e9)
     if data.draw(st.booleans(), label="net"):
-        kw["net_bw"] = data.draw(st.sampled_from([200e9, 400e9]),
-                                 label="net_bw")
-        kw["net_bg_load"] = data.draw(st.sampled_from([0.0, 0.5]),
-                                      label="bg")
+        kw["net"] = NetworkConfig(
+            net_bw=data.draw(st.sampled_from([200e9, 400e9]),
+                             label="net_bw"),
+            net_bg_load=data.draw(st.sampled_from([0.0, 0.5]), label="bg"))
     if data.draw(st.booleans(), label="online"):
         kw["online"] = True
     trajs = generate_dataset(n_agents, max_len, seed=seed)
@@ -132,8 +139,9 @@ def test_engine_equivalence_randomized(data):
 def test_zero_fault_schedule_is_bit_identical():
     """Empty schedule == faults=None == event engine, all exactly."""
     trajs = generate_dataset(4, 8192, seed=5)
-    cfg_none = _cfg(net_bw=300e9)
-    cfg_empty = _cfg(net_bw=300e9, faults=FaultSchedule())
+    cfg_none = _cfg(net=NetworkConfig(net_bw=300e9))
+    cfg_empty = _cfg(net=NetworkConfig(net_bw=300e9),
+                     resilience=ResilienceConfig(faults=FaultSchedule()))
     r_none, r_vec = _assert_equivalent(cfg_none, trajs, exact_times=True)
     _, r_vec_empty = _assert_equivalent(cfg_empty, trajs, exact_times=True)
     assert r_vec == r_vec_empty
@@ -141,7 +149,8 @@ def test_zero_fault_schedule_is_bit_identical():
 
 def test_vectorized_engine_is_deterministic():
     trajs = generate_dataset(4, 8192, seed=9)
-    cfg = _cfg(split_reads=True, net_bw=300e9, net_bg_load=0.4)
+    cfg = _cfg(split_reads=True,
+               net=NetworkConfig(net_bw=300e9, net_bg_load=0.4))
     r1 = VectorSim(cfg, trajs).run().results()
     r2 = VectorSim(cfg, trajs).run().results()
     assert r1 == r2
@@ -151,7 +160,7 @@ def test_equivalence_with_staggered_arrivals_and_horizon():
     """until= cutoff + arrivals: the fleet benchmark's exact shape."""
     trajs = generate_dataset(6, 8192, seed=11)
     arrivals = [0.3 * i for i in range(6)]
-    cfg = _cfg(net_bw=200e9, net_bg_load=0.6)
+    cfg = _cfg(net=NetworkConfig(net_bw=200e9, net_bg_load=0.6))
     s0 = Sim(cfg, trajs).run(arrivals=list(arrivals), until=20.0)
     s1 = VectorSim(cfg, trajs).run(arrivals=list(arrivals), until=20.0)
     assert s0.results() == s1.results()
@@ -166,7 +175,7 @@ def test_pooled_charges_match_loading_plans_to_the_byte():
     pool: per-round charged bytes == core/loading plan sums."""
     trajs = generate_dataset(5, 16384, seed=2)
     for split, tier in ((False, 0.0), (True, 0.0), (True, 2e9)):
-        cfg = _cfg(split_reads=split, dram_tier_bytes=tier)
+        cfg = _cfg(split_reads=split, tier=TierConfig(dram_tier_bytes=tier))
         sim = VectorSim(cfg, trajs).run()
         checked = 0
         for rs in sim.rounds:
@@ -277,13 +286,14 @@ def test_water_fill_frac_batch_matches_scalar(data):
 def test_unsupported_configs_refuse_loudly():
     trajs = generate_dataset(2, 2048, seed=0)
     deaths = FaultSchedule(deaths=[EngineDeath(5.0, (0, 0))])
-    for kw in (dict(elastic=True),
-               dict(hedge_reads=True),
-               dict(faults=deaths)):
+    for kw in (dict(elastic=ElasticConfig(enabled=True)),
+               dict(resilience=ResilienceConfig(hedge_reads=True)),
+               dict(resilience=ResilienceConfig(faults=deaths))):
         with pytest.raises(VectorSimUnsupported):
             VectorSim(_cfg(**kw), trajs)
     # an *empty* death list is supported (structurally invisible)
-    VectorSim(_cfg(faults=FaultSchedule()), trajs)
+    VectorSim(_cfg(resilience=ResilienceConfig(faults=FaultSchedule())),
+              trajs)
 
 
 def test_pool_flow_cancel_refuses():
